@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: platform, combos, grids, CSV output."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from dataclasses import dataclass
+
+from repro.core.perfmodel.hardware import paper_platform
+from repro.core.workloads import PAPER_COMBOS, PAPER_WORKLOADS, make_taskset
+
+#: 16-chip slice, max_M=4 — the VCK5000-regime platform (DESIGN.md §2)
+PLATFORM = paper_platform(16)
+MAX_M = 4
+BEAM = 8
+
+RESULTS_DIR = os.path.join("experiments", "benchmarks")
+
+
+def period_grid(n: int, lo: float = 0.3, hi: float = 1.8):
+    """(P'/P1, P'/P2) ratio grid; larger ratio = heavier (paper Figs 1/6/7)."""
+    step = (hi - lo) / (n - 1) if n > 1 else 0.0
+    vals = [lo + i * step for i in range(n)]
+    return [(a, b) for a in vals for b in vals]
+
+
+def combo_workloads(combo):
+    return [PAPER_WORKLOADS[c] for c in combo]
+
+
+def taskset_for(combo, ratios):
+    return make_taskset(combo, ratios, PLATFORM)
+
+
+def write_csv(name: str, header: list[str], rows: list[list]):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,71 @@
+"""Render the §Dry-run and §Roofline markdown tables from the records."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.dryrun import ARCH_MODULES, load_config
+from repro.launch.roofline import roofline
+from repro.launch.shapes import SHAPES
+
+
+def records(mesh):
+    out = []
+    for p in sorted(glob.glob(f"experiments/dryrun/*__{mesh}.json")):
+        if "kvint8" in p:
+            continue
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def dryrun_table(mesh):
+    lines = [
+        "| arch | shape | status | compile s | coll bytes/dev | args+temp GB/dev |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in records(mesh):
+        if r["status"] != "OK":
+            reason = "sub-quadratic-only shape" if r["status"] == "SKIP" else r.get("error", "")[:40]
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} | — | — | {reason} |")
+            continue
+        gb = (r["memory"]["argument_size_bytes"] + r["memory"]["temp_size_bytes"]) / 1e9
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | OK | {r['compile_s']} | "
+            f"{r['collective_bytes']['total']:.2e} | {gb:.1f} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(mesh):
+    arch_by_name = {load_config(m).name: load_config(m) for m in ARCH_MODULES}
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records(mesh):
+        if r["status"] != "OK":
+            continue
+        rt = roofline(
+            arch_by_name[r["arch"]],
+            SHAPES[r["shape"]],
+            r["chips"],
+            r["collective_bytes"]["total"],
+        )
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rt.compute_s:.3f} | "
+            f"{rt.memory_s:.3f} | {rt.collective_s:.3f} | {rt.dominant} | "
+            f"{rt.useful_ratio:.2f} | {rt.roofline_fraction:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    os.makedirs("experiments/rendered", exist_ok=True)
+    for mesh in ("16x16", "2x16x16"):
+        with open(f"experiments/rendered/dryrun_{mesh}.md", "w") as f:
+            f.write(dryrun_table(mesh) + "\n")
+        with open(f"experiments/rendered/roofline_{mesh}.md", "w") as f:
+            f.write(roofline_table(mesh) + "\n")
+    print("rendered")

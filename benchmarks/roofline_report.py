@@ -1,0 +1,88 @@
+"""§Roofline: the 40-cell table from the dry-run artifacts.
+
+Reads ``experiments/dryrun/*.json`` (written by `repro.launch.dryrun`),
+derives the three roofline terms per (arch x shape) on the single-pod
+mesh, identifies the dominant term, and emits the table EXPERIMENTS.md
+§Roofline embeds.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import write_csv
+from repro.launch.dryrun import ARCH_MODULES, load_config
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, roofline
+from repro.launch.shapes import SHAPES
+
+
+def load_records(mesh: str = "16x16") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join("experiments", "dryrun", f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(mesh: str = "16x16"):
+    arch_by_name = {}
+    for m in ARCH_MODULES:
+        cfg = load_config(m)
+        arch_by_name[cfg.name] = cfg
+    rows = []
+    ok = skip = fail = 0
+    worst = None
+    most_coll = None
+    for rec in load_records(mesh):
+        if rec["status"] == "SKIP":
+            skip += 1
+            rows.append([rec["arch"], rec["shape"], "SKIP", "", "", "", "", "", ""])
+            continue
+        if rec["status"] != "OK":
+            fail += 1
+            rows.append([rec["arch"], rec["shape"], "FAIL", "", "", "", "", "", ""])
+            continue
+        ok += 1
+        cfg = arch_by_name[rec["arch"]]
+        case = SHAPES[rec["shape"]]
+        coll = rec["collective_bytes"]["total"]
+        rt = roofline(cfg, case, rec["chips"], coll)
+        rows.append(
+            [
+                rec["arch"],
+                rec["shape"],
+                "OK",
+                f"{rt.compute_s * 1e3:.3f}",
+                f"{rt.memory_s * 1e3:.3f}",
+                f"{rt.collective_s * 1e3:.3f}",
+                rt.dominant,
+                f"{rt.useful_ratio:.3f}",
+                f"{rt.roofline_fraction:.3f}",
+            ]
+        )
+        key = (rec["arch"], rec["shape"])
+        if worst is None or rt.roofline_fraction < worst[1]:
+            worst = (key, rt.roofline_fraction)
+        if rt.dominant == "collective" and (
+            most_coll is None or rt.collective_s > most_coll[1]
+        ):
+            most_coll = (key, rt.collective_s)
+    write_csv(
+        f"roofline_{mesh}.csv",
+        [
+            "arch", "shape", "status", "compute_ms", "memory_ms",
+            "collective_ms", "dominant", "useful_ratio", "roofline_frac",
+        ],
+        rows,
+    )
+    derived = (
+        f"cells ok={ok} skip={skip} fail={fail}; "
+        f"worst-roofline={worst[0]} ({worst[1]:.2f}); "
+        f"most-collective-bound={most_coll[0] if most_coll else 'none'}"
+    )
+    return derived
+
+
+if __name__ == "__main__":
+    print(run())

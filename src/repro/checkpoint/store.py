@@ -1,0 +1,201 @@
+"""Sharded npz checkpoints with atomic commit and auto-resume.
+
+Layout (one directory per step)::
+
+    <root>/step_000123/
+        shard_00000_of_00004.npz   # this host's param/opt leaves
+        meta.json                  # treedef structure + leaf manifest
+        COMMITTED                  # written last -> atomic visibility
+
+Fault-tolerance contract (runtime/ft.py builds on this):
+
+- `save_checkpoint` writes into ``step_xxx.tmp`` and renames after the
+  COMMITTED marker is inside — a crash mid-save never corrupts the
+  latest checkpoint, and `latest_step` only ever sees committed dirs.
+- every host writes only its own shard file (host-sharded state);
+  restore reads the shard(s) it owns. On a single-host dev box there is
+  exactly one shard.
+- `CheckpointManager.keep` bounds disk usage (old steps pruned after a
+  successful commit).
+
+Arrays are gathered with `jax.device_get` before writing — for
+fully-replicated or host-local shards this is the host's own data; for
+cross-host global arrays a production deployment would swap in
+`multihost_utils.process_allgather`, which is the only line that would
+change.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+_COMMITTED = "COMMITTED"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(
+    root: str,
+    step: int,
+    state,
+    host_id: int = 0,
+    num_hosts: int = 1,
+) -> str:
+    """Atomically write ``state`` (any pytree) for ``step``."""
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:09d}")
+    tmp = final + f".tmp_{host_id}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    paths, leaves, _ = _flatten_with_paths(state)
+    arrays, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        a = np.asarray(jax.device_get(x))
+        dtypes.append(str(a.dtype))
+        if a.dtype.kind == "V" or str(a.dtype) == "bfloat16":
+            # npz cannot serialize ml_dtypes (bfloat16 etc.): store the
+            # raw bits; meta's dtype string restores the view.
+            a = a.view(np.uint16 if a.dtype.itemsize == 2 else np.uint8)
+        arrays[f"leaf_{i}"] = a
+    shard_name = f"shard_{host_id:05d}_of_{num_hosts:05d}.npz"
+    np.savez(os.path.join(tmp, shard_name), **arrays)
+    meta = {
+        "step": step,
+        "num_hosts": num_hosts,
+        "paths": paths,
+        "dtypes": dtypes,
+        "shapes": [list(x.shape) for x in arrays.values()],
+    }
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(tmp, _COMMITTED), "w") as f:
+        f.write("ok\n")
+    # atomic publish: rename tmp -> final (POSIX rename is atomic)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(root: str) -> int | None:
+    """Largest committed step under ``root`` (None if no checkpoint)."""
+    if not os.path.isdir(root):
+        return None
+    best = None
+    for name in os.listdir(root):
+        if not name.startswith("step_") or name.endswith((".tmp", ".trash")):
+            continue
+        path = os.path.join(root, name)
+        if not os.path.exists(os.path.join(path, _COMMITTED)):
+            continue
+        try:
+            s = int(name.split("_")[1].split(".")[0])
+        except ValueError:
+            continue
+        best = s if best is None else max(best, s)
+    return best
+
+
+def restore_checkpoint(root: str, step: int, like, host_id: int = 0):
+    """Restore the pytree saved at ``step``; ``like`` provides treedef.
+
+    Leaf order is matched by path string, so adding/removing state
+    fields fails loudly instead of silently mis-assigning arrays.
+    """
+    path = os.path.join(root, f"step_{step:09d}")
+    if not os.path.exists(os.path.join(path, _COMMITTED)):
+        raise FileNotFoundError(f"no committed checkpoint at {path}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    shard = [n for n in os.listdir(path) if n.startswith(f"shard_{host_id:05d}_")]
+    if not shard:
+        raise FileNotFoundError(f"host {host_id} shard missing in {path}")
+    import ml_dtypes
+
+    with np.load(os.path.join(path, shard[0])) as z:
+        arrays = []
+        for i, dt in enumerate(meta["dtypes"]):
+            a = z[f"leaf_{i}"]
+            if dt == "bfloat16":
+                a = a.view(ml_dtypes.bfloat16)
+            arrays.append(a)
+
+    like_paths, like_leaves, treedef = _flatten_with_paths(like)
+    if like_paths != meta["paths"]:
+        raise ValueError(
+            "checkpoint structure mismatch:\n"
+            f"  saved:    {meta['paths'][:5]}...\n"
+            f"  expected: {like_paths[:5]}..."
+        )
+    restored = [
+        jax.numpy.asarray(a, dtype=l.dtype) for a, l in zip(arrays, like_leaves)
+    ]
+    return jax.tree_util.tree_unflatten(treedef, restored)
+
+
+class CheckpointManager:
+    """Periodic save + auto-resume + retention, used by launch/train.py."""
+
+    def __init__(
+        self,
+        root: str,
+        every: int = 100,
+        keep: int = 3,
+        host_id: int = 0,
+        num_hosts: int = 1,
+    ):
+        self.root = root
+        self.every = max(1, every)
+        self.keep = max(1, keep)
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+
+    def maybe_save(self, step: int, state) -> str | None:
+        if step % self.every:
+            return None
+        out = save_checkpoint(
+            self.root, step, state, self.host_id, self.num_hosts
+        )
+        self._prune()
+        return out
+
+    def restore_latest(self, like):
+        """(step, state) of the newest committed checkpoint, or (0, like)."""
+        s = latest_step(self.root)
+        if s is None:
+            return 0, like
+        return s, restore_checkpoint(self.root, s, like, self.host_id)
+
+    def _prune(self) -> None:
+        steps = sorted(
+            s
+            for s in (
+                latest_step_of(name)
+                for name in os.listdir(self.root)
+                if name.startswith("step_") and not name.endswith(".tmp")
+            )
+            if s is not None
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(
+                os.path.join(self.root, f"step_{s:09d}"), ignore_errors=True
+            )
+
+
+def latest_step_of(name: str) -> int | None:
+    try:
+        return int(name.split("_")[1].split(".")[0])
+    except (IndexError, ValueError):
+        return None

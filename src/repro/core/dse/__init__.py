@@ -1,0 +1,31 @@
+"""PHAROS design-space exploration (paper §4)."""
+from repro.core.dse.space import (
+    DesignPoint,
+    design_from_splits,
+    evaluate_design,
+    fixed_design,
+)
+from repro.core.dse.create_acc import LatencyCache, create_acc
+from repro.core.dse.beam import BeamResult, BeamStats, beam_search
+from repro.core.dse.brute import brute_force_search
+from repro.core.dse.throughput import (
+    TGDesign,
+    throughput_guided_design,
+    tg_simtasks,
+)
+
+__all__ = [
+    "DesignPoint",
+    "design_from_splits",
+    "evaluate_design",
+    "fixed_design",
+    "LatencyCache",
+    "create_acc",
+    "BeamResult",
+    "BeamStats",
+    "beam_search",
+    "brute_force_search",
+    "TGDesign",
+    "throughput_guided_design",
+    "tg_simtasks",
+]

@@ -1,0 +1,200 @@
+"""PHAROS beam search (paper Algorithm 1, §4.2).
+
+Iteratively creates accelerators: each parent carries the layers/chips
+already committed; extending it assigns a new accelerator some chips and
+a consecutive slice of every task's remaining layers. The unassigned
+remainder forms a synthetic ``remain_acc`` whose utilization (a) guides
+child ranking and (b), when it drops to <= 1, turns the remainder into a
+real accelerator and yields a *feasible* complete design (lines 13-14).
+Children whose new accelerator already exceeds utilization 1 are pruned
+(line 11); children whose remainder exceeds 1 are retained for further
+partitioning (line 12). Top-``B`` children by max-utilization survive
+each iteration.
+
+``beam_width=None`` gives the brute-force BFS baseline (B = +inf,
+paper §5.4) used by `repro.core.dse.brute`.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+
+from repro.core.dse.create_acc import LatencyCache, Span, create_acc
+from repro.core.dse.space import DesignPoint, design_from_splits
+from repro.core.perfmodel.exec_model import AccDesign
+from repro.core.perfmodel.hardware import Platform
+from repro.core.rt.task import TaskSet, Workload
+
+
+@dataclass
+class BeamStats:
+    create_acc_calls: int = 0
+    children_generated: int = 0
+    parents_expanded: int = 0
+    wall_time_s: float = 0.0
+    first_feasible_time_s: float | None = None
+    feasible_found: int = 0
+
+
+@dataclass
+class BeamResult:
+    succ_pts: list[DesignPoint]
+    best: DesignPoint | None
+    stats: BeamStats = field(default_factory=BeamStats)
+
+
+@dataclass(frozen=True)
+class _Node:
+    assigned: tuple[int, ...]  # layers committed per task (paper's l)
+    chips_used: int  # paper's r
+    accs: tuple[AccDesign, ...]
+    splits: tuple[tuple[int, ...], ...]  # per stage: layer counts per task
+    created_max_util: float  # max util among committed accelerators
+    guide: float  # ranking key: max(created, remain) util
+
+
+def beam_search(
+    workloads: list[Workload],
+    taskset: TaskSet,
+    platform: Platform,
+    max_m: int = 4,
+    beam_width: int | None = 8,
+    max_frontier: int = 200_000,
+) -> BeamResult:
+    """Algorithm 1. Returns every feasible design found plus the best."""
+    if len(workloads) != len(taskset):
+        raise ValueError("workloads/taskset mismatch")
+    t0 = time.perf_counter()
+    n = len(workloads)
+    L = tuple(w.num_layers for w in workloads)
+    R = platform.total_chips
+    cache = LatencyCache(workloads)
+    stats = BeamStats()
+    succ: list[DesignPoint] = []
+    best: DesignPoint | None = None
+
+    def note_feasible(
+        accs: tuple[AccDesign, ...], splits: tuple[tuple[int, ...], ...]
+    ) -> None:
+        nonlocal best
+        dp = design_from_splits(accs, splits, workloads, taskset)
+        if dp.max_util > 1.0 + 1e-12:
+            return
+        succ.append(dp)
+        stats.feasible_found += 1
+        if stats.first_feasible_time_s is None:
+            stats.first_feasible_time_s = time.perf_counter() - t0
+        if best is None or dp.max_util < best.max_util:
+            best = dp
+
+    root = _Node(
+        assigned=(0,) * n,
+        chips_used=0,
+        accs=(),
+        splits=(),
+        created_max_util=0.0,
+        guide=float("inf"),
+    )
+    parents: list[_Node] = [root]
+
+    for _m in range(2, max_m + 1):
+        children: dict[tuple, _Node] = {}
+        for parent in parents:
+            stats.parents_expanded += 1
+            l, r = parent.assigned, parent.chips_used
+            remaining = tuple(L[i] - l[i] for i in range(n))
+            if sum(remaining) == 0:
+                continue
+            # enumerate the new accelerator's chip budget
+            for chips_new in range(1, R - r + 1):
+                chips_left = R - r - chips_new
+                # enumerate consecutive-slice takes per task
+                ranges = [range(l[i], L[i] + 1) for i in range(n)]
+                for nvec in itertools.product(*ranges):
+                    take = tuple(nvec[i] - l[i] for i in range(n))
+                    if sum(take) == 0:
+                        continue
+                    left = tuple(L[i] - nvec[i] for i in range(n))
+                    if sum(left) > 0 and chips_left < 1:
+                        continue  # remainder would have no resources
+                    spans = tuple((l[i], nvec[i]) for i in range(n))
+                    new_acc, new_util, _ = create_acc(
+                        spans, chips_new, taskset, cache
+                    )
+                    stats.create_acc_calls += 1
+                    if new_util > 1.0:  # line 11: prune
+                        continue
+                    accs = parent.accs + (new_acc,)
+                    splits = parent.splits + (take,)
+                    cmax = max(parent.created_max_util, new_util)
+                    if sum(left) == 0:
+                        # new accelerator consumed everything: complete
+                        note_feasible(accs, splits)
+                        continue
+                    rem_spans = tuple((nvec[i], L[i]) for i in range(n))
+                    rem_acc, rem_util, _ = create_acc(
+                        rem_spans, chips_left, taskset, cache
+                    )
+                    stats.create_acc_calls += 1
+                    if rem_util <= 1.0:  # lines 13-14: feasible completion
+                        note_feasible(accs + (rem_acc,), splits + (left,))
+                    # line 12: retain for further partitioning. Guide =
+                    # utilization the completed design could reach if the
+                    # remainder split perfectly over the stages still
+                    # available (admissible balance estimate — scoring the
+                    # remainder as ONE accelerator systematically prunes
+                    # children whose remainder is heavy but splittable).
+                    stages_left = max(1, max_m - len(accs))
+                    node = _Node(
+                        assigned=nvec,
+                        chips_used=r + chips_new,
+                        accs=accs,
+                        splits=splits,
+                        created_max_util=cmax,
+                        guide=max(cmax, rem_util / stages_left),
+                    )
+                    key = (nvec, r + chips_new, splits)
+                    prev = children.get(key)
+                    if prev is None or node.guide < prev.guide:
+                        children[key] = node
+                    stats.children_generated += 1
+                    if len(children) > max_frontier:
+                        raise RuntimeError(
+                            "frontier exceeded max_frontier; "
+                            "use a beam width for this problem size"
+                        )
+        ranked = sorted(children.values(), key=lambda c: c.guide)
+        if beam_width is None:
+            parents = ranked
+        else:
+            # diverse top-B: prefer distinct layer frontiers (siblings
+            # that differ only in chip split crowd out genuinely
+            # different partitions otherwise), then fill remaining slots
+            # with the best leftovers.
+            picked, seen_assigned, leftovers = [], set(), []
+            for node in ranked:
+                if len(picked) >= beam_width:
+                    break
+                if node.assigned in seen_assigned:
+                    leftovers.append(node)
+                else:
+                    seen_assigned.add(node.assigned)
+                    picked.append(node)
+            for node in leftovers:
+                if len(picked) >= beam_width:
+                    break
+                picked.append(node)
+            parents = picked
+        if not parents:
+            break
+
+    stats.wall_time_s = time.perf_counter() - t0
+    # deduplicate succ_pts (same splits + chips allocation)
+    seen, unique = set(), []
+    for dp in sorted(succ, key=lambda d: d.max_util):
+        key = (dp.splits, tuple(a.chips for a in dp.accs))
+        if key not in seen:
+            seen.add(key)
+            unique.append(dp)
+    return BeamResult(succ_pts=unique, best=best, stats=stats)

@@ -1,0 +1,32 @@
+"""TPU-adapted performance model (paper Eq. 1, CHARM-style -> roofline).
+
+The paper prices layer latency via the CHARM analytical model
+``Exec(l, A, B, C, X, Y, Z)`` on a Versal AIE array. Our target is a TPU
+v5e pod: an accelerator ("stage") is a set of chips plus a Pallas block
+shape ``(bm, bk, bn)``. Latency is the roofline max of compute, HBM and
+ICI terms, with MXU-alignment efficiency and a fixed dispatch overhead,
+so the DSE sees the same resource/utilization trade-offs the paper's
+model exposes (over-allocation floors, shape mismatch penalties).
+"""
+from repro.core.perfmodel.hardware import TPUChip, Platform, TPU_V5E, paper_platform
+from repro.core.perfmodel.exec_model import (
+    AccDesign,
+    BLOCK_CANDIDATES,
+    layer_latency,
+    segment_latency,
+    preemption_overheads,
+    vmem_bytes_for_block,
+)
+
+__all__ = [
+    "TPUChip",
+    "Platform",
+    "TPU_V5E",
+    "paper_platform",
+    "AccDesign",
+    "BLOCK_CANDIDATES",
+    "layer_latency",
+    "segment_latency",
+    "preemption_overheads",
+    "vmem_bytes_for_block",
+]

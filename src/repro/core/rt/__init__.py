@@ -1,0 +1,43 @@
+"""Real-time theory core for PHAROS (paper §3.3–§3.4).
+
+Implements the task/segment model, per-accelerator utilization (Eq. 2),
+the SRT-schedulability test (Eq. 3) from the guideline theory
+[Dong et al., ECRTS'17], the preemption-overhead WCET model (Eqs. 4–5),
+and analytical response-time bounds for FIFO and EDF on a chained
+pipeline of accelerators.
+"""
+from repro.core.rt.task import (
+    LayerDesc,
+    Workload,
+    Task,
+    TaskSet,
+    SegmentTable,
+)
+from repro.core.rt.schedulability import (
+    stage_utilization,
+    max_utilization,
+    srt_schedulable,
+    effective_wcets,
+)
+from repro.core.rt.response_time import (
+    busy_period,
+    fifo_stage_bound,
+    edf_stage_bound,
+    end_to_end_bounds,
+)
+
+__all__ = [
+    "LayerDesc",
+    "Workload",
+    "Task",
+    "TaskSet",
+    "SegmentTable",
+    "stage_utilization",
+    "max_utilization",
+    "srt_schedulable",
+    "effective_wcets",
+    "busy_period",
+    "fifo_stage_bound",
+    "edf_stage_bound",
+    "end_to_end_bounds",
+]

@@ -1,0 +1,99 @@
+"""Utilization and SRT-schedulability tests (paper Eqs. 2–5).
+
+The guideline theory [Dong et al., ECRTS'17] states: on a chained
+pipeline of accelerators where a job must finish all execution on
+``acc^k`` before any execution on ``acc^{k+1}`` (no backtracking), the
+system is SRT-schedulable — every job's response time is bounded — if
+and only if every accelerator's utilization is at most 1 (Eq. 3), under
+both FIFO and EDF.
+
+Preemption overhead (EDF only) is folded into the WCET per Eq. 4–5
+before the test, which preserves safety of the sufficient direction:
+if the inflated utilizations pass, the real system (whose overhead is
+at most the model's) is schedulable.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.core.rt.task import SegmentTable, TaskSet
+
+#: Strictness slack: utilizations within EPS above 1.0 are treated as 1.0
+#: to absorb float roundoff in WCET accumulation.
+EPS = 1e-12
+
+
+def effective_wcets(
+    table: SegmentTable, preemptive: bool
+) -> list[list[float]]:
+    """``e_i^k`` matrix with Eq. 4 applied (xi added iff preemptive)."""
+    return table.wcets(preemptive)
+
+
+def stage_utilization(
+    table: SegmentTable, taskset: TaskSet, k: int, preemptive: bool
+) -> float:
+    """Eq. 2: ``u^k = sum_i e_i^k / p_i``."""
+    if len(taskset) != table.n_tasks:
+        raise ValueError("taskset size != segment table size")
+    return sum(
+        table.wcet(i, k, preemptive) / taskset.tasks[i].period
+        for i in range(table.n_tasks)
+    )
+
+
+def stage_utilizations(
+    table: SegmentTable, taskset: TaskSet, preemptive: bool
+) -> list[float]:
+    return [
+        stage_utilization(table, taskset, k, preemptive)
+        for k in range(table.n_stages)
+    ]
+
+
+def max_utilization(
+    table: SegmentTable, taskset: TaskSet, preemptive: bool
+) -> float:
+    """The DSE objective ``max_k u^k`` (paper §4.1)."""
+    return max(stage_utilizations(table, taskset, preemptive))
+
+
+def srt_schedulable(
+    table: SegmentTable, taskset: TaskSet, preemptive: bool
+) -> bool:
+    """Eq. 3: SRT-schedulable iff ``u^k <= 1`` for every stage.
+
+    ``preemptive=True`` applies the EDF overhead inflation first; the
+    paper notes SG+EDF loses the *iff* guarantee once overhead exists —
+    passing this test with inflated WCETs restores a sufficient
+    condition (overhead-inclusive utilization <= 1).
+    """
+    return max_utilization(table, taskset, preemptive) <= 1.0 + EPS
+
+
+def utilization_headroom(
+    table: SegmentTable, taskset: TaskSet, preemptive: bool
+) -> float:
+    """Max proportional period *shrink* factor keeping the system
+    schedulable: scaling all periods to ``x%`` scales every ``u^k`` by
+    ``1/x%`` (paper §4.1), so headroom = ``1 / max_util``.
+    """
+    mu = max_utilization(table, taskset, preemptive)
+    return float("inf") if mu <= 0 else 1.0 / mu
+
+
+def density_check(
+    table: SegmentTable, taskset: TaskSet, preemptive: bool
+) -> list[float]:
+    """Per-task chain density ``sum_k e_i^k / p_i`` — diagnostic only.
+
+    A task whose *chain* WCET exceeds its period still admits bounded
+    response times in the SRT model (jobs of the same task may overlap
+    across pipeline stages), so this is not a schedulability gate; it is
+    reported because density > M signals a hopeless configuration.
+    """
+    out = []
+    for i, t in enumerate(taskset.tasks):
+        chain = sum(table.wcet(i, k, preemptive) for k in range(table.n_stages))
+        out.append(chain / t.period)
+    return out

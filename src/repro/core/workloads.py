@@ -1,0 +1,184 @@
+"""The paper's evaluation workloads (§5.1) as layer chains.
+
+Five applications, truncated exactly as in the paper (blocks repeat but
+layers within a block differ, preserving layer heterogeneity):
+
+- PointNet (full model)                 [Qi et al., CVPR'17]
+- Point Transformer (2 blocks)          [Wu et al., PTv3]
+- MLP-Mixer (2 blocks, Mixer-B/16)      [Tolstikhin et al.]
+- Res-MLP (4 blocks, ResMLP-S24/384)    [Touvron et al.]
+- DeiT-T (2 blocks)                     [Touvron et al.]
+
+Layer shapes are the dominant GEMMs of each published architecture
+(1x1 convs and per-point MLPs are GEMMs with M = #points/#tokens).
+Attention score/value products are folded into explicit-FLOP layers.
+
+The paper reports single-accelerator latencies P' = (0.23, 0.99, 0.30,
+0.38, 0.14) ms on VCK5000; our platform is faster, so — exactly like the
+paper — taskset periods are generated *relative to our own* measured P'
+via ratio grids (`period_grid`), which preserves every claim expressed
+as a ratio.
+"""
+from __future__ import annotations
+
+from repro.core.rt.task import LayerDesc, Task, TaskSet, Workload
+
+_L = LayerDesc
+
+#: Each job is a small batch of inferences (embedded pipelines batch
+#: sensor frames); keeps the paper workloads compute-relevant on TPU
+#: chips instead of dispatch-bound, preserving the paper's
+#: resource/utilization trade-off regime.
+JOB_BATCH = 8
+
+
+def _attn(name: str, tokens: int, heads: int, head_dim: int) -> LayerDesc:
+    """Score + AV GEMM pair folded into one explicit-FLOP layer."""
+    flops = 2.0 * 2.0 * tokens * tokens * heads * head_dim
+    byts = 2.0 * (2 * tokens * heads * head_dim + heads * tokens * tokens)
+    return _L(
+        name,
+        M=tokens,
+        K=head_dim * heads,
+        N=tokens,
+        kind="attn",
+        flops=flops,
+        bytes_rw=byts,
+    )
+
+
+def pointnet() -> Workload:
+    """Full PointNet classification trunk, 1024 points (per-point MLPs
+    are (points x Cin x Cout) GEMMs; T-Nets folded into the trunk)."""
+    P = 1024 * JOB_BATCH
+    layers = (
+        _L("mlp1_3_64", P, 64, 64),  # 3->64 padded to lane width
+        _L("mlp2_64_64", P, 64, 64),
+        _L("mlp3_64_64", P, 64, 64),
+        _L("mlp4_64_128", P, 64, 128),
+        _L("mlp5_128_1024", P, 128, 1024),
+        _L("fc1_1024_512", 8 * JOB_BATCH, 1024, 512),
+        _L("fc2_512_256", 8 * JOB_BATCH, 512, 256),
+        _L("fc3_256_40", 8 * JOB_BATCH, 256, 64),
+    )
+    return Workload("pointnet", layers)
+
+
+def _windowed_attn(name: str, tokens: int, window: int, d: int) -> LayerDesc:
+    """PTv3 serialized-patch attention: scores+AV within windows only."""
+    flops = 2.0 * 2.0 * tokens * window * d
+    byts = 2.0 * (2 * tokens * d + tokens * window)
+    return _L(
+        name, M=tokens, K=d, N=window, kind="attn", flops=flops, bytes_rw=byts
+    )
+
+
+def point_transformer(blocks: int = 2) -> Workload:
+    """Point Transformer v3: serialized windowed attention, 4096 points,
+    d=256, patch window 1024."""
+    P, D, H = 4096 * JOB_BATCH, 256, 4
+    block = lambda i: (
+        _L(f"b{i}_qkv", P, D, 3 * D, kind="attn_proj"),
+        _windowed_attn(f"b{i}_attn", P, 1024, D),
+        _L(f"b{i}_proj", P, D, D),
+        _L(f"b{i}_ffn_up", P, D, 4 * D),
+        _L(f"b{i}_ffn_dn", P, 4 * D, D),
+    )
+    layers = tuple(l for i in range(blocks) for l in block(i))
+    return Workload("point_transformer", layers)
+
+
+def mlp_mixer(blocks: int = 2) -> Workload:
+    """Mixer-B/16: 196 tokens, d=768, token-MLP 384, channel-MLP 3072."""
+    T, D, DS, DC = 196 * JOB_BATCH, 768, 384, 3072
+    block = lambda i: (
+        _L(f"b{i}_tok_up", D, T, DS, kind="token_mix"),
+        _L(f"b{i}_tok_dn", D, DS, T, kind="token_mix"),
+        _L(f"b{i}_ch_up", T, D, DC),
+        _L(f"b{i}_ch_dn", T, DC, D),
+    )
+    layers = tuple(l for i in range(blocks) for l in block(i))
+    return Workload("mlp_mixer", layers)
+
+
+def resmlp(blocks: int = 4) -> Workload:
+    """ResMLP-S24: 196 tokens, d=384, cross-patch + cross-channel."""
+    T, D = 196 * JOB_BATCH, 384
+    block = lambda i: (
+        _L(f"b{i}_xpatch", D, T, T, kind="token_mix"),
+        _L(f"b{i}_ch_up", T, D, 4 * D),
+        _L(f"b{i}_ch_dn", T, 4 * D, D),
+    )
+    layers = tuple(l for i in range(blocks) for l in block(i))
+    return Workload("resmlp", layers)
+
+
+def deit_t(blocks: int = 2) -> Workload:
+    """DeiT-Tiny: 197 tokens, d=192, 3 heads."""
+    T, D, H = 197 * JOB_BATCH, 192, 3
+    block = lambda i: (
+        _L(f"b{i}_qkv", T, D, 3 * D, kind="attn_proj"),
+        _attn(f"b{i}_attn", T, H, D // H),
+        _L(f"b{i}_proj", T, D, D),
+        _L(f"b{i}_ffn_up", T, D, 4 * D),
+        _L(f"b{i}_ffn_dn", T, 4 * D, D),
+    )
+    layers = tuple(l for i in range(blocks) for l in block(i))
+    return Workload("deit_t", layers)
+
+
+PAPER_WORKLOADS: dict[str, Workload] = {
+    w.name: w
+    for w in (pointnet(), point_transformer(), mlp_mixer(), resmlp(), deit_t())
+}
+
+#: paper's application pairings: one point-cloud app x one image app
+PAPER_COMBOS: tuple[tuple[str, str], ...] = (
+    ("pointnet", "mlp_mixer"),
+    ("pointnet", "resmlp"),
+    ("pointnet", "deit_t"),
+    ("point_transformer", "mlp_mixer"),
+    ("point_transformer", "resmlp"),
+    ("point_transformer", "deit_t"),
+)
+
+
+def single_acc_reference_latency(workload: Workload, platform) -> float:
+    """P': workload latency on one full-platform accelerator (paper §5.1).
+
+    Periods are then generated as ``P' / ratio`` — larger ratio = smaller
+    period = heavier workload, exactly the paper's knob.
+    """
+    from repro.core.perfmodel.exec_model import AccDesign, segment_latency
+
+    best = float("inf")
+    from repro.core.perfmodel.exec_model import BLOCK_CANDIDATES
+
+    for block in BLOCK_CANDIDATES:
+        try:
+            acc = AccDesign(chips=platform.total_chips, block=block)
+        except ValueError:
+            continue
+        best = min(best, segment_latency(workload.layers, acc))
+    return best
+
+
+def make_taskset(
+    combo: tuple[str, str],
+    ratios: tuple[float, float],
+    platform,
+) -> TaskSet:
+    """Build the paper's 2-task taskset: periods = P'_app / ratio."""
+    tasks = []
+    for app, ratio in zip(combo, ratios):
+        w = PAPER_WORKLOADS[app]
+        p_ref = single_acc_reference_latency(w, platform)
+        tasks.append(Task(workload=w, period=p_ref / ratio))
+    return TaskSet(tasks=tuple(tasks))
+
+
+def period_grid(n: int = 7, lo: float = 0.5, hi: float = 6.0):
+    """Ratio grid for (P'/P1, P'/P2) sweeps (paper Figs. 1, 6, 7)."""
+    step = (hi - lo) / (n - 1)
+    vals = [lo + i * step for i in range(n)]
+    return [(a, b) for a in vals for b in vals]

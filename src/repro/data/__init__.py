@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    DataConfig,
+    SyntheticTokenDataset,
+    make_batch_iterator,
+)
+
+__all__ = ["DataConfig", "SyntheticTokenDataset", "make_batch_iterator"]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash attention (materialized scores, fp32)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, S, H, hd); k/v: (B, S, Hkv, hd) -> (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    group = H // Hkv
+    kx = jnp.repeat(k, group, axis=2)
+    vx = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum(
+        "bqhd,bshd->bhqs",
+        q.astype(jnp.float32),
+        kx.astype(jnp.float32),
+    ) * (hd**-0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

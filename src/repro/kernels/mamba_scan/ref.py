@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the selective scan (associative_scan form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(dt, B, C, x, A, h0=None):
+    """Same contract as ops.mamba_scan; computed via associative scan."""
+    dt = dt.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+    Bb, S, di = x.shape
+    ns = A.shape[1]
+    if h0 is None:
+        h0 = jnp.zeros((Bb, di, ns), jnp.float32)
+    a = jnp.exp(dt[..., None] * A)  # (Bb, S, di, ns)
+    b = (dt * x)[..., None] * B[:, :, None, :]  # (Bb, S, di, ns)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    aa, bb = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = bb + aa * h0[:, None]
+    y = jnp.einsum("bsdn,bsn->bsd", h, C)
+    return y, h[:, -1]

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the preemptible matmul."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b):
+    """Full product in fp32 (the kernel accumulates in fp32)."""
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def matmul_window_ref(a, b, c_acc, start: int, window: int, block):
+    """Oracle for one window: add A@B's contribution for the output
+    tiles with flat index in [start, start + window), leave the rest."""
+    bm, bk, bn = block
+    M, _ = a.shape
+    _, N = b.shape
+    n_m, n_n = M // bm, N // bn
+    full = matmul_ref(a, b)
+    out = jnp.array(c_acc)
+    for flat in range(start, min(start + window, n_m * n_n)):
+        i, j = divmod(flat, n_n)
+        sl = (slice(i * bm, (i + 1) * bm), slice(j * bn, (j + 1) * bn))
+        out = out.at[sl].set(c_acc[sl] + full[sl])
+    return out
+
+
+def matmul_partial_ref(a, b, upto_tile: int, block):
+    """Oracle for a fresh run preempted after ``upto_tile`` tiles."""
+    c0 = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+    return matmul_window_ref(a, b, c0, 0, upto_tile, block)

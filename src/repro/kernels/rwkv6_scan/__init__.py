@@ -1,0 +1,3 @@
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+
+__all__ = ["rwkv6_scan"]

@@ -1,0 +1,110 @@
+"""RWKV-6 chunked WKV scan — Pallas TPU kernel.
+
+GLA-style blocking identical to `repro.models.rwkv._tmix_impl`: the
+(batch*heads) axis is parallel, the chunk axis sequential with the
+(hd, hd) state matrix in VMEM scratch. Within a chunk everything is
+GEMM-shaped for the MXU:
+
+- the cumulative log-decay is a lower-triangular-ones matmul (no cumsum
+  primitive needed on the VPU),
+- intra-chunk interaction is ``(r*W_prev) @ (k/W)^T`` masked strictly
+  lower-triangular, then ``@ v``,
+- the carry update is ``k_scaled^T @ v``.
+
+Decay logits are clamped upstream (models/rwkv._DECAY_CLAMP) so the
+``exp(-cumw)`` rescale stays in fp32 range for chunk <= 64.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(
+    r_ref,  # (1, ch, hd)
+    k_ref,
+    v_ref,
+    w_ref,
+    u_ref,  # (1, hd)
+    y_ref,  # (1, ch, hd) out
+    sout_ref,  # (1, hd, hd) out
+    s_scr,  # (hd, hd) scratch
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    rc = r_ref[0]  # (ch, hd) fp32
+    kc = k_ref[0]
+    vc = v_ref[0]
+    wc = w_ref[0]
+    u = u_ref[0]  # (hd,)
+
+    logw = jnp.log(wc)  # (ch, hd), negative
+    tri_incl = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    cumw = jnp.dot(tri_incl, logw, preferred_element_type=jnp.float32)
+    w_prev = jnp.exp(cumw - logw)  # prod_{s<=t-1} w_s
+    rw = rc * w_prev
+    kw = kc * jnp.exp(-cumw)  # k_j / prod_{s<=j} w_s
+
+    S = s_scr[...]
+    y_inter = jnp.dot(rw, S, preferred_element_type=jnp.float32)
+    att = jnp.dot(rw, kw.T, preferred_element_type=jnp.float32)  # (ch, ch)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    att = jnp.where(rows > cols, att, 0.0)  # strict lower triangle
+    y_intra = jnp.dot(att, vc, preferred_element_type=jnp.float32)
+    diag = jnp.sum(rc * u[None, :] * kc, axis=-1, keepdims=True)  # (ch, 1)
+    y_ref[0] = y_inter + y_intra + diag * vc
+
+    w_tot = jnp.exp(cumw[-1])  # (hd,)
+    k_scale = kc * jnp.exp(cumw[-1][None, :] - cumw)  # prod_{s>j} w_s
+    s_scr[...] = w_tot[:, None] * S + jnp.dot(
+        k_scale.T, vc, preferred_element_type=jnp.float32
+    )
+    sout_ref[0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads", "chunk", "interpret"))
+def rwkv6_scan_call(r, k, v, w, u, *, n_heads: int, chunk: int, interpret=True):
+    """r/k/v/w: (B*H, S, hd) fp32; u: (H, hd). Returns (y, S_final)."""
+    BH, S, hd = r.shape
+    if S % chunk:
+        raise ValueError(f"S={S} not divisible by chunk={chunk}")
+    n_chunks = S // chunk
+
+    grid = (BH, n_chunks)
+    call = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk, hd), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, hd), lambda bh, c: (bh % n_heads, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, hd, hd), lambda bh, c: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+    )
+    f32 = jnp.float32
+    return call(r.astype(f32), k.astype(f32), v.astype(f32), w.astype(f32), u.astype(f32))

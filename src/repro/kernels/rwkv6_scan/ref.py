@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the WKV-6 recurrence (naive sequential scan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """Same contract as ops.rwkv6_scan, computed step by step."""
+    B, S, H, hd = r.shape
+    f32 = jnp.float32
+    r, k, v, w = (t.astype(f32) for t in (r, k, v, w))
+    u = u.astype(f32)
+
+    def step(S_mat, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, hd)
+        kv = jnp.einsum("bhd,bhe->bhde", k_t, v_t)
+        y = jnp.einsum(
+            "bhd,bhde->bhe", r_t, S_mat + u[None, :, :, None] * kv
+        )
+        S_new = w_t[..., None] * S_mat + kv
+        return S_new, y
+
+    S0 = jnp.zeros((B, H, hd, hd), f32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    S_fin, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1), S_fin

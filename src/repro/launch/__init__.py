@@ -1,0 +1,2 @@
+"""Launch layer: production meshes, sharding rules, step builders,
+multi-pod dry-run, and the train/serve drivers."""

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this module —
+jax locks the device count on first init, and the production meshes
+need 512 placeholder CPU devices.
+
+Per cell this script:
+
+1. builds the production mesh (16x16, or 2x16x16 with ``--multi-pod``),
+2. builds the jitted step with explicit in/out shardings (launch.steps),
+3. ``.lower(**input_specs)`` + ``.compile()`` — any sharding mismatch,
+   unsupported collective, or spec bug fails here,
+4. prints ``compiled.memory_analysis()`` (proves the per-device fit)
+   and ``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline),
+5. parses the post-SPMD HLO for collective ops and sums their operand
+   bytes (the §Roofline collective term),
+6. appends a JSON record to ``experiments/dryrun/``.
+
+Usage::
+
+    python -m repro.launch.dryrun --arch qwen1_5_32b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--jobs N]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+ARCH_MODULES = [
+    "jamba_v0_1_52b",
+    "granite_moe_3b_a800m",
+    "dbrx_132b",
+    "rwkv6_7b",
+    "internvl2_76b",
+    "qwen1_5_32b",
+    "minitron_4b",
+    "mistral_nemo_12b",
+    "stablelm_1_6b",
+    "musicgen_medium",
+]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+
+_SHAPE_RE = re.compile(r"\b(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|s4|u4)\[([0-9,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(text: str) -> float:
+    """Total bytes of every typed shape literal in ``text``."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op, by op kind.
+
+    HLO line form: ``%name = TYPE[shape] op-kind(args), ...`` — the
+    result shape sits between '=' and the op keyword. Async pairs count
+    the ``-start`` only (``-done`` repeats the same buffer).
+
+    Accounting: an op's *result* shape bounds the data it moves per
+    participating device (all-gather results count the full gathered
+    size; all-reduce counts the reduced tensor once — on a ring each
+    device sends/receives ~2x the shard, so results are a consistent
+    per-device upper bound for ring algorithms).
+    """
+    out: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        _, rhs = line.split("=", 1)
+        for kind in _COLLECTIVES:
+            idx = rhs.find(kind + "(")
+            if idx < 0:
+                idx = rhs.find(kind + "-start(")
+            if idx < 0:
+                continue
+            # guard against substring hits inside metadata/fusion names
+            head = rhs[:idx]
+            if "fusion(" in head or "custom-call(" in head:
+                continue
+            out[kind] += _shape_bytes(head)
+            out["count"] += 1
+            break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def load_config(arch: str):
+    import importlib
+
+    return importlib.import_module(f"repro.configs.{arch}").CONFIG
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             kv_int8: bool = False) -> dict:
+    """Lower+compile one cell; returns the §Dry-run / §Roofline record."""
+    import jax
+
+    from repro.launch.mesh import make_production_mesh, n_chips
+    from repro.launch.shapes import SHAPES, applicable_shapes
+    from repro.launch.steps import lowerable
+
+    cfg = load_config(arch)
+    case = SHAPES[shape_name]
+    if shape_name not in applicable_shapes(cfg):
+        return {
+            "arch": cfg.name,
+            "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "SKIP",
+            "reason": "full-attention arch: 500k dense decode excluded "
+            "(sub-quadratic shapes run on jamba/rwkv6 only)",
+        }
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    with mesh:
+        fn, args = lowerable(cfg, case, mesh, kv_quant=kv_int8)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    from repro.launch.roofline import analytic_cost, collective_bytes_hlo
+
+    coll_flat = collective_bytes(hlo)
+    coll_loop = collective_bytes_hlo(hlo)
+    acost = analytic_cost(cfg, case)
+    chips = n_chips(mesh)
+    record = {
+        "arch": cfg.name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "OK",
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        # raw artifacts (XLA counts while bodies once — see roofline.py)
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+        "collective_bytes_flat": coll_flat,
+        # loop-corrected per-device collective bytes (roofline input)
+        "collective_bytes": coll_loop,
+        # analytic per-step global costs (roofline compute/memory terms)
+        "analytic": {
+            "flops": acost.flops,
+            "hbm_bytes": acost.hbm_bytes,
+            "model_flops": acost.model_flops,
+        },
+        "memory": {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_size_bytes": getattr(
+                mem, "generated_code_size_in_bytes", 0
+            ),
+        },
+    }
+    return record
+
+
+def result_path(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    root = os.path.join("experiments", "dryrun")
+    os.makedirs(root, exist_ok=True)
+    return os.path.join(root, f"{arch}__{shape}__{mesh}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_MODULES)
+    ap.add_argument("--shape", choices=list("train_4k prefill_32k decode_32k long_500k".split()))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="decode variant: int8 KV cache (results get a "
+                         "'__kvint8' suffix)")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_MODULES
+                 for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k")]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required (or --all)")
+        cells = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells:
+        path = result_path(arch, shape, args.multi_pod)
+        if args.kv_int8:
+            path = path.replace(".json", "__kvint8.json")
+        if os.path.exists(path) and not args.force:
+            with open(path) as f:
+                rec = json.load(f)
+            print(f"[cached] {arch} {shape}: {rec['status']}")
+            continue
+        print(f"[run] {arch} x {shape} ({'2x16x16' if args.multi_pod else '16x16'})",
+              flush=True)
+        try:
+            rec = run_cell(arch, shape, args.multi_pod, kv_int8=args.kv_int8)
+        except Exception as e:  # a failed cell is a bug in the system
+            traceback.print_exc()
+            rec = {
+                "arch": arch, "shape": shape,
+                "mesh": "2x16x16" if args.multi_pod else "16x16",
+                "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+            }
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if rec["status"] == "OK":
+            per_chip = (
+                rec["memory"]["argument_size_bytes"]
+                + rec["memory"]["temp_size_bytes"]
+            ) / 1e9
+            print(
+                f"  OK: compile {rec['compile_s']}s, "
+                f"flops {rec['flops']:.3e}, "
+                f"coll {rec['collective_bytes']['total']:.3e} B, "
+                f"args+temp {per_chip:.2f} GB/device"
+            )
+        else:
+            print(f"  {rec['status']}: {rec.get('reason', rec.get('error', ''))}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,36 @@
+"""Production meshes (single pod 16x16, multi-pod 2x16x16).
+
+Functions, not module-level constants: importing this module never
+touches jax device state, so smoke tests see the real single CPU device
+while `dryrun.py` (which sets ``xla_force_host_platform_device_count``
+before any jax import) sees 512 placeholders.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """One v5e pod (16x16) or two pods (2x16x16).
+
+    Axes: ``data`` carries batch DP + FSDP parameter sharding, ``model``
+    carries tensor/expert parallelism, ``pod`` is cross-pod data
+    parallelism (gradient all-reduce crosses the inter-pod links).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many (CPU) devices exist — for tests."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    """The mesh axes the global batch is sharded over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def n_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,320 @@
+"""Roofline analysis: loop-aware HLO collective accounting + analytic
+compute/memory terms.
+
+Why not raw ``cost_analysis()``: XLA's cost analysis (and a flat text
+scan) counts a ``while`` body ONCE, but our models execute the repeats
+scan ``n_repeats`` times, microbatch loops ``u`` times, attention chunk
+loops ``S/chunk`` times. Two complementary sources fix this:
+
+1. **Collective term** — parsed from the compiled HLO with loop
+   multiplication: each ``while`` body's collective bytes are scaled by
+   the trip bound recovered from its condition computation (scan loops
+   compare an induction variable against a constant). This is exact for
+   lax.scan-shaped loops, which is all this codebase emits.
+
+2. **Compute/memory terms** — analytic per-(arch x shape) models built
+   from the same layer chains the DSE prices (`models.extract`),
+   documented formula-by-formula below, validated against
+   ``cost_analysis()`` on unrolled smoke configs (tests).
+
+Hardware constants per the assignment: 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from repro.configs.base import ArchConfig
+from repro.launch.shapes import ShapeCase
+from repro.models.extract import arch_workload
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 0.5, "u4": 0.5,
+}
+_SHAPE_RE = re.compile(
+    r"\b(f64|f32|f16|bf16|f8e4m3|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|s4|u4)"
+    r"\[([0-9,]*)\]"
+)
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(r"while\(.*?\), condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"\bcall\(.*?\), to_apply=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(text):
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        m = _HEADER_RE.match(line)
+        if m and "{" in line:
+            name = "ENTRY" if m.group(1) else m.group(2)
+            current = name
+            comps[current] = []
+            continue
+        if current is not None:
+            if line.strip() == "}":
+                current = None
+            else:
+                comps[current].append(line)
+    return comps
+
+
+def _direct_collectives(lines: list[str]) -> dict[str, float]:
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in lines:
+        if "=" not in line:
+            continue
+        _, rhs = line.split("=", 1)
+        for kind in _COLLECTIVES:
+            idx = rhs.find(kind + "(")
+            if idx < 0:
+                idx = rhs.find(kind + "-start(")
+            if idx < 0:
+                continue
+            head = rhs[:idx]
+            if "fusion(" in head or "custom-call(" in head:
+                continue
+            out[kind] += _shape_bytes(head)
+            out["count"] += 1
+            break
+    return out
+
+
+def _trip_bound(cond_lines: list[str]) -> int:
+    """Max s32 constant in the condition — the scan trip count."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_bytes_hlo(hlo: str) -> dict[str, float]:
+    """Loop-aware per-device collective bytes by kind (see module doc)."""
+    comps = _split_computations(hlo)
+    conds: dict[str, int] = {
+        name: _trip_bound(lines) for name, lines in comps.items()
+    }
+    memo: dict[str, dict[str, float]] = {}
+
+    def total(name: str, stack=()) -> dict[str, float]:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return {k: 0.0 for k in (*_COLLECTIVES, "count")}
+        lines = comps[name]
+        acc = _direct_collectives(lines)
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = conds.get(cond, 1)
+                sub = total(body, stack + (name,))
+                for k in acc:
+                    acc[k] += trips * sub[k]
+                continue
+            cm = _CALL_RE.search(line)
+            if cm:
+                sub = total(cm.group(1), stack + (name,))
+                for k in acc:
+                    acc[k] += sub[k]
+        memo[name] = acc
+        return acc
+
+    entry = "ENTRY" if "ENTRY" in comps else next(iter(comps), None)
+    if entry is None:
+        return {k: 0.0 for k in (*_COLLECTIVES, "count", "total")}
+    acc = dict(total(entry))
+    acc["total"] = sum(acc[k] for k in _COLLECTIVES)
+    return acc
+
+
+def collective_breakdown(hlo: str, top: int = 12) -> list[dict]:
+    """Top collective contributors: (kind, result shape, trips, bytes).
+
+    Same loop-trip accounting as `collective_bytes_hlo`, itemized — the
+    §Perf hypothesis tool ("which collective do I attack first?").
+    """
+    comps = _split_computations(hlo)
+    conds = {name: _trip_bound(lines) for name, lines in comps.items()}
+    items: list[dict] = []
+
+    def walk(name: str, mult: int, stack=()):
+        if name in stack or name not in comps:
+            return
+        for line in comps[name]:
+            if "=" in line:
+                _, rhs = line.split("=", 1)
+                for kind in _COLLECTIVES:
+                    idx = rhs.find(kind + "(")
+                    if idx < 0:
+                        idx = rhs.find(kind + "-start(")
+                    if idx < 0:
+                        continue
+                    head = rhs[:idx]
+                    if "fusion(" in head or "custom-call(" in head:
+                        continue
+                    b = _shape_bytes(head)
+                    shape = head.strip().split()[-1] if head.strip() else "?"
+                    items.append(
+                        {
+                            "kind": kind,
+                            "shape": shape[:60],
+                            "trips": mult,
+                            "bytes": b * mult,
+                            "comp": name[:40],
+                        }
+                    )
+                    break
+                wm = _WHILE_RE.search(line)
+                if wm:
+                    walk(wm.group(2), mult * conds.get(wm.group(1), 1),
+                         stack + (name,))
+                    continue
+                cm = _CALL_RE.search(line)
+                if cm:
+                    walk(cm.group(1), mult, stack + (name,))
+
+    entry = "ENTRY" if "ENTRY" in comps else next(iter(comps), None)
+    if entry:
+        walk(entry, 1)
+    items.sort(key=lambda d: -d["bytes"])
+    return items[:top]
+
+
+# ---------------------------------------------------------------------------
+# analytic compute / memory
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class CostModel:
+    """Per-STEP global costs (divide by chips for per-device)."""
+
+    flops: float  # executed FLOPs incl. backward + remat recompute
+    hbm_bytes: float  # HBM traffic
+    model_flops: float  # 6 N D (dense) / 6 N_active D (MoE)
+
+    def useful_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+
+def analytic_cost(cfg: ArchConfig, case: ShapeCase) -> CostModel:
+    """Formulas (documented in EXPERIMENTS.md §Roofline):
+
+    - fwd FLOPs F = sum of layer-chain GEMM/attention/scan FLOPs
+      (`models.extract`, mode-matched) + LM head.
+    - train: blocks cost ``4F`` (fwd + 2x bwd + full-remat recompute,
+      `nothing_saveable`), head/CE ``3F_head`` (+1 remat) -> we charge
+      ``4F`` uniformly (slight over-estimate on the head, <2%).
+    - prefill: ``F``; decode: ``F`` with decode-mode chains (one token
+      against the case's cache).
+    - HBM bytes: weight streams (every pass reads all weights once:
+      3 passes train with microbatching re-reads, 1 pass inference) +
+      layer-chain activation/cache traffic from the same extractor +
+      optimizer read/write (16 B/param: fp32 m,v read+write) + param
+      read/write (2+2 B) on train.
+    - MODEL_FLOPS: 6 N D with N(_active) from `ArchConfig.param_counts`
+      and D = tokens processed (train/prefill: B*S; decode: B).
+    """
+    mode = {"train": "train", "prefill": "prefill", "decode": "decode"}[
+        case.kind
+    ]
+    wl = arch_workload(cfg, case.global_batch, case.seq_len, mode=mode)
+    chain_flops = wl.total_flops()
+    chain_bytes = wl.total_bytes()
+    counts = cfg.param_counts()
+    n_params, n_active = counts["total"], counts["active"]
+
+    if case.kind == "train":
+        # extract's train mode already multiplies by 3 (fwd+bwd);
+        # remat recompute adds one more forward -> 4/3 of that.
+        flops = chain_flops * (4.0 / 3.0)
+        weight_stream = 2.0 * n_params * 3.0  # bf16, fwd+bwd+remat passes
+        opt_traffic = n_params * (16.0 + 4.0)  # m,v fp32 rw + param rw bf16
+        hbm = chain_bytes * (4.0 / 3.0) + weight_stream + opt_traffic
+        tokens = case.global_batch * case.seq_len
+    elif case.kind == "prefill":
+        flops = chain_flops
+        hbm = chain_bytes + 2.0 * n_active
+        tokens = case.global_batch * case.seq_len
+    else:  # decode
+        flops = chain_flops
+        hbm = chain_bytes + 2.0 * n_active
+        tokens = case.global_batch
+    # 6 N D counts fwd+bwd (2+4); inference runs the forward only -> 2 N D
+    factor = 6.0 if case.kind == "train" else 2.0
+    model_flops = factor * n_active * tokens
+    return CostModel(flops=flops, hbm_bytes=hbm, model_flops=model_flops)
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    useful_ratio: float
+    roofline_fraction: float  # compute_s / max(all terms)
+
+    def as_dict(self):
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline(
+    cfg: ArchConfig,
+    case: ShapeCase,
+    chips: int,
+    collective_bytes_per_device: float,
+) -> RooflineTerms:
+    cost = analytic_cost(cfg, case)
+    compute_s = cost.flops / (chips * PEAK_FLOPS)
+    memory_s = cost.hbm_bytes / (chips * HBM_BW)
+    collective_s = collective_bytes_per_device / ICI_BW
+    terms = {
+        "compute": compute_s,
+        "memory": memory_s,
+        "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    frac = compute_s / bound if bound > 0 else 0.0
+    return RooflineTerms(
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        useful_ratio=cost.useful_ratio(),
+        roofline_fraction=frac,
+    )

@@ -1,0 +1,94 @@
+"""Assigned input-shape sets and `input_specs` (ShapeDtypeStruct stand-ins).
+
+Per the assignment brief, every LM architecture is exercised on:
+
+- ``train_4k``     seq 4,096   x global batch 256   (training)
+- ``prefill_32k``  seq 32,768  x global batch 32    (inference prefill)
+- ``decode_32k``   seq 32,768  x global batch 128   (decode: 1 new token
+                   against a 32k KV cache / state)
+- ``long_500k``    seq 524,288 x global batch 1     (long-context decode;
+                   sub-quadratic archs only: jamba, rwkv6)
+
+`input_specs` returns weak-type-correct ShapeDtypeStructs only — no
+device allocation — so the 512-device dry-run lowers full-size configs
+on a CPU container.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+
+
+@dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ArchConfig) -> list[str]:
+    """Shape cases this arch runs; long_500k only for sub-quadratic."""
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.run_long_context:
+        names.append("long_500k")
+    return names
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, case: ShapeCase, kv_quant: bool = False) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this case."""
+    B, S = case.global_batch, case.seq_len
+    if case.kind == "train":
+        if cfg.frontend == "none":
+            batch = {"tokens": _sds((B, S), jnp.int32)}
+        else:
+            batch = {"embeds": _sds((B, S, cfg.frontend_dim), jnp.bfloat16)}
+        batch["labels"] = _sds((B, S), jnp.int32)
+        batch["mask"] = _sds((B, S), jnp.float32)
+        return {"batch": batch}
+    if case.kind == "prefill":
+        if cfg.frontend == "none":
+            batch = {"tokens": _sds((B, S), jnp.int32)}
+        else:
+            batch = {"embeds": _sds((B, S, cfg.frontend_dim), jnp.bfloat16)}
+        return {"batch": batch}
+    # decode: one new token against an S-long cache
+    if cfg.frontend == "none":
+        inputs = {"tokens": _sds((B,), jnp.int32)}
+    else:
+        inputs = {"embeds": _sds((B, cfg.frontend_dim), jnp.bfloat16)}
+    cache = jax.tree_util.tree_map(
+        lambda sd: _sds(*sd),
+        lm.cache_spec(cfg, B, S, kv_quant=kv_quant),
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple),
+    )
+    return {"inputs": inputs, "cache": cache, "pos": _sds((B,), jnp.int32)}
+
+
+def params_spec(cfg: ArchConfig):
+    """ShapeDtypeStruct tree of the parameters (via eval_shape)."""
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+
+
+def opt_spec(params_tree):
+    from repro.optim import adamw_init
+
+    return jax.eval_shape(adamw_init, params_tree)

@@ -1,0 +1,178 @@
+"""Sharding rules: parameter / optimizer / batch / cache partition specs.
+
+Scheme (single pod: mesh ``(data=16, model=16)``; multi-pod adds a
+leading ``pod`` axis used for cross-pod DP):
+
+- **FSDP on ``data``**: every weight matrix shards its *input* feature
+  dim over ``data``; XLA all-gathers per layer inside the scan body.
+- **TP on ``model``** (Megatron column/row): projections in
+  (``wq/wk/wv/w_in/w_gate``) shard the output dim on ``model``;
+  projections out (``wo/w_out/out_proj``) shard the input dim on
+  ``model`` so the pair needs one reduce per block.
+- **EP on ``model``** for MoE expert banks (expert dim sharded; GSPMD
+  pads non-divisible expert counts, tracked as a §Perf lever).
+- vectors / norms / small tensors are replicated.
+- Stacked block params carry a leading ``n_repeats`` scan axis that is
+  never sharded.
+
+Rules are name-based over the param-tree paths so the same function
+covers all 10 architectures (attn, mamba, rwkv, moe leaves).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes
+
+# param names that are row-parallel (input dim on `model`)
+_ROW_PARALLEL = {"wo", "w_out", "out_proj"}
+# param names that are column-parallel (output dim on `model`)
+_COL_PARALLEL = {
+    "wq", "wk", "wv", "wg", "wr", "w_in", "w_gate", "in_proj",
+    "frontend_proj", "lm_head",
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def param_spec(path, leaf, model_size: int | None = None) -> P:
+    """PartitionSpec for one parameter leaf (see module docstring).
+
+    ``model_size`` enables divisibility-aware choices (explicit
+    in_shardings reject padding): expert banks use EP when the expert
+    count divides the model axis, else tensor-parallel over d_ff
+    (granite's 40 experts on a 16-way axis).
+    """
+    name = _leaf_name(path)
+    in_block = any(
+        hasattr(e, "key") and str(e.key) == "blocks" for e in path
+    )
+    nd = leaf.ndim
+
+    if name == "embed":  # (vocab, d): d on model, vocab replicated.
+        # Vocab-sharding the table forces GSPMD's replicated-scatter
+        # fallback on the gather gradient (a full fp32 (V, d) buffer +
+        # all-reduce per microbatch); d-sharding keeps both the lookup
+        # and its scatter-add grad shard-local at ~V*d/model bytes.
+        return P(None, "model")
+
+    if name == "router":  # (rep, d, E): replicate E (tiny, fp32)
+        return P(None, "data", None)
+
+    if in_block and nd == 4:  # MoE expert bank (rep, E, d_in, d_out)
+        n_experts = leaf.shape[1]
+        ep_ok = model_size is None or n_experts % model_size == 0
+        if name in _ROW_PARALLEL:
+            return P(None, "model", None, "data") if ep_ok else P(
+                None, None, "model", "data"
+            )
+        return P(None, "model", "data", None) if ep_ok else P(
+            None, None, "data", "model"
+        )
+
+    if in_block and nd == 3:  # stacked matrix (rep, in, out)
+        if name in _ROW_PARALLEL:
+            return P(None, "model", "data")
+        if name in _COL_PARALLEL:
+            return P(None, "data", "model")
+        return P(None, None, None)  # conv_w, lora, A_log, u, ...
+
+    if not in_block and nd == 2:  # top-level matrix (in, out)
+        if name in _COL_PARALLEL:
+            return P("data", "model")
+        return P(None, None)
+
+    return P(*([None] * nd))  # vectors, scalars, biases, norms
+
+
+def shardings_for_tree(mesh, tree):
+    """NamedSharding pytree matching ``tree`` via `param_spec` rules."""
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model")
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf, model_size)
+        ),
+        tree,
+    )
+
+
+def opt_state_shardings(mesh, param_shardings):
+    """AdamW state: moments mirror the params; step is replicated."""
+    return {
+        "m": param_shardings,
+        "v": param_shardings,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_shardings(mesh, batch_tree):
+    """Batch dict: leading dim over the batch axes, rest replicated."""
+    ba = batch_axes(mesh)
+
+    def spec(leaf):
+        return NamedSharding(mesh, P(ba, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(spec, batch_tree)
+
+
+def _cache_leaf_spec(mesh, name: str, leaf, *, seq_sharded: bool) -> P:
+    """Decode-cache leaf specs. Leaves carry a leading repeats axis.
+
+    KV caches shard the *sequence* dim (flash-decode style): explicit
+    in/out shardings must divide exactly (no GSPMD padding), and kv-head
+    counts (8/24/40) do not divide model=16 while every cache length
+    does. The decode softmax/readout over the sharded S axis becomes a
+    small partial-stat all-reduce.
+
+    ``seq_sharded=True`` (long_500k, batch=1): the batch axes are
+    unusable, so S shards over the whole (data x model) product and
+    channel-state dims over all divisible axes.
+    """
+    ba = batch_axes(mesh)
+    nd = leaf.ndim
+    all_ax = tuple(mesh.axis_names)  # e.g. ("pod","data","model")
+    if name in ("k", "v"):  # (rep, B, kv, S, hd)
+        if seq_sharded:
+            return P(None, None, None, all_ax, None)
+        return P(None, ba, None, "model", None)
+    if name in ("k_scale", "v_scale"):  # (rep, B, kv, S)
+        if seq_sharded:
+            return P(None, None, None, all_ax)
+        return P(None, ba, None, "model")
+    if name == "ssm":  # (rep, B, di, ns)
+        if seq_sharded:
+            return P(None, None, all_ax, None)
+        return P(None, ba, "model", None)
+    if name == "conv":  # (rep, B, dc-1, di)
+        if seq_sharded:
+            return P(None, None, None, all_ax)
+        return P(None, ba, None, "model")
+    if name == "S":  # rwkv state (rep, B, H, hd, hd)
+        if seq_sharded:
+            return P(None, None, "model", None, None)
+        return P(None, ba, "model", None, None)
+    if name in ("tmix_last", "cmix_last"):  # (rep, B, d)
+        if seq_sharded:
+            return P(None, None, "model")
+        return P(None, ba, None)
+    return P(*([None] * nd))
+
+
+def cache_shardings(mesh, cache_tree, *, seq_sharded: bool = False):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh,
+            _cache_leaf_spec(mesh, _leaf_name(path), leaf, seq_sharded=seq_sharded),
+        ),
+        cache_tree,
+    )
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,287 @@
+"""Jitted step functions: train_step / prefill_step / serve_step.
+
+These are what the dry-run lowers and what the drivers run. Each builder
+returns ``(fn, in_shardings, out_shardings, arg_specs)`` so `dryrun.py`,
+`train.py` and the tests share one definition.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import batch_axes
+from repro.launch.shapes import ShapeCase, input_specs, opt_spec, params_spec
+from repro.launch.sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    replicated,
+    shardings_for_tree,
+)
+from repro.models import lm
+from repro.optim import AdamWConfig, adamw_update
+
+
+def activation_policy(
+    mesh,
+    *,
+    batch_sharded: bool = True,
+    seq_parallel: bool = False,
+    n_experts: int = 0,
+) -> lm.ShardingPolicy:
+    """Pin activations batch-over-data and CE logits vocab-over-model.
+
+    ``seq_parallel=True`` (train/prefill, S >> 1) additionally shards
+    the *sequence* dim over ``model`` at block boundaries (Megatron-SP):
+    the per-repeat carry stash the backward pass keeps — the dominant
+    live buffer under scan-over-layers — shrinks by the model-axis
+    size, and norms compute on 1/model of the tokens. GSPMD inserts the
+    all-gather at the first block matmul and the reduce-scatter after
+    the output projection.
+
+    ``batch_sharded=False`` (long_500k, batch=1) leaves activations
+    unpinned — the parallel axis there is the cache sequence dim.
+    """
+    if mesh is None or not batch_sharded:
+        return lm.NO_POLICY
+    ba = batch_axes(mesh)
+    P = jax.sharding.PartitionSpec
+    NS = jax.sharding.NamedSharding
+    seq_axis = "model" if seq_parallel else None
+    groups = 1
+    for a in ba:
+        groups *= mesh.shape[a]
+    model_size = mesh.shape["model"]
+    # EP dispatch (experts over `model`) only when the expert count
+    # divides the axis; otherwise the expert GEMMs run tensor-parallel
+    # over d_ff (matching param_spec's fallback) and the dispatch stays
+    # batch-sharded only.
+    ep_ok = n_experts == 0 or n_experts % model_size == 0
+    # E-leading dispatch layout (see layers.moe_capacity)
+    dispatch = P("model", ba, None, None) if ep_ok else P(None, ba, None, None)
+    return lm.ShardingPolicy(
+        act=NS(mesh, P(ba, seq_axis, None)),
+        logits=NS(mesh, P(ba, None, "model")),
+        moe_groups=groups,
+        moe_dispatch=NS(mesh, dispatch),
+        heads=NS(mesh, P(ba, None, "model", None)),
+        channels=NS(mesh, P(ba, None, "model")),
+        gathered=NS(mesh, P(ba, None, None)),
+    )
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    remat: bool = True,
+    policy: lm.ShardingPolicy = lm.NO_POLICY,
+    micro_batches: int = 1,
+    grad_shardings=None,
+):
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``micro_batches > 1`` runs gradient accumulation: the global batch
+    is split on the batch axis and scanned, accumulating fp32 grads.
+    Every activation-sized buffer (the per-repeat carry stash the
+    backward keeps, attention workspaces, CE chunks) scales down by the
+    microbatch count at the cost of one params-sized fp32 accumulator —
+    the standard memory/throughput knob for the biggest assigned archs.
+    """
+
+    def grad_fn(params, mb):
+        out, g = jax.value_and_grad(
+            lambda p: lm.loss_fn(p, cfg, mb, remat=remat, policy=policy),
+            has_aux=True,
+        )(params)
+        if grad_shardings is not None:
+            # pin per-microbatch grads to the parameter layout: the
+            # cross-data reduction becomes a reduce-scatter into the
+            # FSDP shard instead of a full all-reduce (ZeRO-2 flavour)
+            g = jax.lax.with_sharding_constraint(g, grad_shardings)
+        return out, g
+
+    def train_step(params, opt_state, batch):
+        if micro_batches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(leaf):
+                b = leaf.shape[0]
+                return leaf.reshape(micro_batches, b // micro_batches,
+                                    *leaf.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+            acc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(acc, mb):
+                (l, m), g = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, gi: a + gi.astype(jnp.float32), acc, g
+                )
+                return acc, (l, m)
+
+            grads, (losses, ms) = jax.lax.scan(body, acc0, micro)
+            grads = jax.tree_util.tree_map(
+                lambda g: g / micro_batches, grads
+            )
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+#: target upper bound on the dominant per-device live activation set
+_STASH_BUDGET_BYTES = (1 << 30) * 3 // 4
+
+
+def auto_micro_batches(cfg: ArchConfig, case: ShapeCase, mesh) -> int:
+    """Smallest power-of-two divisor of the per-device batch keeping the
+    dominant live buffers under budget. Model (all scale ~1/u):
+
+    - per-repeat carry stash the backward keeps:
+      ``n_layers x B_loc x S/model x d x 2B``;
+    - MoE combine output (fp32, full-S per data shard):
+      ``T_loc x d x 4B``;
+    - MoE dispatch (G, E, C, d) bf16, /model when expert-parallel.
+    """
+    n_data = 1
+    for a in batch_axes(mesh):
+        n_data *= mesh.shape[a]
+    model = mesh.shape.get("model", 1)
+    b_loc = max(1, case.global_batch // n_data)
+    s_loc = max(1, case.seq_len // model)
+    live = cfg.n_layers * b_loc * s_loc * cfg.d_model * 2
+    if cfg.n_experts:
+        t_loc = b_loc * case.seq_len
+        live += t_loc * cfg.d_model * 4  # fp32 combine
+        disp = t_loc * cfg.top_k * cfg.capacity_factor * cfg.d_model * 2
+        if cfg.n_experts % model == 0:
+            disp /= model  # expert-parallel dispatch is model-sharded
+        live += disp
+    micro = 1
+    while micro < b_loc and live / micro > _STASH_BUDGET_BYTES:
+        micro *= 2
+    while b_loc % micro:
+        micro //= 2
+    return max(1, micro)
+
+
+def make_prefill_step(
+    cfg: ArchConfig,
+    cache_len: int,
+    *,
+    remat: bool = True,
+    policy: lm.ShardingPolicy = lm.NO_POLICY,
+):
+    """(params, batch) -> (last-token logits, cache)."""
+
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch, cache_len, remat=remat, policy=policy)
+
+    return prefill_step
+
+
+def make_serve_step(
+    cfg: ArchConfig,
+    *,
+    policy: lm.ShardingPolicy = lm.NO_POLICY,
+    kv_quant: bool = False,
+):
+    """(params, cache, inputs, pos) -> (logits, cache)."""
+
+    def serve_step(params, cache, inputs, pos):
+        return lm.decode_step(
+            params, cfg, cache, inputs, pos, policy=policy, kv_quant=kv_quant
+        )
+
+    return serve_step
+
+
+def lowerable(
+    cfg: ArchConfig,
+    case: ShapeCase,
+    mesh,
+    opt_cfg: AdamWConfig | None = None,
+    *,
+    kv_quant: bool = False,
+):
+    """Build (jitted_fn, example_args) for one (arch x shape) cell.
+
+    Args are ShapeDtypeStructs; call ``.lower(*args)`` on the result.
+    ``kv_quant`` switches the decode cache to int8+scales (§Perf).
+    """
+    opt_cfg = opt_cfg or AdamWConfig()
+    p_spec = params_spec(cfg)
+    p_shard = shardings_for_tree(mesh, p_spec)
+    specs = input_specs(cfg, case, kv_quant=kv_quant and case.kind == "decode")
+
+    if case.kind == "train":
+        o_spec = opt_spec(p_spec)
+        o_shard = opt_state_shardings(mesh, p_shard)
+        b_shard = batch_shardings(mesh, specs["batch"])
+        policy = activation_policy(
+            mesh, seq_parallel=True, n_experts=cfg.n_experts
+        )
+        micro = auto_micro_batches(cfg, case, mesh)
+        fn = jax.jit(
+            make_train_step(
+                cfg, opt_cfg, policy=policy, micro_batches=micro,
+                grad_shardings=p_shard,
+            ),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(p_shard, o_shard, replicated(mesh)),
+            donate_argnums=(0, 1),
+        )
+        return fn, (p_spec, o_spec, specs["batch"])
+
+    if case.kind == "prefill":
+        b_shard = batch_shardings(mesh, specs["batch"])
+        policy = activation_policy(
+            mesh, seq_parallel=True, n_experts=cfg.n_experts
+        )
+        step = make_prefill_step(cfg, case.seq_len, policy=policy)
+        cache_sd = jax.eval_shape(step, p_spec, specs["batch"])[1]
+        c_shard = cache_shardings(mesh, cache_sd, seq_sharded=False)
+        logits_shard = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(batch_axes(mesh), None)
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(logits_shard, c_shard),
+        )
+        return fn, (p_spec, specs["batch"])
+
+    # decode
+    seq_sharded = case.global_batch == 1
+    c_shard = cache_shardings(mesh, specs["cache"], seq_sharded=seq_sharded)
+    policy = activation_policy(
+        mesh, batch_sharded=not seq_sharded, n_experts=cfg.n_experts
+    )
+    if seq_sharded:
+        i_shard = jax.tree_util.tree_map(lambda _: replicated(mesh), specs["inputs"])
+        pos_shard = replicated(mesh)
+        logits_shard = replicated(mesh)
+    else:
+        i_shard = batch_shardings(mesh, specs["inputs"])
+        pos_shard = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(batch_axes(mesh))
+        )
+        logits_shard = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec(batch_axes(mesh), None)
+        )
+    fn = jax.jit(
+        make_serve_step(cfg, policy=policy, kv_quant=kv_quant),
+        in_shardings=(p_shard, c_shard, i_shard, pos_shard),
+        out_shardings=(logits_shard, c_shard),
+        donate_argnums=(1,),
+    )
+    return fn, (p_spec, specs["cache"], specs["inputs"], specs["pos"])

@@ -1,0 +1,496 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention, MLP, MoE.
+
+Conventions
+-----------
+- activations ``(B, S, d)`` bf16; reductions (norms, softmax, router)
+  in fp32.
+- attention is causal; decode path consumes a KV cache and one new
+  token per sequence (``q_len == 1``).
+- MoE is sort-based dropless: per top-k slot, tokens are permuted into
+  expert order and pushed through ``jax.lax.ragged_dot`` (grouped GEMM),
+  so FLOPs scale with *active* parameters, and the expert dimension
+  never materializes a (tokens, experts, capacity) dispatch tensor.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import dense_init, ones, zeros
+
+
+# ---------------------------------------------------------------------------
+# norms & rope
+# ---------------------------------------------------------------------------
+def rms_norm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA)
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg, dtype=jnp.bfloat16):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd, dtype),
+        "wk": dense_init(ks[1], d, kv * hd, dtype),
+        "wv": dense_init(ks[2], d, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d, dtype),
+        "norm": ones((d,), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((h * hd,), dtype)
+        p["bk"] = zeros((kv * hd,), dtype)
+        p["bv"] = zeros((kv * hd,), dtype)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q.reshape(B, S, h, hd), positions, cfg.rope_theta)
+    k = apply_rope(k.reshape(B, S, kv, hd), positions, cfg.rope_theta)
+    v = v.reshape(B, S, kv, hd)
+    return q, k, v
+
+
+#: above this sequence length the causal attention switches to the
+#: q-chunked (flash-style) path so scores never materialize (S, S).
+ATTN_CHUNK = 1024
+
+
+def _expand_kv(t, groups: int):
+    """(B, S, kv, hd) -> (B, S, kv*groups, hd) by head repetition."""
+    if groups == 1:
+        return t
+    B, S, kv, hd = t.shape
+    return jnp.broadcast_to(
+        t[:, :, :, None, :], (B, S, kv, groups, hd)
+    ).reshape(B, S, kv * groups, hd)
+
+
+def _attn_full(q, k, v, positions, scale):
+    """Materialized causal attention (short sequences). q/k/v: (B,S,h,hd)."""
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * scale
+    causal = positions[:, None, :, None] >= positions[:, None, None, :]
+    scores = jnp.where(causal, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, v)
+
+
+def _attn_chunked(q, k, v, positions, scale, chunk: int):
+    """Flash-style attention: scan over query chunks, keys stay whole.
+
+    Per-step live memory is (B, h, chunk, S) instead of (B, h, S, S);
+    the Pallas flash kernel (`repro.kernels.flash_attention`) is the TPU
+    realization of the same blocking. The chunk body is remat'd so the
+    backward pass recomputes the fp32 score tile instead of stashing
+    (n_chunks, B, h, chunk, S) — the score stash, not the weights, is
+    what blows past HBM at 32k prefill otherwise.
+    """
+    B, S, h, hd = q.shape
+    n_chunks = S // chunk
+
+    qc = jnp.moveaxis(q.reshape(B, n_chunks, chunk, h, hd), 1, 0)
+    pc = jnp.moveaxis(positions.reshape(B, n_chunks, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(_, inp):
+        q_i, p_i = inp  # (B, chunk, h, hd), (B, chunk)
+        s = jnp.einsum("bqhd,bshd->bhqs", q_i, k).astype(jnp.float32) * scale
+        causal = p_i[:, None, :, None] >= positions[:, None, None, :]
+        s = jnp.where(causal, s, -1e30)
+        o = jnp.einsum(
+            "bhqs,bshd->bqhd", jax.nn.softmax(s, axis=-1).astype(q.dtype), v
+        )
+        return None, o
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, h, hd)
+
+
+def attention(p, x, cfg, positions, head_pin=None, entry_pin=None):
+    """Causal self-attention over the full sequence (train/prefill)."""
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    if entry_pin is not None:
+        xn = entry_pin(xn)
+    q, k, v = _qkv(p, xn, cfg, positions)
+    k = _expand_kv(k, h // kv)
+    v = _expand_kv(v, h // kv)
+    if head_pin is not None:
+        q, k, v = head_pin(q), head_pin(k), head_pin(v)
+    scale = hd**-0.5
+    if S <= ATTN_CHUNK:
+        out = _attn_full(q, k, v, positions, scale)
+    else:
+        chunk = ATTN_CHUNK
+        while S % chunk:  # degrade gracefully for odd smoke shapes
+            chunk //= 2
+        out = _attn_chunked(q, k, v, positions, scale, chunk)
+    out = out.reshape(B, S, h * hd)
+    return x + out @ p["wo"]
+
+
+def attention_prefill(p, x, cfg, positions, cache_len: int, head_pin=None,
+                      entry_pin=None):
+    """Full-sequence attention that also emits the KV cache.
+
+    Returns (out, {"k","v"}) with cache layout (B, kv, cache_len, hd),
+    zero-padded past S — ready for `attention_decode` to append to.
+    """
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    if entry_pin is not None:
+        xn = entry_pin(xn)
+    q, k, v = _qkv(p, xn, cfg, positions)
+    ke = _expand_kv(k, h // kv)
+    ve = _expand_kv(v, h // kv)
+    if head_pin is not None:
+        q, ke, ve = head_pin(q), head_pin(ke), head_pin(ve)
+    scale = hd**-0.5
+    if S <= ATTN_CHUNK:
+        out = _attn_full(q, ke, ve, positions, scale)
+    else:
+        chunk = ATTN_CHUNK
+        while S % chunk:
+            chunk //= 2
+        out = _attn_chunked(q, ke, ve, positions, scale, chunk)
+    out = out.reshape(B, S, h * hd)
+    pad = ((0, 0), (0, 0), (0, cache_len - S), (0, 0))
+    cache = {
+        "k": jnp.pad(jnp.swapaxes(k, 1, 2), pad),
+        "v": jnp.pad(jnp.swapaxes(v, 1, 2), pad),
+    }
+    return x + out @ p["wo"], cache
+
+
+def quantize_kv(k, axis=-1):
+    """Symmetric int8 over ``axis``; returns (q8, scale)."""
+    scale = jnp.max(jnp.abs(k.astype(jnp.float32)), axis=axis) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(
+        jnp.round(k.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def attention_decode_q8(p, x, cfg, cache, pos):
+    """Int8-KV decode step (serving perf variant).
+
+    cache: {"k","v": int8 (B, kv, S, hd), "k_scale","v_scale": bf16
+    (B, kv, S)} — per-(token, head) symmetric scales. Halves both the
+    KV HBM footprint and the decode sweep bytes vs bf16; the dequant
+    fuses into the attention einsum stream.
+    """
+    B, _, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k_new, v_new = _qkv(p, xn, cfg, pos[:, None])
+    kq, ks = quantize_kv(jnp.swapaxes(k_new, 1, 2))  # (B, kv, 1, hd)
+    vq, vs = quantize_kv(jnp.swapaxes(v_new, 1, 2))
+    S_max = cache["k"].shape[2]
+    onehot8 = jax.nn.one_hot(pos, S_max, dtype=jnp.int8)  # (B, S)
+    onehot_s = jax.nn.one_hot(pos, S_max, dtype=jnp.bfloat16)
+    k_upd = cache["k"] + onehot8[:, None, :, None] * kq
+    v_upd = cache["v"] + onehot8[:, None, :, None] * vq
+    ks_upd = cache["k_scale"] + onehot_s[:, None, :] * ks
+    vs_upd = cache["v_scale"] + onehot_s[:, None, :] * vs
+    groups = h // kv
+    qr = q.reshape(B, kv, groups, hd)
+    # scales are per (token, head), so they commute with the hd/S
+    # contractions: apply them to the 1-D score/prob side instead of
+    # dequantizing the full cache (no (B,kv,S,hd) fp32 buffer exists)
+    scores = jnp.einsum(
+        "bkgh,bksh->bkgs",
+        qr.astype(jnp.bfloat16),
+        k_upd.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+    scores = scores * ks_upd.astype(jnp.float32)[:, :, None, :]
+    scores *= hd**-0.5
+    valid = jnp.arange(S_max)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = probs * vs_upd.astype(jnp.float32)[:, :, None, :]
+    out = jnp.einsum(
+        "bkgs,bksh->bkgh",
+        probs.astype(jnp.bfloat16),
+        v_upd.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    out = out.reshape(B, 1, h * hd)
+    new_cache = {
+        "k": k_upd, "v": v_upd, "k_scale": ks_upd, "v_scale": vs_upd,
+    }
+    return x + out @ p["wo"], new_cache
+
+
+def attention_decode(p, x, cfg, cache, pos):
+    """One-token decode. cache: {'k','v': (B, kv, S_max, hd)}, pos (B,)."""
+    B, _, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k_new, v_new = _qkv(p, xn, cfg, pos[:, None])
+    # write the new kv at position `pos` (dynamic per-batch index)
+    S_max = cache["k"].shape[2]
+    onehot = jax.nn.one_hot(pos, S_max, dtype=cache["k"].dtype)  # (B, S_max)
+    k_upd = cache["k"] + onehot[:, None, :, None] * jnp.swapaxes(k_new, 1, 2)
+    v_upd = cache["v"] + onehot[:, None, :, None] * jnp.swapaxes(v_new, 1, 2)
+    groups = h // kv
+    q = q.reshape(B, kv, groups, hd)  # q_len == 1 squeezed
+    scores = jnp.einsum("bkgh,bksh->bkgs", q, k_upd).astype(jnp.float32)
+    scores *= hd**-0.5
+    valid = jnp.arange(S_max)[None, :] <= pos[:, None]  # (B, S_max)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgs,bksh->bkgh", probs, v_upd).reshape(B, 1, h * hd)
+    return x + out @ p["wo"], {"k": k_upd, "v": v_upd}
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg, dtype=jnp.bfloat16):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], d, f, dtype),
+        "w_out": dense_init(ks[1], f, d, dtype),
+        "norm": ones((d,), dtype),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d, f, dtype)
+    return p
+
+
+def mlp(p, x, cfg, hidden_pin=None, entry_pin=None):
+    """``hidden_pin`` pins (B, S, f) with f over `model`, forcing the
+    Megatron column/row-parallel schedule. Without it, GSPMD facing
+    sequence-parallel activations gathers the *weights* to fully
+    replicated per layer instead (observed: fp32 full-(d,f) all-gathers
+    plus fp32 full weight-grad all-reduces per layer per microbatch)."""
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    if entry_pin is not None:
+        xn = entry_pin(xn)
+    if cfg.mlp_type == "swiglu":
+        gate = xn @ p["w_gate"]
+        up = xn @ p["w_in"]
+        if hidden_pin is not None:
+            gate, up = hidden_pin(gate), hidden_pin(up)
+        hmid = jax.nn.silu(gate) * up
+    else:
+        up = xn @ p["w_in"]
+        if hidden_pin is not None:
+            up = hidden_pin(up)
+        hmid = jax.nn.gelu(up)
+    return x + hmid @ p["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# MoE (sort + ragged_dot, dropless)
+# ---------------------------------------------------------------------------
+def moe_init(key, cfg, dtype=jnp.bfloat16):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    e_store = max(e, cfg.expert_pad_to or 0)
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+
+    def expert_mat(k, d_in, d_out):
+        w = jax.random.truncated_normal(
+            k, -2.0, 2.0, (e_store, d_in, d_out), jnp.float32
+        )
+        return (w / jnp.sqrt(d_in)).astype(dtype)
+
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_in": expert_mat(ks[1], d, f),
+        "w_out": expert_mat(ks[2], f, d),
+        "norm": ones((d,), dtype),
+    }
+    if cfg.mlp_type == "swiglu":
+        p["w_gate"] = expert_mat(ks[3], d, f)
+    del scale
+    return p
+
+
+def moe_capacity(p, x, cfg, *, groups: int = 1, dispatch_sharding=None):
+    """GShard-style grouped capacity MoE — the SPMD production path.
+
+    Tokens are viewed as ``(G, T_g, d)`` where ``G`` equals the number
+    of data shards, so *all* routing ops (top-k selection, gathers,
+    position-in-expert bookkeeping) are shard-local; the only cross-
+    device movement is the dispatch pin to the expert-parallel layout
+    ``(G/data, E/model, C, d)`` — GSPMD lowers it to the canonical EP
+    all-to-all pair around the expert GEMMs.
+
+    Per expert, the top-``C`` tokens by gate survive (``C = ceil(T_g *
+    top_k * capacity_factor / E)``); overflow tokens are dropped for
+    that expert (keeping their residual path) — standard GShard/Switch
+    semantics. With a generous capacity factor nothing drops and the
+    result matches `moe_dropless` exactly (tested).
+    """
+    B, S, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    if T % groups:
+        raise ValueError(f"tokens {T} not divisible by moe groups {groups}")
+    tg = T // groups
+    cap = min(tg, -(-tg * k * int(100 * cfg.capacity_factor) // (e * 100)))
+
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    xg = xn.reshape(groups, tg, d)
+    logits = xg.astype(jnp.float32) @ p["router"]  # (G, T_g, E)
+    gates, experts = jax.lax.top_k(logits, k)  # (G, T_g, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    # per-token score for each expert (its gate if selected, else 0)
+    scores = jnp.zeros((groups, tg, e), jnp.float32)
+    for slot in range(k):
+        scores = jnp.maximum(
+            scores,
+            jax.nn.one_hot(experts[:, :, slot], e, dtype=jnp.float32)
+            * gates[:, :, slot : slot + 1],
+        )
+
+    # per-expert capacity selection (local to each group)
+    top_scores, top_idx = jax.lax.top_k(
+        jnp.swapaxes(scores, 1, 2), cap
+    )  # (G, E, C): token indices into T_g
+    e_store = p["w_in"].shape[0]
+    if e_store > e:  # padded experts: zero rows, never selected
+        padding = ((0, 0), (0, e_store - e), (0, 0))
+        top_scores = jnp.pad(top_scores, padding)
+        top_idx = jnp.pad(top_idx, padding)
+        e = e_store
+    sel_valid = top_scores > 0.0
+
+    # dispatch gather: (G, E, C, d), then pin to the EP layout.
+    # (A broadcast-batched (G,E,T,d) operand was tried to give the VJP
+    # scatter a batch dim — refuted: GSPMD gathered the broadcast itself
+    # per layer (dbrx +0.8 TB/step); see EXPERIMENTS.md §Perf cell 2.)
+    sel = jnp.take_along_axis(
+        xg[:, None], top_idx[..., None], axis=2
+    )  # (G, E, C, d)
+    sel = sel * sel_valid[..., None].astype(sel.dtype)
+    # E-leading layout through the expert GEMMs: dot_general wants the
+    # batch dim first, and transposing an E-sharded tensor makes GSPMD
+    # all-gather it (observed on granite: 3 x 1.2 GB per layer per
+    # microbatch); with E leading the layout is already native.
+    sel = jnp.swapaxes(sel, 0, 1)  # (E, G, C, d)
+    if dispatch_sharding is not None:
+        sel = jax.lax.with_sharding_constraint(sel, dispatch_sharding)
+
+    # expert GEMMs, batched over (E is model-, G is data-sharded)
+    h_in = jnp.einsum("egcd,edf->egcf", sel, p["w_in"])
+    if cfg.mlp_type == "swiglu":
+        h_gate = jnp.einsum("egcd,edf->egcf", sel, p["w_gate"])
+        hmid = jax.nn.silu(h_gate) * h_in
+    else:
+        hmid = jax.nn.gelu(h_in)
+    y_sel = jnp.einsum("egcf,efd->egcd", hmid, p["w_out"])  # (E, G, C, d)
+    if dispatch_sharding is not None:
+        y_sel = jax.lax.with_sharding_constraint(y_sel, dispatch_sharding)
+    y_sel = jnp.swapaxes(y_sel, 0, 1)  # back to (G, E, C, d)
+
+    # combine: gate-weight each expert output and scatter-add back to its
+    # token (local per group; invalid slots carry zero weight so their
+    # arbitrary indices are harmless)
+    weighted = y_sel.astype(jnp.float32) * (
+        top_scores * sel_valid.astype(jnp.float32)
+    )[..., None]
+    # keep E as a scatter batch dim — reshaping (E, C) together would
+    # merge a model-sharded axis with an unsharded one and force GSPMD
+    # to all-gather the dispatch tensors (observed on granite)
+    out = jax.vmap(
+        lambda u, i: jnp.zeros((tg, d), jnp.float32).at[i].add(u)
+    )(weighted, top_idx)
+    return x + out.astype(x.dtype).reshape(B, S, d)
+
+
+def moe(p, x, cfg, *, groups: int = 1, dispatch_sharding=None):
+    """Default MoE entry point — the SPMD-safe capacity formulation."""
+    return moe_capacity(
+        p, x, cfg, groups=groups, dispatch_sharding=dispatch_sharding
+    )
+
+
+def moe_dropless(p, x, cfg):
+    """Top-k MoE over tokens; per-slot permute -> grouped GEMM -> unpermute.
+
+    Exactly-dropless sort-based path (``jax.lax.ragged_dot``). Single-
+    accelerator semantics: the global argsort does not partition under
+    GSPMD, so the SPMD path uses `moe_capacity` instead; this version is
+    the semantic oracle the capacity path is tested against (they agree
+    when capacity is generous) and the host-local serving path.
+    """
+    B, S, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    flat = xn.reshape(B * S, d)
+    logits = flat.astype(jnp.float32) @ p["router"]  # (T, E)
+    gates, experts = jax.lax.top_k(logits, k)  # (T, k)
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    e_store = p["w_in"].shape[0]
+
+    def one_slot(slot_experts, slot_gates):
+        order = jnp.argsort(slot_experts)  # tokens grouped by expert
+        xs = flat[order]
+        group_sizes = jnp.bincount(slot_experts, length=e_store).astype(jnp.int32)
+        h_in = jax.lax.ragged_dot(xs, p["w_in"], group_sizes)
+        if cfg.mlp_type == "swiglu":
+            h_gate = jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)
+            hmid = jax.nn.silu(h_gate) * h_in
+        else:
+            hmid = jax.nn.gelu(h_in)
+        ys = jax.lax.ragged_dot(hmid, p["w_out"], group_sizes)
+        inv = jnp.argsort(order)
+        return ys[inv] * slot_gates[:, None].astype(ys.dtype)
+
+    out = jnp.zeros_like(flat)
+    for slot in range(k):  # unrolled: k is small (2..8)
+        out = out + one_slot(experts[:, slot], gates[:, slot])
+    return x + out.reshape(B, S, d)
+
+
+def moe_aux_loss(p, x, cfg):
+    """Load-balancing auxiliary loss (Switch-style), returned separately."""
+    B, S, d = x.shape
+    xn = rms_norm(x, p["norm"], cfg.norm_eps)
+    logits = xn.reshape(B * S, d).astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(logits, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts), axis=0)
+    imp = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

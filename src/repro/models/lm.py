@@ -1,0 +1,514 @@
+"""Decoder-LM assembler over `ArchConfig`.
+
+Every assigned architecture is a stack of residual blocks; a block =
+(mixer, ffn) with mixer in {attn, mamba, rwkv} and ffn in {dense, moe,
+rwkv_cmix}. The stack repeats `cfg.pattern()` `cfg.n_repeats` times;
+parameters (and decode caches) carry a leading repeats axis and the
+stack executes under ``jax.lax.scan`` so the HLO contains each distinct
+layer once — this keeps 512-device dry-run compiles tractable and is
+what activation-checkpointing wraps (one remat boundary per repeat).
+
+Entry points
+------------
+- ``init_params(key, cfg)``            parameter pytree
+- ``forward(params, cfg, batch)``      logits (B, S, V), train/eval
+- ``loss_fn(params, cfg, batch)``      (loss, metrics), S-chunked CE
+- ``init_cache(cfg, B, cache_len)``    decode cache pytree
+- ``prefill(params, cfg, batch, L)``   (last-token logits, cache)
+- ``decode_step(params, cfg, cache, inputs, pos)`` one-token serve step
+
+Inputs: ``batch["tokens"]`` (B, S) int32 for token models, or
+``batch["embeds"]`` (B, S, frontend_dim) for the VLM/audio stub
+frontends (the modality encoder is out of scope per the assignment —
+`input_specs` provides precomputed patch/frame embeddings).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import rwkv as R
+from repro.models import ssm as S
+from repro.models.module import dense_init, embed_init, ones, stack_init
+
+
+# ---------------------------------------------------------------------------
+# activation sharding policy
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Activation sharding constraints pinned inside the model.
+
+    GSPMD propagation from parameter/batch shardings alone can re-shard
+    the contraction dim instead of the batch (replicating activations
+    and turning FSDP all-gathers into giant partial-sum all-reduces —
+    observed on the 16x16 dry-run before these pins existed). Pinning
+    the block carry and the CE logits keeps the batch axis on ``data``
+    throughout, which is the FSDP/TP schedule the roofline assumes.
+
+    ``act``: NamedSharding for (B, S, d) activations; ``logits``: for
+    (B, chunk, vocab) CE chunks. ``None`` leaves XLA free (single-host
+    tests, serving paths that shard differently).
+
+    ``moe_groups``/``moe_dispatch`` drive the GShard-style capacity MoE:
+    groups = number of data shards (routing stays shard-local), dispatch
+    = NamedSharding of the (G, E, C, d) expert-parallel layout.
+    """
+
+    act: Any = None
+    logits: Any = None
+    moe_groups: int = 1
+    moe_dispatch: Any = None
+    #: (B, S, H, hd) pin after q/k/v projections — forces the Megatron
+    #: head-parallel attention schedule (all-gather S at entry when the
+    #: boundary is sequence-parallel, heads over `model` inside).
+    heads: Any = None
+    #: (B, S, C) channel pin for recurrent mixers: the mamba scan is
+    #: elementwise over d_inner and the rwkv scan independent per head,
+    #: so their (B, chunk, channels, state) workspaces shard over
+    #: `model` — without this pin the inner-scan stashes replicate
+    #: (observed: jamba train at 123 GB/device).
+    channels: Any = None
+    #: (B, S, d) entry pin with S *gathered* (batch-only sharding):
+    #: applied to the normed input right before the big projections, so
+    #: the matmuls consume data-sharded weights (FSDP gathers of the
+    #: small per-device shard) instead of GSPMD's fallback of gathering
+    #: the whole weight to every device in fp32.
+    gathered: Any = None
+
+    def pin_act(self, x):
+        if self.act is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.act)
+
+    def pin_logits(self, x):
+        if self.logits is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.logits)
+
+    def pin_heads(self, x):
+        if self.heads is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.heads)
+
+    def pin_channels(self, x):
+        if self.channels is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.channels)
+
+    def pin_gathered(self, x):
+        if self.gathered is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.gathered)
+
+
+NO_POLICY = ShardingPolicy()
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+_MIXER_INIT = {
+    "attn": L.attn_init,
+    "mamba": S.mamba_init,
+    "rwkv": R.rwkv_tmix_init,
+}
+_FFN_INIT = {
+    "dense": L.mlp_init,
+    "moe": L.moe_init,
+    "rwkv_cmix": R.rwkv_cmix_init,
+}
+
+
+def init_params(key, cfg: ArchConfig, dtype=jnp.bfloat16):
+    pattern = cfg.pattern()
+    n_rep = cfg.n_repeats
+    keys = jax.random.split(key, len(pattern) + 3)
+
+    blocks = []
+    for j, (mixer, ffn) in enumerate(pattern):
+        km, kf = jax.random.split(keys[j])
+        blocks.append(
+            {
+                "mixer": stack_init(
+                    partial(_MIXER_INIT[mixer], cfg=cfg, dtype=dtype), km, n_rep
+                ),
+                "ffn": stack_init(
+                    partial(_FFN_INIT[ffn], cfg=cfg, dtype=dtype), kf, n_rep
+                ),
+            }
+        )
+
+    params = {"blocks": tuple(blocks), "final_norm": ones((cfg.d_model,), dtype)}
+    if cfg.frontend == "none":
+        params["embed"] = embed_init(keys[-1], cfg.vocab, cfg.d_model, dtype)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                keys[-2], cfg.d_model, cfg.vocab, dtype
+            )
+    else:
+        params["frontend_proj"] = dense_init(
+            keys[-3], cfg.frontend_dim, cfg.d_model, dtype
+        )
+        params["lm_head"] = dense_init(keys[-2], cfg.d_model, cfg.vocab, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block dispatch
+# ---------------------------------------------------------------------------
+def _apply_block(kind, pm, pf, x, cfg, positions, policy):
+    mixer, ffn = kind
+    if mixer == "attn":
+        x = L.attention(pm, x, cfg, positions, head_pin=policy.pin_heads,
+                        entry_pin=policy.pin_gathered)
+    elif mixer == "mamba":
+        x = S.mamba(pm, x, cfg, inner_pin=policy.pin_channels,
+                    entry_pin=policy.pin_gathered)
+    else:
+        x = R.rwkv_tmix(pm, x, cfg, head_pin=policy.pin_heads,
+                        entry_pin=policy.pin_gathered)
+    if ffn == "dense":
+        x = L.mlp(pf, x, cfg, hidden_pin=policy.pin_channels,
+                  entry_pin=policy.pin_gathered)
+    elif ffn == "moe":
+        # SPMD path: GShard capacity MoE (partitions); host path (no
+        # dispatch sharding): exact dropless sort-based MoE.
+        if policy.moe_dispatch is None:
+            x = L.moe_dropless(pf, x, cfg)
+        else:
+            x = L.moe_capacity(
+                pf, x, cfg,
+                groups=policy.moe_groups,
+                dispatch_sharding=policy.moe_dispatch,
+            )
+    else:
+        x = R.rwkv_cmix(pf, x, cfg, entry_pin=policy.pin_gathered)
+    return x
+
+
+def _apply_block_prefill(kind, pm, pf, x, cfg, positions, cache_len, policy):
+    mixer, ffn = kind
+    if mixer == "attn":
+        x, cache = L.attention_prefill(
+            pm, x, cfg, positions, cache_len, head_pin=policy.pin_heads,
+            entry_pin=policy.pin_gathered,
+        )
+    elif mixer == "mamba":
+        x, cache = S.mamba_prefill(pm, x, cfg, inner_pin=policy.pin_channels,
+                                   entry_pin=policy.pin_gathered)
+    else:
+        x, cache = R.rwkv_tmix_prefill(pm, x, cfg, head_pin=policy.pin_heads,
+                                       entry_pin=policy.pin_gathered)
+    if ffn == "dense":
+        x = L.mlp(pf, x, cfg, hidden_pin=policy.pin_channels,
+                  entry_pin=policy.pin_gathered)
+    elif ffn == "moe":
+        # SPMD path: GShard capacity MoE (partitions); host path (no
+        # dispatch sharding): exact dropless sort-based MoE.
+        if policy.moe_dispatch is None:
+            x = L.moe_dropless(pf, x, cfg)
+        else:
+            x = L.moe_capacity(
+                pf, x, cfg,
+                groups=policy.moe_groups,
+                dispatch_sharding=policy.moe_dispatch,
+            )
+    else:
+        x, cmix_last = R.rwkv_cmix_prefill(pf, x, cfg)
+        cache = dict(cache, cmix_last=cmix_last)
+    return x, cache
+
+
+def _apply_block_decode(kind, pm, pf, x, cfg, cache, pos, policy,
+                        kv_quant=False):
+    mixer, ffn = kind
+    if mixer == "attn":
+        if kv_quant:
+            x, cache = L.attention_decode_q8(pm, x, cfg, cache, pos)
+        else:
+            x, cache = L.attention_decode(pm, x, cfg, cache, pos)
+    elif mixer == "mamba":
+        x, cache = S.mamba_decode(pm, x, cfg, cache)
+    else:
+        x, cache = R.rwkv_tmix_decode(pm, x, cfg, cache)
+    if ffn == "dense":
+        x = L.mlp(pf, x, cfg, hidden_pin=policy.pin_channels,
+                  entry_pin=policy.pin_gathered)
+    elif ffn == "moe":
+        # SPMD path: GShard capacity MoE (partitions); host path (no
+        # dispatch sharding): exact dropless sort-based MoE.
+        if policy.moe_dispatch is None:
+            x = L.moe_dropless(pf, x, cfg)
+        else:
+            x = L.moe_capacity(
+                pf, x, cfg,
+                groups=policy.moe_groups,
+                dispatch_sharding=policy.moe_dispatch,
+            )
+    else:
+        x, cache = R.rwkv_cmix_decode(pf, x, cfg, cache)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+def _embed_inputs(params, cfg: ArchConfig, batch):
+    if cfg.frontend == "none":
+        x = params["embed"][batch["tokens"]]
+    else:
+        x = batch["embeds"].astype(params["frontend_proj"].dtype) @ params[
+            "frontend_proj"
+        ]
+    return x
+
+
+def _head(params, cfg: ArchConfig):
+    if cfg.frontend == "none" and cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def _positions(x):
+    B, Sq = x.shape[:2]
+    return jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+def backbone(
+    params,
+    cfg: ArchConfig,
+    batch,
+    *,
+    remat: bool = True,
+    policy: ShardingPolicy = NO_POLICY,
+):
+    """Embed -> scan(pattern x repeats) -> final norm. Returns (B,S,d)."""
+    x = policy.pin_act(_embed_inputs(params, cfg, batch))
+    positions = _positions(x)
+    pattern = cfg.pattern()
+
+    def body(x, rep):
+        for j, kind in enumerate(pattern):
+            x = _apply_block(kind, rep[j]["mixer"], rep[j]["ffn"], x, cfg, positions, policy)
+            x = policy.pin_act(x)
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    batch,
+    *,
+    remat: bool = True,
+    policy: ShardingPolicy = NO_POLICY,
+):
+    """Full logits (B, S, V) — use for smoke tests / small models only;
+    training uses `loss_fn` (never materializes all logits at once)."""
+    x = backbone(params, cfg, batch, remat=remat, policy=policy)
+    return (x @ _head(params, cfg)).astype(jnp.float32)
+
+
+#: sequence-chunk length for the cross-entropy scan: bounds live logits
+#: memory at (B, CE_CHUNK, V) fp32 per device group.
+CE_CHUNK = 512
+
+
+def loss_fn(
+    params,
+    cfg: ArchConfig,
+    batch,
+    *,
+    remat: bool = True,
+    policy: ShardingPolicy = NO_POLICY,
+):
+    """Mean next-token cross entropy with S-chunked logits.
+
+    ``batch["labels"]`` (B, S) int32; optional ``batch["mask"]`` (B, S)
+    weights (defaults to all-ones). Labels are already shifted by the
+    data pipeline (labels[t] = target for position t).
+    """
+    x = backbone(params, cfg, batch, remat=remat, policy=policy)
+    head = _head(params, cfg)
+    labels = batch["labels"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    B, Sq, d = x.shape
+
+    chunk = min(CE_CHUNK, Sq)
+    while Sq % chunk:
+        chunk //= 2
+    n_chunks = Sq // chunk
+
+    def ce(x_c, lab_c, m_c):
+        logits = policy.pin_logits((x_c @ head).astype(jnp.float32))
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab_c[..., None], axis=-1)[..., 0]
+        return ((lse - gold) * m_c).sum()
+
+    ce = jax.checkpoint(ce)
+
+    def body(acc, inp):
+        x_c, lab_c, m_c = inp
+        return acc + ce(x_c, lab_c, m_c), None
+
+    xs = (
+        jnp.moveaxis(x.reshape(B, n_chunks, chunk, d), 1, 0),
+        jnp.moveaxis(labels.reshape(B, n_chunks, chunk), 1, 0),
+        jnp.moveaxis(mask.reshape(B, n_chunks, chunk), 1, 0),
+    )
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), xs)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = total / denom
+    return loss, {"loss": loss, "tokens": denom}
+
+
+# ---------------------------------------------------------------------------
+# decode cache
+# ---------------------------------------------------------------------------
+def _block_cache_shape(kind, cfg: ArchConfig, B: int, cache_len: int,
+                       kv_quant: bool = False):
+    mixer, ffn = kind
+    if mixer == "attn":
+        if kv_quant:
+            return {
+                "k": ((B, cfg.n_kv_heads, cache_len, cfg.head_dim), jnp.int8),
+                "v": ((B, cfg.n_kv_heads, cache_len, cfg.head_dim), jnp.int8),
+                "k_scale": ((B, cfg.n_kv_heads, cache_len), jnp.bfloat16),
+                "v_scale": ((B, cfg.n_kv_heads, cache_len), jnp.bfloat16),
+            }
+        return {
+            "k": ((B, cfg.n_kv_heads, cache_len, cfg.head_dim), jnp.bfloat16),
+            "v": ((B, cfg.n_kv_heads, cache_len, cfg.head_dim), jnp.bfloat16),
+        }
+    if mixer == "mamba":
+        return {
+            "conv": ((B, cfg.mamba_d_conv - 1, cfg.d_inner), jnp.bfloat16),
+            "ssm": ((B, cfg.d_inner, cfg.mamba_d_state), jnp.float32),
+        }
+    # rwkv
+    H, hd = cfg.n_rwkv_heads, cfg.rwkv_head_size
+    return {
+        "S": ((B, H, hd, hd), jnp.float32),
+        "tmix_last": ((B, cfg.d_model), jnp.bfloat16),
+        "cmix_last": ((B, cfg.d_model), jnp.bfloat16),
+    }
+
+
+def cache_spec(cfg: ArchConfig, B: int, cache_len: int,
+               kv_quant: bool = False):
+    """(shape, dtype) pytree of the decode cache (leading repeats axis)."""
+    n_rep = cfg.n_repeats
+    out = []
+    for kind in cfg.pattern():
+        shapes = _block_cache_shape(kind, cfg, B, cache_len, kv_quant)
+        out.append(
+            {k: ((n_rep, *shp), dt) for k, (shp, dt) in shapes.items()}
+        )
+    return tuple(out)
+
+
+def init_cache(cfg: ArchConfig, B: int, cache_len: int):
+    return jax.tree_util.tree_map(
+        lambda sd: jnp.zeros(*sd),
+        cache_spec(cfg, B, cache_len),
+        is_leaf=lambda x: isinstance(x, tuple) and isinstance(x[0], tuple),
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+def prefill(
+    params,
+    cfg: ArchConfig,
+    batch,
+    cache_len: int,
+    *,
+    remat: bool = True,
+    policy: ShardingPolicy = NO_POLICY,
+):
+    """Run the full prompt; return (last-token logits (B,V), cache)."""
+    x = policy.pin_act(_embed_inputs(params, cfg, batch))
+    positions = _positions(x)
+    pattern = cfg.pattern()
+
+    def body(x, rep):
+        caches = []
+        for j, kind in enumerate(pattern):
+            x, c = _apply_block_prefill(
+                kind, rep[j]["mixer"], rep[j]["ffn"], x, cfg, positions,
+                cache_len, policy,
+            )
+            x = policy.pin_act(x)
+            caches.append(c)
+        return x, tuple(caches)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable
+        )
+    x, cache = jax.lax.scan(body, x, params["blocks"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ _head(params, cfg)).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(
+    params,
+    cfg: ArchConfig,
+    cache,
+    inputs,
+    pos,
+    *,
+    policy: ShardingPolicy = NO_POLICY,
+    kv_quant: bool = False,
+):
+    """One new token for every sequence in the batch.
+
+    ``inputs``: {"tokens": (B,) int32} or {"embeds": (B, frontend_dim)};
+    ``pos``: (B,) int32 — index the new token is written at (= current
+    sequence length). Returns (logits (B, V), new_cache).
+    """
+    if cfg.frontend == "none":
+        x = params["embed"][inputs["tokens"]][:, None, :]
+    else:
+        x = (
+            inputs["embeds"].astype(params["frontend_proj"].dtype)
+            @ params["frontend_proj"]
+        )[:, None, :]
+    x = policy.pin_act(x)
+    pattern = cfg.pattern()
+
+    def body(x, rep_and_cache):
+        rep, cache_rep = rep_and_cache
+        new = []
+        for j, kind in enumerate(pattern):
+            x, c = _apply_block_decode(
+                kind, rep[j]["mixer"], rep[j]["ffn"], x, cfg, cache_rep[j],
+                pos, policy, kv_quant=kv_quant,
+            )
+            x = policy.pin_act(x)
+            new.append(c)
+        return x, tuple(new)
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ _head(params, cfg)).astype(jnp.float32)
+    return logits, new_cache

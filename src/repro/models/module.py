@@ -1,0 +1,59 @@
+"""Minimal pure-JAX parameter/module utilities (no flax/haiku).
+
+Parameters are nested dicts of jnp arrays. Initializers take an explicit
+key; layer stacks are built by vmapping init over a leading repeat axis
+so `lax.scan` can drive them (one compiled instance per distinct layer).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16, scale: float | None = None):
+    """Truncated-normal fan-in init."""
+    std = scale if scale is not None else (1.0 / np.sqrt(d_in))
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out), jnp.float32)
+    return (w * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d), jnp.float32)
+    return (w * 0.02).astype(dtype)
+
+
+def zeros(shape, dtype=jnp.bfloat16):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype=jnp.bfloat16):
+    return jnp.ones(shape, dtype)
+
+
+def stack_init(
+    init_fn: Callable, key, n: int
+):
+    """Initialize ``n`` copies of a sub-tree with a leading stack axis."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(init_fn)(keys)
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

@@ -1,0 +1,25 @@
+"""PHAROS pipelined execution on TPU meshes + the serving runtime.
+
+- `executor`: the SPMD realization of the paper's chained-accelerator
+  topology — equal stage submeshes on a ``stage`` mesh axis, activations
+  forwarded with ``lax.ppermute`` (the HLS FIFO streams of paper Fig. 2).
+- `serve`: the host-level runtime: per-stage FIFO/EDF schedulers, job
+  pools, progress table, and tile-window preemption via the
+  `preemptible_matmul` kernel — the paper's control flow (§3.2, §3.4).
+- `stage_split`: DSE design points -> per-stage layer segments.
+"""
+from repro.pipeline.serve import (
+    Job,
+    PharosServer,
+    ServeTask,
+    ServerReport,
+)
+from repro.pipeline.stage_split import design_to_segments
+
+__all__ = [
+    "Job",
+    "PharosServer",
+    "ServeTask",
+    "ServerReport",
+    "design_to_segments",
+]

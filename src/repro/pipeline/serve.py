@@ -1,0 +1,363 @@
+"""PHAROS serving runtime: per-stage FIFO/EDF scheduling with
+tile-window preemption — the paper's §3.2 control flow executing real
+compute.
+
+Entities map 1:1 onto the paper's hardware (Fig. 2):
+
+- ``ServeTask``     — a task: an ordered GEMM chain (the DNN layers),
+                      period/deadline, and a layer->stage map obeying
+                      the pipelined-topology constraint.
+- ``StageRuntime``  — one accelerator: a job pool (FIFO deque / EDF
+                      heap), a progress table (per-job, per-layer
+                      `MatmulProgress`), and the window executor.
+- ``PharosServer``  — the decentralized control flow: jobs released by
+                      period, forwarded stage->stage when their segment
+                      completes (the HLS FIFO streams), preempted
+                      between tile windows when EDF priority demands.
+
+Preemption fidelity: a job is only ever interrupted at a *window*
+boundary — the running window always completes (``e_tile``), the fp32
+partial accumulator already lives in the job's buffer (``e_store``),
+and resumption re-streams the operand tiles (``e_load``) — exactly the
+Eq. 5 cost structure, realized by `kernels.preemptible_matmul`.
+
+Window executors: ``backend="jnp"`` (jitted masked-GEMM windows — fast,
+used by examples/benchmarks) or ``backend="pallas"`` (the real kernel in
+interpret mode — bit-identical semantics, used by the fidelity tests).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.preemptible_matmul import (
+    grid_geometry,
+    matmul_window,
+    pick_window,
+)
+
+DEFAULT_BLOCK = (128, 128, 128)
+
+
+# ---------------------------------------------------------------------------
+# window executors
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n_tiles_m", "n_tiles_n", "block", "window"))
+def _jnp_window(a, b, c_acc, start, *, n_tiles_m, n_tiles_n, block, window):
+    """Masked-GEMM window: same tile semantics as the Pallas kernel."""
+    bm, _, bn = block
+    full = jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    flat = jnp.arange(n_tiles_m * n_tiles_n).reshape(n_tiles_m, n_tiles_n)
+    active = (flat >= start) & (flat < start + window)
+    mask = jnp.repeat(jnp.repeat(active, bm, 0), bn, 1)
+    return c_acc + jnp.where(mask, full, 0.0)
+
+
+@partial(jax.jit, static_argnames=("bm",))
+def _jnp_row_strip(a, b, c_acc, row, *, bm):
+    """Fast exact path for window == one row of output tiles: compute
+    ``a[row*bm:(row+1)*bm] @ b`` only (the window's actual FLOPs)."""
+    a_strip = jax.lax.dynamic_slice_in_dim(a, row * bm, bm, 0)
+    strip = jnp.dot(
+        a_strip.astype(jnp.float32), b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return jax.lax.dynamic_update_slice_in_dim(
+        c_acc, jax.lax.dynamic_slice_in_dim(c_acc, row * bm, bm, 0) + strip,
+        row * bm, 0,
+    )
+
+
+def _run_window(a, b, c_acc, start, *, block, window, backend):
+    M, K = a.shape
+    _, N = b.shape
+    n_m, n_n, _, total = grid_geometry(M, N, K, block)
+    if backend == "pallas":
+        return matmul_window(
+            a, b, c_acc, start, block=block, window_tiles=window
+        )
+    if window == n_n and start % n_n == 0:
+        c = _jnp_row_strip(a, b, c_acc, jnp.int32(start // n_n), bm=block[0])
+    else:
+        c = _jnp_window(
+            a, b, c_acc, jnp.int32(start),
+            n_tiles_m=n_m, n_tiles_n=n_n, block=block, window=window,
+        )
+    return c, min(start + window, total)
+
+
+# ---------------------------------------------------------------------------
+# tasks / jobs
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ServeTask:
+    """A periodic inference task: GEMM-chain layers mapped to stages."""
+
+    name: str
+    weights: tuple  # tuple of (K, N) jnp weight matrices, chained
+    stage_of_layer: tuple[int, ...]  # non-decreasing (pipelined topology)
+    period: float  # seconds
+    deadline: float = 0.0  # 0 -> implicit
+    input_rows: int = 128  # M of the chain input
+
+    def __post_init__(self):
+        if len(self.weights) != len(self.stage_of_layer):
+            raise ValueError("one stage per layer required")
+        if any(
+            b < a
+            for a, b in zip(self.stage_of_layer, self.stage_of_layer[1:])
+        ):
+            raise ValueError("stage map must be non-decreasing (no backtrack)")
+        if self.deadline == 0.0:
+            object.__setattr__(self, "deadline", self.period)
+
+
+class Job:
+    """One released inference + its progress-table rows."""
+
+    _ids = itertools.count()
+
+    def __init__(self, task_id: int, task: ServeTask, release: float, x0):
+        self.uid = next(Job._ids)
+        self.task_id = task_id
+        self.release = release
+        self.abs_deadline = release + task.deadline
+        self.layer = 0  # next/current layer index
+        self.x = x0  # current activation (input of self.layer)
+        self.c_acc = None  # partial fp32 accumulator of current layer
+        self.next_tile = 0
+        self.done_at: float | None = None
+        self.preemptions = 0
+
+    def __repr__(self):
+        return f"Job(t{self.task_id}#{self.uid} layer={self.layer})"
+
+
+class StageRuntime:
+    """One accelerator: job pool + running-job slot (paper Fig. 2)."""
+
+    def __init__(self, idx: int, policy: str):
+        self.idx = idx
+        self.policy = policy
+        self.fifo: deque[Job] = deque()
+        self.edf: list[tuple[float, int, Job]] = []
+        self.running: Job | None = None
+
+    def push(self, job: Job) -> None:
+        if self.policy == "fifo":
+            self.fifo.append(job)
+        else:
+            heapq.heappush(self.edf, (job.abs_deadline, job.uid, job))
+
+    def pop(self) -> Job | None:
+        if self.policy == "fifo":
+            return self.fifo.popleft() if self.fifo else None
+        return heapq.heappop(self.edf)[2] if self.edf else None
+
+    def head_deadline(self) -> float:
+        return self.edf[0][0] if self.edf else float("inf")
+
+    def busy(self) -> bool:
+        return (
+            self.running is not None or bool(self.fifo) or bool(self.edf)
+        )
+
+
+@dataclass
+class ServerReport:
+    response_times: dict[str, list[float]]
+    deadline_misses: dict[str, int]
+    preemptions: int
+    jobs_completed: int
+    jobs_released: int
+    windows_executed: int
+
+    def max_response(self, name: str) -> float:
+        r = self.response_times.get(name, [])
+        return max(r) if r else 0.0
+
+
+class PharosServer:
+    """Decentralized pipelined serving with FIFO/EDF + preemption."""
+
+    def __init__(
+        self,
+        tasks: list[ServeTask],
+        n_stages: int,
+        *,
+        policy: str = "edf",
+        block=DEFAULT_BLOCK,
+        window_tiles: int = 4,
+        backend: str = "jnp",
+        seed: int = 0,
+    ):
+        if policy not in ("fifo", "edf"):
+            raise ValueError(policy)
+        self.tasks = tasks
+        self.policy = policy
+        self.block = block
+        self.window_tiles = window_tiles
+        self.backend = backend
+        self.stages = [StageRuntime(k, policy) for k in range(n_stages)]
+        key = jax.random.PRNGKey(seed)
+        self.inputs = []
+        for t in tasks:
+            key, sub = jax.random.split(key)
+            k_dim = t.weights[0].shape[0]
+            self.inputs.append(
+                jax.random.normal(sub, (t.input_rows, k_dim), jnp.float32)
+            )
+        self.report = ServerReport(
+            response_times={t.name: [] for t in tasks},
+            deadline_misses={t.name: 0 for t in tasks},
+            preemptions=0,
+            jobs_completed=0,
+            jobs_released=0,
+            windows_executed=0,
+        )
+
+    # ------------------------------------------------------------------
+    def _start_layer(self, job: Job) -> None:
+        t = self.tasks[job.task_id]
+        w = t.weights[job.layer]
+        M, N = job.x.shape[0], w.shape[1]
+        job.c_acc = jnp.zeros((M, N), jnp.float32)
+        job.next_tile = 0
+
+    def _layer_tiles(self, job: Job) -> int:
+        t = self.tasks[job.task_id]
+        w = t.weights[job.layer]
+        M, K = job.x.shape
+        _, _, _, total = grid_geometry(M, w.shape[1], K, self.block)
+        return total
+
+    def _window_for(self, job: Job) -> int:
+        """Preemption quantum. The jnp backend uses one output-tile ROW
+        per window (exact-FLOP fast path); the pallas backend honours
+        the configured tile count."""
+        t = self.tasks[job.task_id]
+        w = t.weights[job.layer]
+        M, K = job.x.shape
+        _, n_n, _, total = grid_geometry(M, w.shape[1], K, self.block)
+        if self.backend == "jnp":
+            return n_n
+        return pick_window(total, self.window_tiles)
+
+    def _finish_layer_or_forward(self, job: Job, now: float) -> None:
+        """Layer done: advance; forward to next stage / complete job."""
+        t = self.tasks[job.task_id]
+        job.x = job.c_acc  # fp32 activation chains to the next GEMM
+        job.c_acc = None
+        prev_stage = t.stage_of_layer[job.layer]
+        job.layer += 1
+        if job.layer >= len(t.weights):
+            job.done_at = now
+            self.report.jobs_completed += 1
+            rt = now - job.release
+            self.report.response_times[t.name].append(rt)
+            if now > job.abs_deadline:
+                self.report.deadline_misses[t.name] += 1
+            return
+        nxt = t.stage_of_layer[job.layer]
+        self._start_layer(job)
+        if nxt == prev_stage:
+            # same accelerator: continue immediately (still its segment)
+            self.stages[nxt].running = job
+        else:
+            # release to successor via the inter-stage FIFO (paper §3.2)
+            self.stages[nxt].push(job)
+
+    def _step_stage(self, st: StageRuntime, now: float) -> bool:
+        """Run one tile window on stage ``st``. Returns True if it ran."""
+        # EDF preemption check between windows (tile boundary)
+        if (
+            self.policy == "edf"
+            and st.running is not None
+            and st.head_deadline() < st.running.abs_deadline
+        ):
+            preempted = st.running
+            preempted.preemptions += 1
+            self.report.preemptions += 1
+            st.push(preempted)  # progress table keeps (layer, next_tile)
+            st.running = None
+        if st.running is None:
+            st.running = st.pop()
+            if st.running is None:
+                return False
+            if st.running.c_acc is None:
+                self._start_layer(st.running)
+        job = st.running
+        t = self.tasks[job.task_id]
+        w = t.weights[job.layer]
+        total = self._layer_tiles(job)
+        window = self._window_for(job)
+        job.c_acc, job.next_tile = _run_window(
+            job.x,
+            w,
+            job.c_acc,
+            job.next_tile,
+            block=self.block,
+            window=window,
+            backend=self.backend,
+        )
+        self.report.windows_executed += 1
+        if job.next_tile >= total:
+            st.running = None
+            self._finish_layer_or_forward(job, time.perf_counter())
+        return True
+
+    # ------------------------------------------------------------------
+    def warmup(self) -> None:
+        """Pre-compile every (layer geometry x window) the run will use —
+        JIT stalls inside the serving loop would otherwise blow every
+        deadline in the first hyperperiod."""
+        for i, t in enumerate(self.tasks):
+            x = self.inputs[i]
+            for w in t.weights:
+                M, N = x.shape[0], w.shape[1]
+                _, n_n, _, total = grid_geometry(M, N, x.shape[1], self.block)
+                window = (
+                    n_n if self.backend == "jnp"
+                    else pick_window(total, self.window_tiles)
+                )
+                c = jnp.zeros((M, N), jnp.float32)
+                c, _ = _run_window(
+                    x, w, c, 0,
+                    block=self.block, window=window, backend=self.backend,
+                )
+                jax.block_until_ready(c)
+                x = c  # chain shapes like the real execution
+
+    def run(self, horizon_s: float) -> ServerReport:
+        """Serve for ``horizon_s`` wall seconds (periodic releases)."""
+        self.warmup()
+        t0 = time.perf_counter()
+        next_release = [t0 for _ in self.tasks]
+        while True:
+            now = time.perf_counter()
+            if now - t0 >= horizon_s:
+                break
+            for i, t in enumerate(self.tasks):
+                while next_release[i] <= now:
+                    job = Job(i, t, next_release[i], self.inputs[i])
+                    first = t.stage_of_layer[0]
+                    self.stages[first].push(job)
+                    self.report.jobs_released += 1
+                    next_release[i] += t.period
+            ran = False
+            for st in self.stages:
+                ran |= self._step_stage(st, now)
+            if not ran:
+                time.sleep(1e-4)  # idle
+        return self.report

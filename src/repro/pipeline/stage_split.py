@@ -1,0 +1,71 @@
+"""DSE design points -> runnable stage segments.
+
+Bridges `core.dse` (which plans over `LayerDesc` chains) to the serving
+runtime (which executes GEMM weights) and the SPMD executor (which needs
+per-stage repeat counts).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dse.space import DesignPoint
+from repro.core.rt.task import TaskSet, Workload
+from repro.pipeline.serve import ServeTask
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def design_to_segments(
+    design: DesignPoint,
+    workloads: list[Workload],
+    taskset: TaskSet,
+    *,
+    key=None,
+    block=(128, 128, 128),
+    rows: int = 128,
+    dtype=jnp.float32,
+    period_scale: float = 1.0,
+) -> list[ServeTask]:
+    """Materialize each task's layer chain as chained GEMM weights with
+    the design's stage map (block-aligned so the preemptible kernel's
+    window grid is exact).
+
+    The chain contract: layer j's K equals layer j-1's N (activations
+    flow through). Layer shapes are block-rounded; the *stage map* and
+    period come straight from the design point. ``period_scale``
+    rescales the analytic (TPU-model) periods to the host's wall-clock
+    timebase — the schedule structure (ratios, utilization) is
+    preserved, only the unit changes.
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    bm, bk, bn = block
+    out = []
+    for i, (w, t) in enumerate(zip(workloads, taskset.tasks)):
+        stage_of_layer = []
+        for k in range(design.n_stages):
+            stage_of_layer += [k] * design.splits[k][i]
+        dims = []  # chained (K, N) per layer
+        prev_n = _round_up(w.layers[0].K, bk)
+        for l in w.layers:
+            n = _round_up(l.N, bn)
+            dims.append((prev_n, n))
+            prev_n = n
+        weights = []
+        for (kd, nd) in dims:
+            key, sub = jax.random.split(key)
+            weights.append(
+                jax.random.normal(sub, (kd, nd), dtype) / jnp.sqrt(kd)
+            )
+        out.append(
+            ServeTask(
+                name=t.name,
+                weights=tuple(weights),
+                stage_of_layer=tuple(stage_of_layer),
+                period=t.period * period_scale,
+                input_rows=_round_up(rows, bm),
+            )
+        )
+    return out

@@ -1,0 +1,20 @@
+from repro.runtime.ft import FaultTolerantLoop, HeartbeatMonitor, WorkerState
+from repro.runtime.compression import (
+    compress_gradients,
+    decompress_gradients,
+    ErrorFeedbackState,
+)
+from repro.runtime.straggler import StragglerMitigator
+from repro.runtime.elastic import ElasticPlan, plan_remesh
+
+__all__ = [
+    "FaultTolerantLoop",
+    "HeartbeatMonitor",
+    "WorkerState",
+    "compress_gradients",
+    "decompress_gradients",
+    "ErrorFeedbackState",
+    "StragglerMitigator",
+    "ElasticPlan",
+    "plan_remesh",
+]

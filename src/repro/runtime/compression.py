@@ -1,0 +1,78 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Cross-pod gradient all-reduce is the collective-term floor for
+multi-pod data parallelism (§Roofline: the ``pod`` axis crosses the
+slower inter-pod links). Per-tensor symmetric int8 quantization cuts
+those bytes 4x (fp32 moments stay local; only the exchanged gradient is
+compressed); the residual is carried to the next step (error feedback,
+Seide et al. / EF-SGD), which keeps SGD convergence guarantees.
+
+Pure-pytree implementation: `compress` returns (int8 payload, scales),
+`decompress` reconstructs, `ErrorFeedbackState` holds the residuals.
+The train driver applies it around the cross-pod reduce only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class ErrorFeedbackState:
+    residual: object  # pytree matching grads, fp32
+
+    @staticmethod
+    def init(grads):
+        return ErrorFeedbackState(
+            residual=jax.tree_util.tree_map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads
+            )
+        )
+
+
+def _quantize(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_gradients(grads, ef: ErrorFeedbackState | None = None):
+    """-> (payload {q, scale} pytree, new ErrorFeedbackState).
+
+    With error feedback, compresses ``g + residual`` and stores the
+    quantization error back into the residual.
+    """
+    g32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    if ef is not None:
+        g32 = jax.tree_util.tree_map(jnp.add, g32, ef.residual)
+    qs = jax.tree_util.tree_map(_quantize, g32)
+    payload = {
+        "q": jax.tree_util.tree_map(lambda t: t[0], qs,
+                                    is_leaf=lambda x: isinstance(x, tuple)),
+        "scale": jax.tree_util.tree_map(lambda t: t[1], qs,
+                                        is_leaf=lambda x: isinstance(x, tuple)),
+    }
+    recon = jax.tree_util.tree_map(_dequantize, payload["q"], payload["scale"])
+    new_ef = ErrorFeedbackState(
+        residual=jax.tree_util.tree_map(jnp.subtract, g32, recon)
+    )
+    return payload, new_ef
+
+
+def decompress_gradients(payload):
+    return jax.tree_util.tree_map(
+        _dequantize, payload["q"], payload["scale"]
+    )
+
+
+def compression_ratio(grads) -> float:
+    """Bytes(fp32) / bytes(int8 + scale) for this pytree."""
+    n = sum(x.size for x in jax.tree_util.tree_leaves(grads))
+    leaves = len(jax.tree_util.tree_leaves(grads))
+    return (4.0 * n) / (1.0 * n + 4.0 * leaves)

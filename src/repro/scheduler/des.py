@@ -1,0 +1,408 @@
+"""Event-driven pipeline scheduler simulator.
+
+Design notes
+------------
+* Entities: ``M`` stages, each a single server with a job pool. A task
+  is a sequence of segments ``[(stage, wcet), ...]`` executed strictly
+  in order; chained (PHAROS) designs have increasing stage indices,
+  throughput-guided baselines may revisit stages (backtracking), which
+  the polling/no-polling FIFO variants treat differently.
+* Preemption (EDF only): when a job with an earlier absolute deadline
+  arrives at a busy stage, the running job is preempted. Overhead model
+  mirrors the paper's tile-granular mechanism: the preempting job can
+  only start after ``pre = e_tile + e_store`` (drain current tile, spill
+  partial outputs), and the preempted job pays ``post = e_load`` extra
+  when it resumes (buffer reload). FIFO never preempts -> zero overhead.
+* Events are versioned per stage (``epoch``): a scheduled completion is
+  ignored if the stage has been re-dispatched since it was scheduled.
+* Schedulability detection (paper §5.2): simulate ``horizon`` (default
+  >100x max period); declare *non*-schedulable if unfinished jobs
+  accumulate or response times grow between the first and second half.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class SimTask:
+    """One periodic task: ordered segments of (stage, wcet)."""
+
+    segments: tuple[tuple[int, float], ...]
+    period: float
+    deadline: float = 0.0  # relative; 0 -> implicit (= period)
+    phase: float = 0.0
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        if self.deadline == 0.0:
+            object.__setattr__(self, "deadline", self.period)
+        segs = tuple((s, w) for s, w in self.segments if w > 0.0)
+        object.__setattr__(self, "segments", segs)
+        if not segs:
+            raise ValueError("task has no non-empty segments")
+
+
+@dataclass(frozen=True)
+class StageOverhead:
+    """Per-stage preemption cost split (Eq. 5)."""
+
+    e_tile: float = 0.0
+    e_store: float = 0.0
+    e_load: float = 0.0
+
+    @property
+    def pre(self) -> float:  # paid before the preemptor starts
+        return self.e_tile + self.e_store
+
+    @property
+    def post(self) -> float:  # paid by the preempted job on resume
+        return self.e_load
+
+    @property
+    def xi(self) -> float:
+        return self.e_tile + self.e_store + self.e_load
+
+
+@dataclass
+class SimConfig:
+    policy: str = "edf"  # "fifo" | "fifo_no_polling" | "edf"
+    horizon: float = 0.0  # 0 -> 120 x max period
+    overheads: list[StageOverhead] | None = None  # None -> zero overhead
+    backlog_limit: int = 64  # pending jobs per task before declaring overload
+    #: divergence tolerance, 2nd half vs 1st half of the trace. Growth
+    #: is declared only when *both* the mean and the max response rise
+    #: past this factor. The paper's detector is backlog accumulation
+    #: (`backlog_limit`) alone; this heuristic is a secondary early
+    #: signal, so the tolerance is deliberately loose — bounded systems
+    #: with near-commensurate periods legitimately drift their worst
+    #: phasing/collision rate across a finite trace by tens of percent,
+    #: while true divergence (u > 1) grows the response linearly in the
+    #: horizon (far past 2x between halves).
+    growth_tol: float = 2.0
+
+
+@dataclass
+class SimResult:
+    schedulable: bool
+    response_times: list[list[float]]  # per task, completed jobs in order
+    max_response: list[float]
+    mean_response: list[float]
+    preemptions: int
+    jobs_released: int
+    jobs_completed: int
+    overload_detected: bool
+    growth_detected: bool
+
+    def max_response_overall(self) -> float:
+        vals = [m for m in self.max_response if m > 0.0]
+        return max(vals) if vals else 0.0
+
+
+class _Job:
+    __slots__ = (
+        "task_id",
+        "idx",
+        "release",
+        "abs_deadline",
+        "seg_idx",
+        "remaining",
+        "arrive_stage_t",
+        "stage_done",
+    )
+
+    def __init__(self, task_id: int, idx: int, release: float, abs_deadline: float):
+        self.task_id = task_id
+        self.idx = idx
+        self.release = release
+        self.abs_deadline = abs_deadline
+        self.seg_idx = 0  # next segment to execute
+        self.remaining = 0.0  # remaining service of the segment in flight
+        self.arrive_stage_t = release
+        # per-segment completion flags, for the polling variants
+        self.stage_done: list[bool] = []
+
+
+class _Stage:
+    __slots__ = ("idx", "pool", "running", "run_start", "epoch", "block_until")
+
+    def __init__(self, idx: int):
+        self.idx = idx
+        self.pool: list[_Job] = []
+        self.running: _Job | None = None
+        self.run_start = 0.0
+        self.epoch = 0
+        self.block_until = 0.0  # non-preemptible overhead window end
+
+
+def _job_key_fifo(j: _Job):
+    return (j.arrive_stage_t, j.release, j.task_id, j.idx)
+
+
+def _job_key_edf(j: _Job):
+    return (j.abs_deadline, j.release, j.task_id, j.idx)
+
+
+def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
+    if cfg.policy not in ("fifo", "fifo_no_polling", "edf"):
+        raise ValueError(f"unknown policy {cfg.policy!r}")
+    n_stages = 1 + max(s for t in tasks for s, _ in t.segments)
+    overheads = cfg.overheads or [StageOverhead()] * n_stages
+    if len(overheads) < n_stages:
+        raise ValueError("overheads shorter than number of stages")
+    horizon = cfg.horizon or 120.0 * max(t.period for t in tasks)
+    preemptive = cfg.policy == "edf"
+    key = _job_key_edf if preemptive else _job_key_fifo
+
+    stages = [_Stage(k) for k in range(n_stages)]
+    # Event heap: (time, seq, kind, data). kinds: 0=release, 1=complete.
+    evq: list[tuple[float, int, int, tuple]] = []
+    seq = 0
+
+    def push(t: float, kind: int, data: tuple) -> None:
+        nonlocal seq
+        heapq.heappush(evq, (t, seq, kind, data))
+        seq += 1
+
+    # Per-task bookkeeping for the FIFO gating variants and metrics.
+    n_tasks = len(tasks)
+    response: list[list[float]] = [[] for _ in range(n_tasks)]
+    # jobs of each task that have completed ALL segments, contiguous prefix
+    completed_upto = [-1] * n_tasks
+    # per (task, job_idx) segment-completion map for "with polling" gating
+    seg_complete: dict[tuple[int, int], list[bool]] = {}
+    pending_count = [0] * n_tasks
+    preemptions = 0
+    jobs_released = 0
+    jobs_completed = 0
+    overload = False
+
+    # Queue of jobs waiting for their same-task gating condition, per task.
+    gated: list[list[_Job]] = [[] for _ in range(n_tasks)]
+
+    def gate_open(job: _Job) -> bool:
+        """May `job` enter the pool of its next segment's stage?"""
+        t_id, j_idx, s_idx = job.task_id, job.idx, job.seg_idx
+        if j_idx == 0:
+            return True
+        stage_k = tasks[t_id].segments[s_idx][0]
+        if cfg.policy == "fifo_no_polling":
+            # previous job of this task must have finished ALL its
+            # segments mapped to this stage
+            prev = seg_complete.get((t_id, j_idx - 1))
+            if prev is None:  # previous job fully done and GC'd
+                return completed_upto[t_id] >= j_idx - 1
+            for si, (st, _w) in enumerate(tasks[t_id].segments):
+                if st == stage_k and not prev[si]:
+                    return False
+            return True
+        else:
+            # with polling (and EDF): only the *corresponding* segment of
+            # the previous job must be done
+            prev = seg_complete.get((t_id, j_idx - 1))
+            if prev is None:
+                return completed_upto[t_id] >= j_idx - 1
+            return prev[s_idx]
+
+    def try_admit(job: _Job, now: float) -> None:
+        if gate_open(job):
+            stage_k = tasks[job.task_id].segments[job.seg_idx][0]
+            job.arrive_stage_t = now
+            job.remaining = tasks[job.task_id].segments[job.seg_idx][1]
+            stages[stage_k].pool.append(job)
+            dispatch(stages[stage_k], now)
+        else:
+            gated[job.task_id].append(job)
+
+    def recheck_gated(t_id: int, now: float) -> None:
+        still = []
+        for job in gated[t_id]:
+            if gate_open(job):
+                stage_k = tasks[job.task_id].segments[job.seg_idx][0]
+                job.arrive_stage_t = now
+                job.remaining = tasks[job.task_id].segments[job.seg_idx][1]
+                stages[stage_k].pool.append(job)
+                dispatch(stages[stage_k], now)
+            else:
+                still.append(job)
+        gated[t_id] = still
+
+    def dispatch(st: _Stage, now: float) -> None:
+        """(Re)assign the stage server; possibly preempt (EDF)."""
+        nonlocal preemptions
+        if not st.pool and st.running is None:
+            return
+        if st.running is not None:
+            if not preemptive or not st.pool:
+                return
+            best = min(st.pool, key=key)
+            if best.abs_deadline >= st.running.abs_deadline:
+                return
+            if now < st.block_until:
+                return  # inside a non-preemptible overhead window
+            # --- preemption: drain tile + spill, then swap ---
+            ov = overheads[st.idx]
+            run = st.running
+            done_frac = now - st.run_start
+            run.remaining = max(0.0, run.remaining - done_frac) + ov.post
+            st.pool.append(run)  # back to the pool, resumes later
+            st.pool.remove(best)
+            preemptions += 1
+            st.running = best
+            st.epoch += 1
+            st.block_until = now + ov.pre
+            st.run_start = now + ov.pre
+            push(st.run_start + best.remaining, 1, (st.idx, st.epoch))
+            return
+        # idle server: pick next
+        nxt = min(st.pool, key=key)
+        st.pool.remove(nxt)
+        st.running = nxt
+        st.epoch += 1
+        st.run_start = now
+        push(now + nxt.remaining, 1, (st.idx, st.epoch))
+
+    def on_complete(st: _Stage, now: float) -> None:
+        nonlocal jobs_completed
+        job = st.running
+        assert job is not None
+        st.running = None
+        st.epoch += 1
+        t_id, j_idx = job.task_id, job.idx
+        seg_complete[(t_id, j_idx)][job.seg_idx] = True
+        job.seg_idx += 1
+        if job.seg_idx >= len(tasks[t_id].segments):
+            # job fully done
+            response[t_id].append(now - job.release)
+            pending_count[t_id] -= 1
+            jobs_completed += 1
+            # advance the contiguous fully-completed prefix
+            while True:
+                flags = seg_complete.get((t_id, completed_upto[t_id] + 1))
+                if flags is None or not all(flags):
+                    break
+                completed_upto[t_id] += 1
+                seg_complete.pop((t_id, completed_upto[t_id] - 1), None)
+        else:
+            try_admit(job, now)
+        recheck_gated(t_id, now)
+        dispatch(st, now)
+
+    # ---- main loop ----
+    release_counts = [0] * n_tasks
+    for t_id, t in enumerate(tasks):
+        push(t.phase, 0, (t_id,))
+
+    growth = False
+    while evq:
+        now, _s, kind, data = heapq.heappop(evq)
+        if now > horizon or overload:
+            break
+        if kind == 0:
+            (t_id,) = data
+            t = tasks[t_id]
+            j_idx = release_counts[t_id]
+            release_counts[t_id] += 1
+            jobs_released += 1
+            job = _Job(t_id, j_idx, now, now + t.deadline)
+            seg_complete[(t_id, j_idx)] = [False] * len(t.segments)
+            pending_count[t_id] += 1
+            if pending_count[t_id] > cfg.backlog_limit:
+                overload = True
+            try_admit(job, now)
+            push(now + t.period, 0, (t_id,))
+        else:
+            st_idx, epoch = data
+            st = stages[st_idx]
+            if st.epoch != epoch or st.running is None:
+                continue  # stale completion (preempted/re-dispatched)
+            on_complete(st, now)
+
+    # ---- verdict ----
+    # Theory cap: with every stage utilization < 1, any work-conserving
+    # policy bounds a job's response by the sum of per-stage busy
+    # periods L_k <= (sum_i e_i^k) / (1 - u_k). Observed responses under
+    # this cap are NOT divergence, no matter how the finite-horizon
+    # halves drift (near-commensurate periods can push the first
+    # collision arbitrarily late).
+    theory_cap = 0.0
+    for k in range(n_stages):
+        e_k = [
+            sum(w for st, w in t.segments if st == k) for t in tasks
+        ]
+        u_k = sum(e / t.period for e, t in zip(e_k, tasks))
+        if u_k >= 1.0 - 1e-12:
+            theory_cap = math.inf
+            break
+        theory_cap += sum(e_k) / (1.0 - u_k)
+    max_r, mean_r = [], []
+    for t_id in range(n_tasks):
+        r = response[t_id]
+        max_r.append(max(r) if r else 0.0)
+        mean_r.append(sum(r) / len(r) if r else 0.0)
+        if len(r) >= 8:
+            half = len(r) // 2
+            mean1 = sum(r[:half]) / half
+            mean2 = sum(r[half:]) / (len(r) - half)
+            max1, max2 = max(r[:half]), max(r[half:])
+            if (
+                mean2 > mean1 * cfg.growth_tol + 1e-12
+                and max2 > max1 * cfg.growth_tol + 1e-12
+            ):
+                growth = True
+        elif release_counts[t_id] >= 8:
+            growth = True  # many released, almost none finished
+    if (
+        growth
+        and theory_cap != math.inf
+        and all(m <= theory_cap + 1e-9 for m in max_r)
+    ):
+        growth = False  # bounded by the busy-period cap -> not divergence
+    schedulable = (not overload) and (not growth) and jobs_completed > 0
+    return SimResult(
+        schedulable=schedulable,
+        response_times=response,
+        max_response=max_r,
+        mean_response=mean_r,
+        preemptions=preemptions,
+        jobs_released=jobs_released,
+        jobs_completed=jobs_completed,
+        overload_detected=overload,
+        growth_detected=growth,
+    )
+
+
+def simulate_taskset(
+    table,
+    taskset,
+    policy: str,
+    horizon: float = 0.0,
+    overheads: list[StageOverhead] | None = None,
+    mapping_orders: list[list[int]] | None = None,
+) -> SimResult:
+    """Bridge from `SegmentTable`/`TaskSet` (core.rt) to the simulator.
+
+    ``mapping_orders`` optionally gives, per task, the order in which its
+    stages are visited (for non-chained TG baselines); default is
+    ascending stage index (the PHAROS pipelined topology).
+    """
+    tasks = []
+    for i, t in enumerate(taskset.tasks):
+        order = (
+            mapping_orders[i]
+            if mapping_orders is not None
+            else table.active_stages(i)
+        )
+        segs = tuple((k, table.base[i][k]) for k in order if table.base[i][k] > 0)
+        tasks.append(
+            SimTask(segments=segs, period=t.period, deadline=t.deadline, name=t.name)
+        )
+    if overheads is None and policy == "edf":
+        overheads = [
+            StageOverhead(e_tile=o / 3.0, e_store=o / 3.0, e_load=o / 3.0)
+            for o in table.overhead
+        ]
+    cfg = SimConfig(policy=policy, horizon=horizon, overheads=overheads)
+    return simulate(tasks, cfg)

@@ -1,0 +1,105 @@
+"""DSE tests: beam search (Alg. 1), brute force, TG baseline, create_acc."""
+import pytest
+
+from repro.core.dse.beam import beam_search
+from repro.core.dse.brute import brute_force_search
+from repro.core.dse.create_acc import LatencyCache, create_acc
+from repro.core.dse.space import evaluate_design, fixed_design
+from repro.core.dse.throughput import throughput_guided_design, tg_simtasks
+from repro.core.perfmodel.hardware import paper_platform
+from repro.core.rt.schedulability import max_utilization
+from repro.core.workloads import PAPER_WORKLOADS, make_taskset
+
+PLAT = paper_platform(16)
+COMBO = ("pointnet", "mlp_mixer")
+WLS = [PAPER_WORKLOADS[c] for c in COMBO]
+
+
+@pytest.fixture(scope="module")
+def feasible_result():
+    ts = make_taskset(COMBO, (1.0, 1.0), PLAT)
+    return ts, beam_search(WLS, ts, PLAT, max_m=4, beam_width=8)
+
+
+def test_beam_finds_feasible_and_all_pass_eq3(feasible_result):
+    ts, res = feasible_result
+    assert res.succ_pts, "no feasible designs on an easy taskset"
+    for dp in res.succ_pts[:50]:
+        assert dp.max_util <= 1.0 + 1e-9
+        # splits cover every layer of every task
+        for i, w in enumerate(WLS):
+            assert sum(dp.splits[k][i] for k in range(dp.n_stages)) == w.num_layers
+        assert dp.chips_used() <= PLAT.total_chips
+        # recomputing the utilization from scratch agrees
+        table = evaluate_design(dp.accs, dp.splits, WLS, ts)
+        assert max_utilization(table, ts, False) == pytest.approx(
+            dp.max_util, rel=1e-9
+        )
+
+
+def test_beam_objective_beats_fixed_design(feasible_result):
+    ts, res = feasible_result
+    fx = fixed_design(WLS, ts, PLAT)
+    assert res.best.max_util < fx.max_util
+
+
+def test_wider_beam_never_worse():
+    """Beam-8 expands a superset of beam-1's parents (stable sort), so
+    whenever beam-1 finds a design, beam-8's best is at least as good."""
+    ts = make_taskset(COMBO, (0.7, 0.7), PLAT)
+    b1 = beam_search(WLS, ts, PLAT, max_m=4, beam_width=1)
+    b8 = beam_search(WLS, ts, PLAT, max_m=4, beam_width=8)
+    assert b1.best is not None, "easy taskset should be feasible at B=1"
+    assert b8.best.max_util <= b1.best.max_util + 1e-12
+
+
+def test_brute_force_at_least_as_good_as_beam():
+    # small problem so BFS stays tractable
+    small = [
+        PAPER_WORKLOADS["pointnet"],
+        PAPER_WORKLOADS["deit_t"],
+    ]
+    plat = paper_platform(6)
+    ts = make_taskset(("pointnet", "deit_t"), (0.8, 0.8), plat)
+    beam = beam_search(small, ts, plat, max_m=3, beam_width=2)
+    brute = brute_force_search(small, ts, plat, max_m=3)
+    assert brute.stats.create_acc_calls >= beam.stats.create_acc_calls
+    if beam.best is not None:
+        assert brute.best is not None
+        assert brute.best.max_util <= beam.best.max_util + 1e-12
+
+
+def test_infeasible_taskset_returns_empty():
+    ts = make_taskset(COMBO, (4.0, 4.0), PLAT)  # > capacity by conservation
+    res = beam_search(WLS, ts, PLAT, max_m=4, beam_width=4)
+    assert res.best is None and not res.succ_pts
+
+
+def test_create_acc_edge_cases():
+    ts = make_taskset(COMBO, (1.0, 1.0), PLAT)
+    cache = LatencyCache(WLS)
+    spans_empty = tuple((0, 0) for _ in WLS)
+    _, util, lats = create_acc(spans_empty, 4, ts, cache)
+    assert util == 0.0 and all(l == 0.0 for l in lats)
+    spans_all = tuple((0, w.num_layers) for w in WLS)
+    _, util_nochip, _ = create_acc(spans_all, 0, ts, cache)
+    assert util_nochip == float("inf")
+    # more chips never hurt
+    _, u4, _ = create_acc(spans_all, 4, ts, cache)
+    _, u16, _ = create_acc(spans_all, 16, ts, cache)
+    assert u16 <= u4 + 1e-12
+
+
+def test_throughput_guided_design_structure():
+    ts = make_taskset(COMBO, (1.0, 1.0), PLAT)
+    tg = throughput_guided_design(WLS, ts, PLAT, n_accs=4)
+    assert sum(a.chips for a in tg.accs) == PLAT.total_chips
+    # every layer mapped exactly once
+    for i, w in enumerate(WLS):
+        assert sum(tg.table.layer_split[i]) == w.num_layers
+    # sequences consistent with the aggregate table
+    for i in range(len(WLS)):
+        seq_total = sum(t for _, t in tg.sequences[i])
+        assert seq_total == pytest.approx(sum(tg.table.base[i]), rel=1e-9)
+    sims = tg_simtasks(tg, ts)
+    assert len(sims) == len(WLS)

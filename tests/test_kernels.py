@@ -1,0 +1,175 @@
+"""Per-kernel correctness: shape/dtype sweeps against the ref.py oracles
+(interpret mode executes the kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.preemptible_matmul import (
+    grid_geometry,
+    matmul,
+    matmul_resumable,
+    matmul_window,
+    pick_window,
+)
+from repro.kernels.preemptible_matmul.ref import (
+    matmul_partial_ref,
+    matmul_ref,
+    matmul_window_ref,
+)
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+BLOCK = (128, 128, 128)
+
+
+def _rel_err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.abs(a - b).max() / (np.abs(b).max() + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# preemptible matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "M,K,N", [(128, 128, 128), (256, 128, 384), (384, 256, 256)]
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pmm_full_product(M, K, N, dtype):
+    a = jax.random.normal(jax.random.PRNGKey(0), (M, K), dtype)
+    b = jax.random.normal(jax.random.PRNGKey(1), (K, N), dtype)
+    got = matmul(a, b, block=BLOCK, window_tiles=2)
+    want = matmul_ref(a, b)
+    assert _rel_err(got, want) < (1e-5 if dtype == jnp.float32 else 2e-2)
+
+
+@pytest.mark.parametrize("window", [1, 2, 3, 6])
+def test_pmm_window_oracle(window):
+    M, K, N = 256, 128, 384  # 2x3 = 6 tiles
+    a = jax.random.normal(jax.random.PRNGKey(2), (M, K), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(3), (K, N), jnp.float32)
+    w = pick_window(6, window)
+    c = jnp.zeros((M, N), jnp.float32)
+    for start in range(0, 6, w):
+        got, nxt = matmul_window(a, b, c, start, block=BLOCK, window_tiles=w)
+        want = matmul_window_ref(a, b, c, start, w, BLOCK)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+        c = got
+    np.testing.assert_allclose(c, matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_pmm_preempt_resume_identity():
+    """Preempting between windows and resuming is exact (paper §3.4)."""
+    M, K, N = 256, 256, 256
+    a = jax.random.normal(jax.random.PRNGKey(4), (M, K), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(5), (K, N), jnp.bfloat16)
+    c1, prog = matmul_resumable(a, b, block=BLOCK, window_tiles=1, max_windows=3)
+    assert not prog.done and prog.next_tile == 3
+    np.testing.assert_allclose(
+        c1, matmul_partial_ref(a, b, 3, BLOCK), rtol=1e-2, atol=1e-2
+    )
+    # interleave: run an unrelated job (separate buffers), then resume
+    other, _ = matmul_resumable(b, a, block=BLOCK, window_tiles=2)
+    c2, prog2 = matmul_resumable(
+        a, b, block=BLOCK, window_tiles=1, start_tile=prog.next_tile, c_acc=c1
+    )
+    assert prog2.done
+    assert _rel_err(c2, matmul_ref(a, b)) < 2e-2
+
+
+def test_pmm_geometry_and_window_picker():
+    n_m, n_n, k_steps, total = grid_geometry(384, 256, 128, BLOCK)
+    assert (n_m, n_n, k_steps, total) == (3, 2, 1, 6)
+    assert pick_window(6, 4) == 3  # largest divisor <= 4
+    assert pick_window(6, 7) == 6
+    assert pick_window(5, 2) == 1
+    with pytest.raises(ValueError):
+        grid_geometry(100, 128, 128, BLOCK)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,bq,bk", [(128, 64, 64), (256, 64, 128), (64, 64, 64)])
+@pytest.mark.parametrize("H,Hkv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_attention_sweep(S, bq, bk, H, Hkv):
+    B, hd = 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    got = flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = attention_ref(q, k, v)
+    assert _rel_err(got, want) < 1e-5
+
+
+def test_flash_attention_bf16_and_noncausal():
+    B, S, H, hd = 1, 128, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, H, hd), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, H, hd), jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    want = attention_ref(q, k, v, causal=False)
+    assert _rel_err(got, want) < 3e-2
+
+
+# ---------------------------------------------------------------------------
+# mamba scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,chunk", [(32, 8), (64, 16), (64, 64), (48, 16)])
+def test_mamba_scan_sweep(S, chunk):
+    B, di, ns = 2, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(8), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di)))
+    Bm = jax.random.normal(ks[1], (B, S, ns))
+    Cm = jax.random.normal(ks[2], (B, S, ns))
+    x = jax.random.normal(ks[3], (B, S, di))
+    A = -jnp.abs(jax.random.normal(ks[4], (di, ns)))
+    y, h = mamba_scan(dt, Bm, Cm, x, A, chunk=chunk)
+    yr, hr = mamba_scan_ref(dt, Bm, Cm, x, A)
+    assert _rel_err(y, yr) < 1e-4
+    assert _rel_err(h, hr) < 1e-4
+
+
+def test_mamba_scan_carry_chaining():
+    """Scanning two halves with carried h equals one full scan."""
+    B, S, di, ns = 1, 32, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di)))
+    Bm = jax.random.normal(ks[1], (B, S, ns))
+    Cm = jax.random.normal(ks[2], (B, S, ns))
+    x = jax.random.normal(ks[3], (B, S, di))
+    A = -jnp.abs(jax.random.normal(ks[4], (di, ns)))
+    y_full, h_full = mamba_scan(dt, Bm, Cm, x, A, chunk=8)
+    half = S // 2
+    y1, h1 = mamba_scan(dt[:, :half], Bm[:, :half], Cm[:, :half], x[:, :half], A, chunk=8)
+    y2, h2 = mamba_scan(dt[:, half:], Bm[:, half:], Cm[:, half:], x[:, half:], A, h0=h1, chunk=8)
+    np.testing.assert_allclose(
+        np.concatenate([y1, y2], axis=1), np.asarray(y_full), rtol=1e-4, atol=1e-5
+    )
+    np.testing.assert_allclose(h2, h_full, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,chunk", [(64, 16), (128, 32), (32, 32)])
+def test_rwkv6_scan_sweep(S, chunk):
+    B, H, hd = 2, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(10), 5)
+    r = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd)) * 0.3
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    logit = jnp.clip(jax.random.normal(ks[3], (B, S, H, hd)), -8, -1)
+    w = jnp.exp(-jnp.exp(logit))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    y, sf = rwkv6_scan(r, k, v, w, u, chunk=chunk)
+    yr, sr = rwkv6_scan_ref(r, k, v, w, u)
+    assert _rel_err(y, yr) < 1e-4
+    assert _rel_err(sf, sr) < 1e-4

@@ -1,0 +1,242 @@
+"""Per-arch smoke tests (reduced same-family configs) + model math."""
+import importlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ArchConfig, smoke_config
+from repro.models import layers as L
+from repro.models import lm
+from repro.models.extract import arch_workload
+
+ARCHS = [
+    "jamba_v0_1_52b",
+    "granite_moe_3b_a800m",
+    "dbrx_132b",
+    "rwkv6_7b",
+    "internvl2_76b",
+    "qwen1_5_32b",
+    "minitron_4b",
+    "mistral_nemo_12b",
+    "stablelm_1_6b",
+    "musicgen_medium",
+]
+
+
+def _cfg(name):
+    return importlib.import_module(f"repro.configs.{name}").CONFIG
+
+
+def _batch(cfg, B, S, key):
+    if cfg.frontend == "none":
+        return {
+            "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+        }
+    return {
+        "embeds": jax.random.normal(key, (B, S, cfg.frontend_dim), jnp.bfloat16),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab),
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one train step on the reduced config: shapes + finite."""
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    cfg = smoke_config(_cfg(arch))
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(key, cfg)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S, key)
+    logits = lm.forward(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+    loss, metrics = lm.loss_fn(params, cfg, batch)
+    assert bool(jnp.isfinite(loss))
+    grads = jax.grad(lambda p: lm.loss_fn(p, cfg, batch)[0])(params)
+    opt = adamw_init(params)
+    params2, opt2, m = adamw_update(params, grads, opt, AdamWConfig())
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    # parameters actually moved
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        params, params2,
+    )
+    assert max(jax.tree_util.tree_leaves(moved)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ["qwen1_5_32b", "rwkv6_7b", "jamba_v0_1_52b"])
+def test_prefill_decode_matches_forward(arch):
+    """Teacher forcing: decode logits at step S equal forward logits.
+
+    The decode path recomputes recurrences stepwise (vs chunked in
+    forward); bf16 + reassociation noise compounds over layers, so the
+    check is relative-L2 + argmax agreement, not elementwise equality.
+    """
+    cfg = smoke_config(_cfg(arch))
+    key = jax.random.PRNGKey(1)
+    # fp32 params: this tests *path equivalence* (chunked-vs-stepwise
+    # recurrences), not bf16 accumulation noise (covered elsewhere)
+    params = jax.tree_util.tree_map(
+        lambda x: x.astype(jnp.float32) if x.dtype == jnp.bfloat16 else x,
+        lm.init_params(key, cfg),
+    )
+    B, S, L = 2, 16, 24
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab)
+    # full forward over S+1 tokens: logits at position S-1 predict token S
+    full = lm.forward(params, cfg, {"tokens": toks}, remat=False)
+    # prefill S tokens, then decode token S
+    logits_p, cache = lm.prefill(params, cfg, {"tokens": toks[:, :S]}, L)
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(full[:, S - 1]), rtol=2e-2, atol=2e-2
+    )
+    pos = jnp.full((B,), S, jnp.int32)
+    logits_d, _ = lm.decode_step(params, cfg, cache, {"tokens": toks[:, S]}, pos)
+    got = np.asarray(logits_d, np.float32)
+    want = np.asarray(full[:, S], np.float32)
+    rel_l2 = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel_l2 < 0.05, rel_l2
+    assert (got.argmax(-1) == want.argmax(-1)).mean() >= 0.5
+
+
+def test_moe_capacity_matches_dropless_when_generous():
+    cfg = ArchConfig(
+        name="t", family="moe", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=32, vocab=128, n_experts=8, top_k=2,
+        capacity_factor=8.0,
+    )
+    p = L.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 64), jnp.bfloat16)
+    y_ref = L.moe_dropless(p, x, cfg).astype(jnp.float32)
+    for groups in (1, 2, 4):
+        y = L.moe_capacity(p, x, cfg, groups=groups).astype(jnp.float32)
+        rel = float(jnp.abs(y - y_ref).max() / jnp.abs(y_ref).max())
+        assert rel < 2e-2, (groups, rel)
+
+
+def test_moe_capacity_drops_under_tight_capacity():
+    cfg = ArchConfig(
+        name="t", family="moe", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=16, vocab=64, n_experts=4, top_k=2,
+        capacity_factor=0.25,
+    )
+    p = L.moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 32), jnp.bfloat16)
+    y_tight = L.moe_capacity(p, x, cfg, groups=1)
+    # residual path preserved: output finite and not exploding
+    assert bool(jnp.isfinite(y_tight).all())
+
+
+def test_rwkv_chunked_matches_stepwise():
+    """models.rwkv chunked scan == naive per-token recurrence."""
+    from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+    from repro.models import rwkv as R
+
+    cfg = smoke_config(_cfg("rwkv6_7b"))
+    p = R.rwkv_tmix_init(jax.random.PRNGKey(3), cfg)
+    B, S, d = 1, 32, cfg.d_model
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S, d), jnp.float32) * 0.1
+    xn = x  # feed raw: compare the wkv core only via the module output
+    out_chunk, st = R._tmix_impl(p, x, cfg, chunk=8)
+    out_full, st2 = R._tmix_impl(p, x, cfg, chunk=32)
+    np.testing.assert_allclose(
+        np.asarray(out_chunk, np.float32), np.asarray(out_full, np.float32),
+        rtol=1e-3, atol=1e-3,
+    )
+    np.testing.assert_allclose(
+        np.asarray(st["S"]), np.asarray(st2["S"]), rtol=1e-3, atol=1e-3
+    )
+
+
+def test_mamba_chunked_matches_unchunked():
+    from repro.models import ssm as Smod
+
+    cfg = smoke_config(_cfg("jamba_v0_1_52b"))
+    p = Smod.mamba_init(jax.random.PRNGKey(5), cfg)
+    B, S = 1, 32
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, S, cfg.d_model), jnp.float32) * 0.2
+    y8, c8 = Smod._mamba_impl(p, x, cfg)
+    import dataclasses
+    cfg_full = dataclasses.replace(cfg, mamba_chunk=32)
+    y32, c32 = Smod._mamba_impl(p, x, cfg_full)
+    np.testing.assert_allclose(
+        np.asarray(y8, np.float32), np.asarray(y32, np.float32),
+        rtol=1e-3, atol=1e-3,
+    )
+    np.testing.assert_allclose(c8["ssm"], c32["ssm"], rtol=1e-3, atol=1e-3)
+
+
+def test_layer_plan_patterns():
+    jamba = _cfg("jamba_v0_1_52b")
+    plan = jamba.layer_plan()
+    assert len(plan) == 32
+    assert sum(1 for m, _ in plan if m == "attn") == 4  # 1:7 interleave
+    assert sum(1 for _, f in plan if f == "moe") == 16  # every other
+    assert len(jamba.pattern()) == 8 and jamba.n_repeats == 4
+    rwkv = _cfg("rwkv6_7b")
+    assert all(m == "rwkv" for m, _ in rwkv.layer_plan())
+    dense = _cfg("qwen1_5_32b")
+    assert all(f == "dense" for _, f in dense.layer_plan())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_extracted_workload_positive_costs(arch):
+    cfg = _cfg(arch)
+    for mode in ("prefill", "decode", "train"):
+        wl = arch_workload(cfg, batch=4, seq=256, mode=mode)
+        assert wl.num_layers > 0
+        assert wl.total_flops() > 0 and wl.total_bytes() > 0
+    # train > prefill flops; decode much smaller
+    f_train = arch_workload(cfg, 4, 256, "train").total_flops()
+    f_pre = arch_workload(cfg, 4, 256, "prefill").total_flops()
+    f_dec = arch_workload(cfg, 4, 256, "decode").total_flops()
+    assert f_train > f_pre > f_dec
+
+
+def test_param_counts_sane():
+    # dense: active == total; moe: active < total
+    q = _cfg("qwen1_5_32b").param_counts()
+    assert q["active"] == q["total"]
+    assert 25e9 < q["total"] < 40e9  # ~32B
+    d = _cfg("dbrx_132b").param_counts()
+    assert d["active"] < d["total"]
+    assert 110e9 < d["total"] < 150e9
+    g = _cfg("granite_moe_3b_a800m").param_counts()
+    assert g["active"] < g["total"] / 2
+
+
+def test_int8_kv_decode_close_to_bf16():
+    """Serving §Perf variant: int8 KV decode within quantization noise."""
+    from repro.models.layers import quantize_kv
+
+    cfg = smoke_config(_cfg("qwen1_5_32b"))
+    key = jax.random.PRNGKey(1)
+    params = lm.init_params(key, cfg)
+    B, S, L = 2, 16, 24
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab)
+    _, cache = lm.prefill(params, cfg, {"tokens": toks[:, :S]}, L)
+    pos = jnp.full((B,), S, jnp.int32)
+    ref, _ = lm.decode_step(params, cfg, cache, {"tokens": toks[:, S]}, pos)
+    cq = tuple(
+        {
+            "k": quantize_kv(b["k"])[0],
+            "v": quantize_kv(b["v"])[0],
+            "k_scale": quantize_kv(b["k"])[1],
+            "v_scale": quantize_kv(b["v"])[1],
+        }
+        for b in cache
+    )
+    q8, cq2 = lm.decode_step(
+        params, cfg, cq, {"tokens": toks[:, S]}, pos, kv_quant=True
+    )
+    got, want = np.asarray(q8, np.float32), np.asarray(ref, np.float32)
+    rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+    assert rel < 0.05, rel
+    assert (got.argmax(-1) == want.argmax(-1)).mean() >= 0.9
+    # cache stayed int8 and the new token landed
+    assert cq2[0]["k"].dtype == jnp.int8
+    assert bool((jnp.abs(cq2[0]["k"][:, :, :, S]) > 0).any())
