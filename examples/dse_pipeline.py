@@ -32,6 +32,7 @@ from repro.pipeline.executor import (
     make_stage_mesh,
     pipeline_backbone,
     reference_backbone,
+    use_mesh,
 )
 
 
@@ -74,7 +75,7 @@ def main():
     mesh = make_stage_mesh(4)
     micro = jax.random.normal(jax.random.PRNGKey(1), (8, 2, 32, 128),
                               jnp.bfloat16)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         out = pipeline_backbone(small, mesh, 4)(params["blocks"], micro)
     ref = reference_backbone(small, params, micro)
     err = float(jnp.abs(out.astype(jnp.float32)

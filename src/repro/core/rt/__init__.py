@@ -18,6 +18,10 @@ from repro.core.rt.schedulability import (
     max_utilization,
     srt_schedulable,
     effective_wcets,
+    stage_slacks,
+    max_admissible_rate,
+    task_rate_sensitivity,
+    utilization_headroom,
 )
 from repro.core.rt.response_time import (
     busy_period,
@@ -36,6 +40,10 @@ __all__ = [
     "max_utilization",
     "srt_schedulable",
     "effective_wcets",
+    "stage_slacks",
+    "max_admissible_rate",
+    "task_rate_sensitivity",
+    "utilization_headroom",
     "busy_period",
     "fifo_stage_bound",
     "edf_stage_bound",

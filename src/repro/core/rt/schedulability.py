@@ -82,6 +82,71 @@ def utilization_headroom(
     return float("inf") if mu <= 0 else 1.0 / mu
 
 
+def stage_slacks(
+    table: SegmentTable, taskset: TaskSet, preemptive: bool
+) -> list[float]:
+    """Per-stage admission slack ``1 - u^k`` — the utilization budget an
+    online admission controller may still hand out on each accelerator
+    before Eq. 3 flips."""
+    return [
+        1.0 - u for u in stage_utilizations(table, taskset, preemptive)
+    ]
+
+
+def max_admissible_rate(
+    table: SegmentTable,
+    taskset: TaskSet,
+    cand_base: Sequence[float],
+    preemptive: bool,
+) -> float:
+    """Largest release rate (jobs/s) at which a *candidate* task with
+    per-stage base WCETs ``cand_base`` keeps every stage at ``u^k <= 1``.
+
+    Eq. 2 is linear in the candidate's rate ``r``: stage k moves to
+    ``u^k + r * e_cand^k``, so the bound is
+    ``min_k (1 - u^k) / e_cand^k`` over the candidate's active stages.
+    Returns ``inf`` for an empty candidate and ``0`` when some active
+    stage is already saturated.
+    """
+    if len(cand_base) != table.n_stages:
+        raise ValueError("candidate WCET vector length != n_stages")
+    rate = float("inf")
+    for k, b in enumerate(cand_base):
+        if b <= 0.0:
+            continue
+        e = b + (table.overhead[k] if preemptive else 0.0)
+        slack = 1.0 - stage_utilization(table, taskset, k, preemptive)
+        rate = min(rate, max(0.0, slack) / e)
+    return rate
+
+
+def task_rate_sensitivity(
+    table: SegmentTable, taskset: TaskSet, preemptive: bool
+) -> list[float]:
+    """Per-task max rate *multiplier* keeping Eq. 3 satisfied.
+
+    Scaling only task i's rate by ``s`` moves stage k to
+    ``u^k + (s - 1) * u_i^k``; the largest admissible ``s`` is
+    ``min_k 1 + (1 - u^k) / u_i^k`` over task i's active stages — the
+    admission layer's sensitivity report ("how much more of *this*
+    traffic fits"). On an already-infeasible set the multiplier drops
+    below 1: the rate *reduction* that would restore Eq. 3 on the
+    task's worst stage.
+    """
+    utils = stage_utilizations(table, taskset, preemptive)
+    out = []
+    for i, t in enumerate(taskset.tasks):
+        s_max = float("inf")
+        for k in range(table.n_stages):
+            e = table.wcet(i, k, preemptive)
+            if e <= 0.0:
+                continue
+            u_ik = e / t.period
+            s_max = min(s_max, 1.0 + (1.0 - utils[k]) / u_ik)
+        out.append(s_max)
+    return out
+
+
 def density_check(
     table: SegmentTable, taskset: TaskSet, preemptive: bool
 ) -> list[float]:

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _scan_kernel(
     dt_ref,  # (1, ch, di) fp32
@@ -97,7 +99,7 @@ def mamba_scan_call(dt, B, C, x, A, h0, *, chunk: int, interpret: bool = True):
         ],
         scratch_shapes=[pltpu.VMEM((di, ns), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
     )

@@ -1,0 +1,14 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``TPUCompilerParams`` -> ``CompilerParams``); resolve whichever this
+JAX exposes so the kernels build on both sides of the rename.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:  # older releases
+    CompilerParams = pltpu.TPUCompilerParams

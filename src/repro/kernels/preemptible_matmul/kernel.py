@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 
 def _window_kernel(start_ref, a_ref, b_ref, cin_ref, o_ref, *, k_steps: int):
     k = pl.program_id(1)
@@ -94,7 +96,7 @@ def matmul_window_call(
         out_shape=jax.ShapeDtypeStruct(c_acc.shape, jnp.float32),
         input_output_aliases={3: 0},  # c_acc (after the scalar operand)
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
     )

@@ -33,6 +33,34 @@ from repro.configs.base import ArchConfig
 from repro.models import lm
 from repro.models.lm import NO_POLICY
 
+# --- version compatibility: shard_map moved to jax.*, check_rep was
+# renamed check_vma, and set_mesh/use_mesh only exist on newer JAX ---
+if hasattr(jax, "shard_map"):
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=False,
+        )
+
+else:
+    from jax.experimental.shard_map import shard_map as _legacy_shard_map
+
+    def _shard_map(f, mesh, in_specs, out_specs):
+        return _legacy_shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_rep=False,
+        )
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh`` across JAX versions."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # legacy: Mesh itself is a context manager
+
 
 def make_stage_mesh(n_stages: int):
     return jax.make_mesh((n_stages,), ("stage",))
@@ -105,12 +133,11 @@ def pipeline_backbone(cfg: ArchConfig, mesh, n_stages: int):
         )
         return outs[None]  # leading stage axis for the out_spec
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         staged,
         mesh=mesh,
         in_specs=(P("stage"), P()),
         out_specs=P("stage"),
-        check_vma=False,
     )
 
     def run(blocks_stacked, micro):

@@ -124,15 +124,32 @@ class ServeTask:
 
 
 class Job:
-    """One released inference + its progress-table rows."""
+    """One released inference + its progress-table rows.
+
+    ``best_effort`` jobs carry an infinite absolute deadline: EDF orders
+    them after every guaranteed job and they never count as deadline
+    misses — the degraded service class the traffic layer's shedding
+    policies demote to under overload.
+    """
 
     _ids = itertools.count()
 
-    def __init__(self, task_id: int, task: ServeTask, release: float, x0):
+    def __init__(
+        self,
+        task_id: int,
+        task: ServeTask,
+        release: float,
+        x0,
+        *,
+        best_effort: bool = False,
+    ):
         self.uid = next(Job._ids)
         self.task_id = task_id
         self.release = release
-        self.abs_deadline = release + task.deadline
+        self.best_effort = best_effort
+        self.abs_deadline = (
+            float("inf") if best_effort else release + task.deadline
+        )
         self.layer = 0  # next/current layer index
         self.x = x0  # current activation (input of self.layer)
         self.c_acc = None  # partial fp32 accumulator of current layer
@@ -145,24 +162,33 @@ class Job:
 
 
 class StageRuntime:
-    """One accelerator: job pool + running-job slot (paper Fig. 2)."""
+    """One accelerator: job pool + running-job slot (paper Fig. 2).
+
+    Best-effort jobs are genuinely demoted under both policies: EDF
+    orders their infinite deadline after every guaranteed job, and FIFO
+    keeps them in a second queue served only when no guaranteed job is
+    waiting.
+    """
 
     def __init__(self, idx: int, policy: str):
         self.idx = idx
         self.policy = policy
         self.fifo: deque[Job] = deque()
+        self.fifo_be: deque[Job] = deque()  # best-effort background
         self.edf: list[tuple[float, int, Job]] = []
         self.running: Job | None = None
 
     def push(self, job: Job) -> None:
         if self.policy == "fifo":
-            self.fifo.append(job)
+            (self.fifo_be if job.best_effort else self.fifo).append(job)
         else:
             heapq.heappush(self.edf, (job.abs_deadline, job.uid, job))
 
     def pop(self) -> Job | None:
         if self.policy == "fifo":
-            return self.fifo.popleft() if self.fifo else None
+            if self.fifo:
+                return self.fifo.popleft()
+            return self.fifo_be.popleft() if self.fifo_be else None
         return heapq.heappop(self.edf)[2] if self.edf else None
 
     def head_deadline(self) -> float:
@@ -170,7 +196,10 @@ class StageRuntime:
 
     def busy(self) -> bool:
         return (
-            self.running is not None or bool(self.fifo) or bool(self.edf)
+            self.running is not None
+            or bool(self.fifo)
+            or bool(self.fifo_be)
+            or bool(self.edf)
         )
 
 
@@ -189,7 +218,13 @@ class ServerReport:
 
 
 class PharosServer:
-    """Decentralized pipelined serving with FIFO/EDF + preemption."""
+    """Decentralized pipelined serving with FIFO/EDF + preemption.
+
+    ``clock``/``sleep`` are injectable (defaults: wall clock). All
+    timestamps inside one serving step come from the same clock, so a
+    virtual clock (repro.traffic.clock.VirtualClock) makes the runtime
+    fully deterministic for tests and for the traffic gateway.
+    """
 
     def __init__(
         self,
@@ -201,6 +236,8 @@ class PharosServer:
         window_tiles: int = 4,
         backend: str = "jnp",
         seed: int = 0,
+        clock=None,
+        sleep=None,
     ):
         if policy not in ("fifo", "edf"):
             raise ValueError(policy)
@@ -209,6 +246,10 @@ class PharosServer:
         self.block = block
         self.window_tiles = window_tiles
         self.backend = backend
+        self.clock = clock if clock is not None else time.perf_counter
+        self.sleep = sleep if sleep is not None else time.sleep
+        self.released_per_task = [0] * len(tasks)
+        self.completed_per_task = [0] * len(tasks)
         self.stages = [StageRuntime(k, policy) for k in range(n_stages)]
         key = jax.random.PRNGKey(seed)
         self.inputs = []
@@ -264,6 +305,7 @@ class PharosServer:
         if job.layer >= len(t.weights):
             job.done_at = now
             self.report.jobs_completed += 1
+            self.completed_per_task[job.task_id] += 1
             rt = now - job.release
             self.report.response_times[t.name].append(rt)
             if now > job.abs_deadline:
@@ -314,8 +356,62 @@ class PharosServer:
         self.report.windows_executed += 1
         if job.next_tile >= total:
             st.running = None
-            self._finish_layer_or_forward(job, time.perf_counter())
+            # Completion is stamped off the *injected* clock (the window
+            # just executed, so re-read rather than reuse loop-entry
+            # `now`) — keeps all timestamps on one timebase.
+            self._finish_layer_or_forward(job, self.clock())
         return True
+
+    # ------------------------------------------------------------------
+    # traffic-layer API: explicit release / single-step / backlog probes
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        task_id: int,
+        release: float | None = None,
+        *,
+        best_effort: bool = False,
+    ) -> Job:
+        """Release one job of ``task_id`` (the TrafficGateway entry
+        point; `run` uses it for its own periodic releases)."""
+        t = self.tasks[task_id]
+        job = Job(
+            task_id,
+            t,
+            self.clock() if release is None else release,
+            self.inputs[task_id],
+            best_effort=best_effort,
+        )
+        self.stages[t.stage_of_layer[0]].push(job)
+        self.report.jobs_released += 1
+        self.released_per_task[task_id] += 1
+        return job
+
+    def step(self) -> bool:
+        """Run at most one tile window on every stage; True if any ran."""
+        ran = False
+        now = self.clock()
+        for st in self.stages:
+            ran |= self._step_stage(st, now)
+        return ran
+
+    def pending(self, task_id: int) -> int:
+        """Jobs of ``task_id`` released but not yet completed."""
+        return (
+            self.released_per_task[task_id]
+            - self.completed_per_task[task_id]
+        )
+
+    def queue_depths(self) -> list[int]:
+        """Per-stage backlog (pool + in-flight) — the observable the
+        traffic layer checks against the analysis."""
+        return [
+            len(st.fifo)
+            + len(st.fifo_be)
+            + len(st.edf)
+            + (1 if st.running else 0)
+            for st in self.stages
+        ]
 
     # ------------------------------------------------------------------
     def warmup(self) -> None:
@@ -340,24 +436,18 @@ class PharosServer:
                 x = c  # chain shapes like the real execution
 
     def run(self, horizon_s: float) -> ServerReport:
-        """Serve for ``horizon_s`` wall seconds (periodic releases)."""
+        """Serve for ``horizon_s`` clock seconds (periodic releases)."""
         self.warmup()
-        t0 = time.perf_counter()
+        t0 = self.clock()
         next_release = [t0 for _ in self.tasks]
         while True:
-            now = time.perf_counter()
+            now = self.clock()
             if now - t0 >= horizon_s:
                 break
             for i, t in enumerate(self.tasks):
                 while next_release[i] <= now:
-                    job = Job(i, t, next_release[i], self.inputs[i])
-                    first = t.stage_of_layer[0]
-                    self.stages[first].push(job)
-                    self.report.jobs_released += 1
+                    self.submit(i, next_release[i])
                     next_release[i] += t.period
-            ran = False
-            for st in self.stages:
-                ran |= self._step_stage(st, now)
-            if not ran:
-                time.sleep(1e-4)  # idle
+            if not self.step():
+                self.sleep(1e-4)  # idle
         return self.report

@@ -28,13 +28,24 @@ from dataclasses import dataclass, field
 
 @dataclass(frozen=True)
 class SimTask:
-    """One periodic task: ordered segments of (stage, wcet)."""
+    """One task: ordered segments of (stage, wcet).
+
+    Releases are strictly periodic (``phase + n * period``) unless
+    ``arrivals`` gives an explicit release-time sequence — sporadic,
+    Poisson, bursty MMPP, and trace-driven traffic (repro.traffic) all
+    flow through that one hook. With explicit arrivals ``period`` is
+    only used for analysis/metrics (set it to the minimum inter-arrival
+    for sporadic traffic, or the provisioned period for stochastic
+    traffic) and ``phase`` is ignored; the simulation releases exactly
+    ``len(arrivals)`` jobs.
+    """
 
     segments: tuple[tuple[int, float], ...]
     period: float
     deadline: float = 0.0  # relative; 0 -> implicit (= period)
     phase: float = 0.0
     name: str = ""
+    arrivals: tuple[float, ...] | None = None  # explicit release times
 
     def __post_init__(self) -> None:
         if self.deadline == 0.0:
@@ -43,6 +54,20 @@ class SimTask:
         object.__setattr__(self, "segments", segs)
         if not segs:
             raise ValueError("task has no non-empty segments")
+        if self.arrivals is not None:
+            arr = tuple(float(a) for a in self.arrivals)
+            if any(a < 0.0 for a in arr):
+                raise ValueError("arrival times must be non-negative")
+            if any(b < a for a, b in zip(arr, arr[1:])):
+                raise ValueError("arrival times must be non-decreasing")
+            object.__setattr__(self, "arrivals", arr)
+
+    def min_inter_arrival(self) -> float:
+        """Smallest observed gap (periodic tasks: the period) — the
+        conservative 'period' for utilization accounting."""
+        if self.arrivals is None or len(self.arrivals) < 2:
+            return self.period
+        return min(b - a for a, b in zip(self.arrivals, self.arrivals[1:]))
 
 
 @dataclass(frozen=True)
@@ -293,7 +318,11 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
     # ---- main loop ----
     release_counts = [0] * n_tasks
     for t_id, t in enumerate(tasks):
-        push(t.phase, 0, (t_id,))
+        if t.arrivals is not None:
+            if t.arrivals:
+                push(t.arrivals[0], 0, (t_id,))
+        else:
+            push(t.phase, 0, (t_id,))
 
     growth = False
     while evq:
@@ -312,7 +341,11 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
             if pending_count[t_id] > cfg.backlog_limit:
                 overload = True
             try_admit(job, now)
-            push(now + t.period, 0, (t_id,))
+            if t.arrivals is not None:
+                if j_idx + 1 < len(t.arrivals):
+                    push(t.arrivals[j_idx + 1], 0, (t_id,))
+            else:
+                push(now + t.period, 0, (t_id,))
         else:
             st_idx, epoch = data
             st = stages[st_idx]
@@ -327,13 +360,23 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
     # this cap are NOT divergence, no matter how the finite-horizon
     # halves drift (near-commensurate periods can push the first
     # collision arbitrarily late).
+    # Explicit-arrival tasks use their minimum observed inter-arrival as
+    # the utilization-accounting period — at most as many releases can
+    # occur in any interval as a periodic task at that gap, so the cap
+    # stays a valid upper bound (and degrades to inf for bursty traces
+    # whose min gap saturates a stage — conservative direction).
     theory_cap = 0.0
+    acct_periods = [t.min_inter_arrival() for t in tasks]
     for k in range(n_stages):
         e_k = [
             sum(w for st, w in t.segments if st == k) for t in tasks
         ]
-        u_k = sum(e / t.period for e, t in zip(e_k, tasks))
-        if u_k >= 1.0 - 1e-12:
+        u_k = sum(
+            e / p for e, p in zip(e_k, acct_periods) if p > 0.0
+        )
+        if u_k >= 1.0 - 1e-12 or any(
+            e > 0.0 and p <= 0.0 for e, p in zip(e_k, acct_periods)
+        ):
             theory_cap = math.inf
             break
         theory_cap += sum(e_k) / (1.0 - u_k)
@@ -381,13 +424,19 @@ def simulate_taskset(
     horizon: float = 0.0,
     overheads: list[StageOverhead] | None = None,
     mapping_orders: list[list[int]] | None = None,
+    arrivals: list[list[float] | None] | None = None,
 ) -> SimResult:
     """Bridge from `SegmentTable`/`TaskSet` (core.rt) to the simulator.
 
     ``mapping_orders`` optionally gives, per task, the order in which its
     stages are visited (for non-chained TG baselines); default is
     ascending stage index (the PHAROS pipelined topology).
+
+    ``arrivals`` optionally gives, per task, an explicit release-time
+    sequence (see `SimTask.arrivals`); ``None`` entries stay periodic.
     """
+    if arrivals is not None and len(arrivals) != len(taskset):
+        raise ValueError("arrivals length != taskset size")
     tasks = []
     for i, t in enumerate(taskset.tasks):
         order = (
@@ -396,8 +445,15 @@ def simulate_taskset(
             else table.active_stages(i)
         )
         segs = tuple((k, table.base[i][k]) for k in order if table.base[i][k] > 0)
+        arr = arrivals[i] if arrivals is not None else None
         tasks.append(
-            SimTask(segments=segs, period=t.period, deadline=t.deadline, name=t.name)
+            SimTask(
+                segments=segs,
+                period=t.period,
+                deadline=t.deadline,
+                name=t.name,
+                arrivals=tuple(arr) if arr is not None else None,
+            )
         )
     if overheads is None and policy == "edf":
         overheads = [

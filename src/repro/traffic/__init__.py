@@ -1,0 +1,85 @@
+"""Traffic & admission control for the PHAROS serving stack.
+
+Turns the paper's design-time analysis (Eqs. 2–3, response bounds) into
+an *online* layer in front of the serving runtime:
+
+- `arrival`   — seedable arrival models (periodic, sporadic, Poisson,
+  bursty MMPP, trace replay) behind one `ArrivalProcess` protocol;
+- `admission` — `AdmissionController`: O(stages) admit/reject verdicts
+  that agree bit-exactly with a full `srt_schedulable` re-analysis,
+  plus headroom/sensitivity reports;
+- `shedding`  — overload policies (reject-newest, shed-by-value,
+  degrade-to-best-effort) + the `BacklogMonitor` that engages them when
+  observed backlog contradicts the analysis;
+- `gateway`   — `TrafficGateway`: the admission-controlled front door
+  releasing `ArrivalProcess` traffic into a `PharosServer`;
+- `scenarios` — named traffic mixes (smart-transportation style) built
+  from the paper workloads and the LM `configs/`;
+- `clock`     — `WallClock` / deterministic `VirtualClock` shared by
+  gateway and server.
+"""
+from repro.traffic.admission import (
+    AdmissionController,
+    AdmissionDecision,
+    HeadroomReport,
+    TaskRequest,
+)
+from repro.traffic.arrival import (
+    ArrivalProcess,
+    MMPPArrivals,
+    PeriodicArrivals,
+    PoissonArrivals,
+    SporadicArrivals,
+    TraceArrivals,
+    merge_arrivals,
+)
+from repro.traffic.clock import VirtualClock, WallClock
+from repro.traffic.gateway import GatewayReport, TrafficGateway
+from repro.traffic.scenarios import (
+    ArrivalSpec,
+    BuiltScenario,
+    TenantSpec,
+    TrafficScenario,
+    build,
+    get_scenario,
+    list_scenarios,
+    register,
+)
+from repro.traffic.shedding import (
+    BacklogMonitor,
+    DegradeToBestEffort,
+    RejectNewest,
+    ShedByValue,
+    get_policy,
+)
+
+__all__ = [
+    "AdmissionController",
+    "AdmissionDecision",
+    "HeadroomReport",
+    "TaskRequest",
+    "ArrivalProcess",
+    "PeriodicArrivals",
+    "SporadicArrivals",
+    "PoissonArrivals",
+    "MMPPArrivals",
+    "TraceArrivals",
+    "merge_arrivals",
+    "VirtualClock",
+    "WallClock",
+    "TrafficGateway",
+    "GatewayReport",
+    "ArrivalSpec",
+    "TenantSpec",
+    "TrafficScenario",
+    "BuiltScenario",
+    "build",
+    "get_scenario",
+    "list_scenarios",
+    "register",
+    "BacklogMonitor",
+    "RejectNewest",
+    "ShedByValue",
+    "DegradeToBestEffort",
+    "get_policy",
+]

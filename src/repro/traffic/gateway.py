@@ -1,0 +1,221 @@
+"""`TrafficGateway`: the admission-controlled front door of a
+`PharosServer`.
+
+The gateway owns the traffic side of serving: each tenant (one
+`ServeTask` on the server) comes with a `TaskRequest` (its analysis
+contract) and an `ArrivalProcess` (its actual traffic). At ``run``:
+
+1. every tenant is submitted to the `AdmissionController` — rejected
+   tenants release nothing (their traffic is refused up front);
+2. admitted tenants' arrival traces are merged into one release
+   schedule; each due release is checked against the `BacklogMonitor`
+   and, while observed backlog contradicts the analysis, routed through
+   the `SheddingPolicy` (submit / drop / degrade-to-best-effort);
+3. the server is stepped between releases. With a `VirtualClock` the
+   whole run is deterministic: each serving iteration charges
+   ``virtual_dt`` seconds, and idle gaps fast-forward to the next
+   arrival.
+
+The gateway and server must share a timebase: construct the server with
+``clock=clk.now, sleep=clk.sleep`` and hand the same ``clk`` here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+from repro.pipeline.serve import PharosServer
+from repro.traffic.admission import (
+    AdmissionController,
+    AdmissionDecision,
+    TaskRequest,
+)
+from repro.traffic.arrival import ArrivalProcess, merge_arrivals
+from repro.traffic.clock import WallClock
+from repro.traffic.shedding import (
+    BEST_EFFORT,
+    DROP,
+    BacklogMonitor,
+    SheddingPolicy,
+)
+
+
+@dataclass
+class TenantStats:
+    name: str
+    admitted: bool
+    scheduled: int = 0  # arrivals inside the horizon
+    released: int = 0  # submitted with a guarantee
+    degraded: int = 0  # submitted best-effort
+    shed: int = 0  # dropped
+    release_jitter: list[float] = field(default_factory=list)
+
+    def max_jitter(self) -> float:
+        return max(self.release_jitter) if self.release_jitter else 0.0
+
+
+@dataclass
+class GatewayReport:
+    tenants: list[TenantStats]
+    decisions: list[AdmissionDecision]
+    server_report: object  # ServerReport
+
+    def tenant(self, name: str) -> TenantStats:
+        for t in self.tenants:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+    def total_shed(self) -> int:
+        return sum(t.shed for t in self.tenants)
+
+    def total_released(self) -> int:
+        return sum(t.released + t.degraded for t in self.tenants)
+
+
+class TrafficGateway:
+    def __init__(
+        self,
+        server: PharosServer,
+        admission: AdmissionController,
+        requests: Sequence[TaskRequest],
+        arrivals: Sequence[ArrivalProcess],
+        *,
+        shedding: SheddingPolicy | None = None,
+        monitor: BacklogMonitor | None = None,
+        clock=None,
+    ):
+        if not (len(server.tasks) == len(requests) == len(arrivals)):
+            raise ValueError(
+                "server tasks / requests / arrivals must align 1:1"
+            )
+        self.server = server
+        self.admission = admission
+        self.requests = list(requests)
+        self.arrivals = list(arrivals)
+        self.shedding = shedding
+        self.monitor = monitor or BacklogMonitor()
+        self.clock = clock or WallClock()
+        self._admitted_idx: list[int] | None = None
+        self._limits: list[int] = []
+
+    # -- phase 1: tenancy admission -----------------------------------
+    def open(self) -> list[AdmissionDecision]:
+        """Run admission for every tenant (idempotent)."""
+        if self._admitted_idx is not None:
+            return self.admission.decisions
+        self._admitted_idx = []
+        for i, req in enumerate(self.requests):
+            dec = self.admission.admit(req)
+            if dec.admitted:
+                self._admitted_idx.append(i)
+        # backlog limits from the post-admission response bounds
+        bounds = self.admission.response_bounds()
+        self._limits = [
+            self.monitor.limit_for(
+                bounds.get(req.name, float("inf")), req.period
+            )
+            for req in self.requests
+        ]
+        return self.admission.decisions
+
+    # -- phase 2: the release loop ------------------------------------
+    def run(
+        self,
+        horizon_s: float,
+        *,
+        virtual_dt: float | None = None,
+        warmup: bool = True,
+    ) -> GatewayReport:
+        self.open()
+        stats = [
+            TenantStats(name=req.name, admitted=(i in self._admitted_idx))
+            for i, req in enumerate(self.requests)
+        ]
+        admitted = list(self._admitted_idx)
+        sched = merge_arrivals(
+            [self.arrivals[i] for i in admitted], horizon_s
+        )
+        sched = [(t, admitted[j]) for t, j in sched]
+        for _, i in sched:
+            stats[i].scheduled += 1
+
+        virtual = hasattr(self.clock, "advance")
+        if virtual and virtual_dt is None:
+            # default serving quantum: a fraction of the tightest
+            # analysis period, so even the fastest tenant gets many
+            # scheduling opportunities per period
+            p_min = min(
+                (self.requests[i].period for i in admitted),
+                default=1.0,
+            )
+            virtual_dt = p_min / 20.0
+        if warmup:
+            self.server.warmup()
+
+        t0 = self.clock.now()
+        pos = 0
+        while True:
+            rel = self.clock.now() - t0
+            # release due arrivals *before* the horizon check so jobs
+            # landing between the last tick and the horizon still flow
+            # through the shedding path — every scheduled arrival ends
+            # up released, degraded or shed, never silently dropped
+            while pos < len(sched) and (
+                sched[pos][0] <= rel or rel >= horizon_s
+            ):
+                sched_t, i = sched[pos]
+                pos += 1
+                self._release(
+                    i, t0 + sched_t, max(0.0, rel - sched_t), stats
+                )
+            if rel >= horizon_s:
+                break
+            ran = self.server.step()
+            if virtual:
+                if not ran and pos < len(sched):
+                    # idle: fast-forward to the next arrival
+                    self.clock.advance(
+                        max(virtual_dt, sched[pos][0] - rel)
+                    )
+                else:
+                    self.clock.advance(virtual_dt)
+            elif not ran:
+                self.clock.sleep(1e-4)
+        return GatewayReport(
+            tenants=stats,
+            decisions=list(self.admission.decisions),
+            server_report=self.server.report,
+        )
+
+    def _release(
+        self,
+        i: int,
+        release_time: float,
+        jitter: float,
+        stats: list[TenantStats],
+    ) -> None:
+        # refresh overload state for every admitted tenant (pending
+        # counts change between releases as jobs complete)
+        for j in self._admitted_idx:
+            self.monitor.observe(
+                j, self.server.pending(j), self._limits[j]
+            )
+        overloaded = [
+            j for j in self._admitted_idx if self.monitor.engaged.get(j)
+        ]
+        verdict = "submit"
+        if overloaded and self.shedding is not None:
+            verdict = self.shedding.classify(
+                i, overloaded, self.admission, self.requests
+            )
+        if verdict == DROP:
+            stats[i].shed += 1
+            return
+        best_effort = verdict == BEST_EFFORT
+        self.server.submit(i, release_time, best_effort=best_effort)
+        if best_effort:
+            stats[i].degraded += 1
+        else:
+            stats[i].released += 1
+        stats[i].release_jitter.append(jitter)

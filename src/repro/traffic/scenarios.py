@@ -1,0 +1,459 @@
+"""Scenario registry: named traffic mixes for benchmarks and examples.
+
+A `TrafficScenario` describes a smart-transportation-style deployment as
+a set of *tenants*: each references a workload — one of the paper's
+five applications (``paper:<name>``, core.workloads) or an LM drawn
+from the existing ``configs/`` (``config:<module>:<mode>``, flattened by
+`models.extract.arch_workload`) — plus the paper's period knob (ratio
+over the single-accelerator reference latency P'), an `ArrivalSpec`
+(traffic shape relative to that period), a value for shed-by-value, and
+an ``overdrive`` factor (actual traffic rate over the provisioned rate;
+``> 1`` deliberately violates the analysis to exercise shedding).
+
+`build` turns a scenario into everything the other layers consume:
+provisioned `TaskSet` + DSE design + `SegmentTable` (analysis &
+admission), seeded `ArrivalProcess` traces (DES & gateway), and
+`TaskRequest` contracts. `BuiltScenario.serve_bundle` rescales the lot
+to a wall-clock (or virtual) timebase and materializes `ServeTask`
+GEMM chains for the `TrafficGateway`/`PharosServer` path, so examples
+and benchmarks name a scenario instead of hand-building task sets.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+from repro.core.rt.task import SegmentTable, Task, TaskSet, Workload
+from repro.core.workloads import (
+    PAPER_WORKLOADS,
+    single_acc_reference_latency,
+)
+from repro.traffic.admission import TaskRequest
+from repro.traffic.arrival import (
+    ArrivalProcess,
+    MMPPArrivals,
+    PeriodicArrivals,
+    PoissonArrivals,
+    SporadicArrivals,
+)
+
+_ARRIVAL_KINDS = ("periodic", "sporadic", "poisson", "mmpp")
+
+
+@dataclass(frozen=True)
+class ArrivalSpec:
+    """Traffic shape, parameterized *relative* to the tenant period.
+
+    - ``periodic``: releases every period.
+    - ``sporadic``: min gap = period, exponential extra gap of mean
+      ``jitter`` periods.
+    - ``poisson``:  mean rate 1/period; provisioned for
+      ``provision_factor`` x mean.
+    - ``mmpp``:     calm rate ``calm_factor``/period, burst rate
+      ``burst_factor``/period, mean dwells of ``dwells`` periods;
+      provisioned for the burst rate.
+    """
+
+    kind: str = "periodic"
+    jitter: float = 0.3
+    calm_factor: float = 0.5
+    burst_factor: float = 3.0
+    dwells: tuple[float, float] = (40.0, 10.0)
+    provision_factor: float = 1.5
+
+    def __post_init__(self) -> None:
+        if self.kind not in _ARRIVAL_KINDS:
+            raise ValueError(
+                f"unknown arrival kind {self.kind!r}; have {_ARRIVAL_KINDS}"
+            )
+
+    def build(self, period: float, seed: int) -> ArrivalProcess:
+        if self.kind == "periodic":
+            return PeriodicArrivals(period=period)
+        if self.kind == "sporadic":
+            return SporadicArrivals(
+                min_gap=period, jitter=self.jitter, seed=seed
+            )
+        if self.kind == "poisson":
+            return PoissonArrivals(
+                rate=1.0 / period,
+                seed=seed,
+                provision_factor=self.provision_factor,
+            )
+        return MMPPArrivals(
+            rates=(self.calm_factor / period, self.burst_factor / period),
+            dwells=(self.dwells[0] * period, self.dwells[1] * period),
+            seed=seed,
+            provision_factor=1.0,
+        )
+
+    def analysis_period(self, period: float) -> float:
+        """Provisioned inter-arrival bound for Eq. 2 accounting."""
+        if self.kind in ("periodic", "sporadic"):
+            return period
+        if self.kind == "poisson":
+            return period / self.provision_factor
+        return period / self.burst_factor
+
+
+@dataclass(frozen=True)
+class TenantSpec:
+    workload: str  # "paper:<name>" | "config:<module>:<mode>"
+    ratio: float  # period = P'(workload) / ratio — the paper's knob
+    arrival: ArrivalSpec = ArrivalSpec()
+    value: float = 1.0
+    name: str = ""
+    #: actual traffic rate / provisioned rate; > 1 deliberately breaks
+    #: the analysis so overload shedding engages
+    overdrive: float = 1.0
+    #: batch/seq only used by config:-references
+    batch: int = 1
+    seq: int = 2048
+
+    def __post_init__(self) -> None:
+        if self.ratio <= 0 or self.overdrive <= 0:
+            raise ValueError("ratio and overdrive must be positive")
+        if not self.name:
+            object.__setattr__(
+                self, "name", self.workload.split(":", 1)[-1]
+            )
+
+
+@dataclass(frozen=True)
+class TrafficScenario:
+    name: str
+    description: str
+    tenants: tuple[TenantSpec, ...]
+    policy: str = "edf"  # serving/DES scheduling policy
+
+    def __post_init__(self) -> None:
+        if not self.tenants:
+            raise ValueError("scenario has no tenants")
+
+
+# ---------------------------------------------------------------------------
+# workload resolution
+# ---------------------------------------------------------------------------
+def resolve_workload(spec: TenantSpec) -> Workload:
+    ref = spec.workload
+    src, _, rest = ref.partition(":")
+    if src == "paper":
+        try:
+            return PAPER_WORKLOADS[rest]
+        except KeyError:
+            raise KeyError(
+                f"unknown paper workload {rest!r}; "
+                f"have {sorted(PAPER_WORKLOADS)}"
+            ) from None
+    if src == "config":
+        module, _, mode = rest.partition(":")
+        from repro.models.extract import arch_workload
+
+        cfg = importlib.import_module(f"repro.configs.{module}").CONFIG
+        return arch_workload(
+            cfg, batch=spec.batch, seq=spec.seq, mode=mode or "decode"
+        )
+    raise ValueError(
+        f"workload ref {ref!r} must start with 'paper:' or 'config:'"
+    )
+
+
+# ---------------------------------------------------------------------------
+# build: scenario -> analysis artifacts + traffic
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BuiltScenario:
+    scenario: TrafficScenario
+    workloads: tuple[Workload, ...]
+    taskset: TaskSet  # provisioned periods (analysis view)
+    design: object  # DesignPoint from the DSE
+    table: SegmentTable
+    requests: tuple[TaskRequest, ...]
+    arrivals: tuple[ArrivalProcess, ...]  # actual traffic (w/ overdrive)
+
+    def des_arrivals(self, horizon: float) -> list[list[float]]:
+        """Per-task explicit release times for `simulate_taskset`."""
+        return [p.arrivals(horizon) for p in self.arrivals]
+
+    def serve_bundle(
+        self,
+        *,
+        period_scale: float,
+        seed: int = 0,
+        rows: int = 128,
+    ):
+        """Rescale to the serving timebase and materialize GEMM chains.
+
+        Returns ``(serve_tasks, requests, arrivals)`` for the
+        `TrafficGateway`: periods *and* WCETs scale together by
+        ``period_scale`` so every utilization — and therefore every
+        admission verdict — is preserved; only the time unit changes.
+        """
+        from repro.pipeline.stage_split import design_to_segments
+
+        serve_tasks = design_to_segments(
+            self.design,
+            list(self.workloads),
+            self.taskset,
+            rows=rows,
+            period_scale=period_scale,
+        )
+        requests = tuple(
+            TaskRequest(
+                name=r.name,
+                base=tuple(b * period_scale for b in r.base),
+                period=r.period * period_scale,
+                value=r.value,
+            )
+            for r in self.requests
+        )
+        arrivals = tuple(
+            spec.arrival.build(
+                base_period * period_scale / spec.overdrive,
+                seed=seed + 101 * i,
+            )
+            for i, (spec, base_period) in enumerate(
+                zip(self.scenario.tenants, self._base_periods())
+            )
+        )
+        return serve_tasks, requests, arrivals
+
+    def virtual_period_scale(self, virtual_dt: float) -> float:
+        """Period scale making a `VirtualClock` gateway run mirror the
+        analysis.
+
+        With the jnp backend and 128-row inputs every layer completes in
+        exactly one tile window, so a job's virtual service on stage k
+        is ``(layers on k) * virtual_dt``. Scaling periods by the
+        returned factor makes the *virtual* bottleneck utilization equal
+        the analytic one — admitted-only traffic then behaves exactly as
+        Eq. 3 promises in virtual time, and overdriven traffic overloads
+        by the same factor it overdrives.
+        """
+        from repro.core.rt.schedulability import max_utilization
+
+        target = max_utilization(self.table, self.taskset, False)
+        worst = 0.0
+        for k in range(self.design.n_stages):
+            u_k = sum(
+                self.design.splits[k][i] * virtual_dt / t.period
+                for i, t in enumerate(self.taskset.tasks)
+            )
+            worst = max(worst, u_k)
+        if target <= 0 or worst <= 0:
+            raise ValueError("degenerate scenario: zero utilization")
+        return worst / target
+
+    def _base_periods(self) -> tuple[float, ...]:
+        # un-provisioned tenant periods (P'/ratio), recovered from the
+        # provisioned taskset periods
+        return tuple(
+            t.period * spec.arrival.analysis_period(1.0) ** -1
+            for t, spec in zip(self.taskset.tasks, self.scenario.tenants)
+        )
+
+
+def build(
+    scenario: TrafficScenario,
+    platform,
+    *,
+    max_m: int = 3,
+    beam_width: int = 6,
+    seed: int = 0,
+) -> BuiltScenario:
+    """Resolve workloads, size periods, run the DSE, seed the traffic."""
+    from repro.core.dse.beam import beam_search
+    from repro.core.dse.space import evaluate_design
+
+    workloads, periods = [], []
+    for spec in scenario.tenants:
+        w = resolve_workload(spec)
+        p_ref = single_acc_reference_latency(w, platform)
+        base_period = p_ref / spec.ratio
+        workloads.append(w)
+        periods.append(spec.arrival.analysis_period(base_period))
+    taskset = TaskSet(
+        tasks=tuple(
+            Task(workload=w, period=p, name=spec.name)
+            for w, p, spec in zip(workloads, periods, scenario.tenants)
+        )
+    )
+    res = beam_search(
+        workloads, taskset, platform, max_m=max_m, beam_width=beam_width
+    )
+    if res.best is None:
+        raise ValueError(
+            f"scenario {scenario.name!r} has no feasible design on "
+            f"{platform.name}: lower the ratios or the provisioning"
+        )
+    table = evaluate_design(
+        res.best.accs, res.best.splits, workloads, taskset
+    )
+    requests = tuple(
+        TaskRequest(
+            name=spec.name,
+            base=tuple(table.base[i]),
+            period=taskset.tasks[i].period,
+            value=spec.value,
+        )
+        for i, spec in enumerate(scenario.tenants)
+    )
+    arrivals = tuple(
+        spec.arrival.build(
+            (taskset.tasks[i].period / spec.arrival.analysis_period(1.0))
+            / spec.overdrive,
+            seed=seed + 101 * i,
+        )
+        for i, spec in enumerate(scenario.tenants)
+    )
+    return BuiltScenario(
+        scenario=scenario,
+        workloads=tuple(workloads),
+        taskset=taskset,
+        design=res.best,
+        table=table,
+        requests=requests,
+        arrivals=arrivals,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+SCENARIOS: dict[str, TrafficScenario] = {}
+
+
+def register(scenario: TrafficScenario) -> TrafficScenario:
+    if scenario.name in SCENARIOS:
+        raise ValueError(f"scenario {scenario.name!r} already registered")
+    SCENARIOS[scenario.name] = scenario
+    return scenario
+
+
+def get_scenario(name: str) -> TrafficScenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; have {sorted(SCENARIOS)}"
+        ) from None
+
+
+def list_scenarios() -> list[tuple[str, str]]:
+    return [(s.name, s.description) for s in SCENARIOS.values()]
+
+
+register(
+    TrafficScenario(
+        name="steady_city",
+        description=(
+            "Baseline smart-transportation mix: periodic LiDAR "
+            "perception (PointNet) + periodic camera backbone "
+            "(MLP-Mixer), comfortably provisioned"
+        ),
+        tenants=(
+            TenantSpec("paper:pointnet", ratio=1.0, value=3.0),
+            TenantSpec("paper:mlp_mixer", ratio=0.8, value=1.0),
+        ),
+    )
+)
+
+register(
+    TrafficScenario(
+        name="rush_hour",
+        description=(
+            "Bursty peak traffic: sporadic LiDAR (sensor-synced with "
+            "jitter) + MMPP camera stream whose burst state triples "
+            "the rate — the admission layer provisions for the burst"
+        ),
+        tenants=(
+            TenantSpec(
+                "paper:pointnet",
+                ratio=0.8,
+                arrival=ArrivalSpec(kind="sporadic", jitter=0.25),
+                value=3.0,
+            ),
+            TenantSpec(
+                "paper:deit_t",
+                # effective provisioned ratio is 3x this (the burst
+                # rate): 0.3 * 3 = 0.9 of the reference latency
+                ratio=0.3,
+                arrival=ArrivalSpec(
+                    kind="mmpp",
+                    calm_factor=0.5,
+                    burst_factor=3.0,
+                    dwells=(40.0, 10.0),
+                ),
+                value=1.0,
+            ),
+        ),
+    )
+)
+
+register(
+    TrafficScenario(
+        name="sensor_fusion",
+        description=(
+            "Three-tenant fusion rig: sporadic point-cloud transformer, "
+            "periodic ResMLP segmentation, Poisson DeiT detections"
+        ),
+        tenants=(
+            TenantSpec(
+                "paper:point_transformer",
+                ratio=0.4,
+                arrival=ArrivalSpec(kind="sporadic", jitter=0.4),
+                value=2.0,
+            ),
+            TenantSpec("paper:resmlp", ratio=0.35, value=1.5),
+            TenantSpec(
+                "paper:deit_t",
+                ratio=0.25,
+                arrival=ArrivalSpec(kind="poisson", provision_factor=1.5),
+                value=1.0,
+            ),
+        ),
+    )
+)
+
+register(
+    TrafficScenario(
+        name="copilot_decode",
+        description=(
+            "Safety + assistant: periodic DeiT safety monitor sharing "
+            "the pipeline with Poisson LM decode traffic "
+            "(stablelm-1.6b from configs/), decode valued lowest"
+        ),
+        tenants=(
+            TenantSpec("paper:deit_t", ratio=0.5, value=5.0),
+            TenantSpec(
+                "config:stablelm_1_6b:decode",
+                ratio=0.3,
+                arrival=ArrivalSpec(kind="poisson", provision_factor=1.3),
+                value=0.5,
+                batch=8,
+                seq=2048,
+            ),
+        ),
+    )
+)
+
+register(
+    TrafficScenario(
+        name="overload_2x",
+        description=(
+            "Deliberate 2x overdrive on the camera tenant: traffic "
+            "arrives at twice the provisioned rate, contradicting the "
+            "analysis — the shedding-policy stress scenario"
+        ),
+        tenants=(
+            TenantSpec("paper:pointnet", ratio=0.8, value=3.0),
+            TenantSpec(
+                "paper:mlp_mixer",
+                ratio=0.7,
+                arrival=ArrivalSpec(kind="poisson", provision_factor=1.2),
+                value=1.0,
+                overdrive=2.0,
+            ),
+        ),
+    )
+)

@@ -1,0 +1,169 @@
+"""Deterministic fallback for `hypothesis` (optional dev dependency).
+
+The property tests only use a small strategy surface — ``integers``,
+``floats``, ``lists``, ``sampled_from`` and ``composite`` — so when the
+real library is unavailable we substitute a seeded random sampler with
+the same decorator API. No shrinking, no database, no edge-case oracle;
+each test function gets a deterministic RNG derived from its name, so
+failures reproduce run-to-run. Endpoints of numeric ranges are drawn
+with a small boosted probability to keep some of hypothesis's
+boundary-probing flavour.
+
+Installed into ``sys.modules`` by ``tests/conftest.py`` iff the real
+``hypothesis`` import fails; install it with ``pip install -e .[dev]``
+to get the real engine back.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 25
+_EDGE_P = 0.05  # probability of drawing an exact range endpoint
+
+
+class _Strategy:
+    """A sampler: ``sample(rng) -> value``."""
+
+    def __init__(self, sample_fn):
+        self._sample_fn = sample_fn
+
+    def sample(self, rng: random.Random):
+        return self._sample_fn(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    def sample(rng):
+        r = rng.random()
+        if r < _EDGE_P:
+            return min_value
+        if r < 2 * _EDGE_P:
+            return max_value
+        return rng.randint(min_value, max_value)
+
+    return _Strategy(sample)
+
+
+def floats(
+    min_value: float = 0.0,
+    max_value: float = 1.0,
+    *,
+    allow_nan: bool | None = None,
+    allow_infinity: bool | None = None,
+    **_kw,
+) -> _Strategy:
+    def sample(rng):
+        r = rng.random()
+        if r < _EDGE_P:
+            return float(min_value)
+        if r < 2 * _EDGE_P:
+            return float(max_value)
+        return rng.uniform(min_value, max_value)
+
+    return _Strategy(sample)
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def sample(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(n)]
+
+    return _Strategy(sample)
+
+
+def sampled_from(seq) -> _Strategy:
+    pool = list(seq)
+    return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng: value)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def composite(fn):
+    """``@st.composite`` — fn(draw, *args, **kwargs) -> value."""
+
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda s: s.sample(rng), *args, **kwargs)
+
+        return _Strategy(sample)
+
+    return builder
+
+
+def given(*strategies, **kw_strategies):
+    def deco(fn):
+        # Like real hypothesis, positional strategies fill the
+        # *rightmost* parameters; anything to their left (pytest
+        # fixtures) flows through untouched. Bind drawn values by name
+        # so fixtures passed as keywords never collide positionally.
+        all_params = list(inspect.signature(fn).parameters.values())
+        n_pos = len(strategies)
+        strategy_names = [p.name for p in all_params[len(all_params) - n_pos:]]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mini_max_examples", _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn = {
+                    name: s.sample(rng)
+                    for name, s in zip(strategy_names, strategies)
+                }
+                drawn.update(
+                    (k, s.sample(rng)) for k, s in kw_strategies.items()
+                )
+                fn(*args, **drawn, **kwargs)
+
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution: the wrapper's visible signature keeps only the
+        # leading params (real fixtures).
+        params = all_params[: len(all_params) - n_pos] if n_pos else all_params
+        params = [p for p in params if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._mini_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (+ ``.strategies``)."""
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = lambda cond: None
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for name in (
+        "integers",
+        "floats",
+        "lists",
+        "sampled_from",
+        "just",
+        "booleans",
+        "composite",
+    ):
+        setattr(st_mod, name, globals()[name])
+    hyp.strategies = st_mod
+    hyp.__mini_fallback__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -1,0 +1,14 @@
+"""Test-session setup: fall back to the bundled mini-hypothesis when the
+real ``hypothesis`` (optional dev dependency, see pyproject.toml) is not
+installed, so the property tests still run deterministically."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _mini_hypothesis
+
+    _mini_hypothesis.install()

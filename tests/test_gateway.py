@@ -1,0 +1,274 @@
+"""TrafficGateway + PharosServer integration on a virtual clock.
+
+Everything here runs deterministically: the server's clock/sleep are a
+`VirtualClock`, so response times, shedding decisions and reports are
+bit-identical run to run.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.pipeline.serve import PharosServer, ServeTask
+from repro.traffic import (
+    AdmissionController,
+    BacklogMonitor,
+    PeriodicArrivals,
+    PoissonArrivals,
+    TaskRequest,
+    TrafficGateway,
+    VirtualClock,
+)
+from repro.traffic.scenarios import build, get_scenario, list_scenarios
+from repro.traffic.shedding import get_policy
+
+
+def _weights(dims, key=0):
+    k = jax.random.PRNGKey(key)
+    out = []
+    for (K, N) in dims:
+        k, s = jax.random.split(k)
+        out.append(jax.random.normal(s, (K, N), jnp.float32) / jnp.sqrt(K))
+    return tuple(out)
+
+
+#: one 2-stage deployment: each layer is one 128-tile window, so a job
+#: consumes one virtual_dt per stage — service time 2 * DT per job.
+DT = 1e-3
+
+
+def _mk_setup(*, policy="edf", periods=(0.01, 0.02)):
+    tasks = [
+        ServeTask(
+            "alpha",
+            _weights([(128, 128), (128, 128)], 0),
+            stage_of_layer=(0, 1),
+            period=periods[0],
+        ),
+        ServeTask(
+            "beta",
+            _weights([(128, 128), (128, 128)], 1),
+            stage_of_layer=(0, 1),
+            period=periods[1],
+        ),
+    ]
+    # per-stage virtual WCET = one window = DT
+    reqs = [
+        TaskRequest("alpha", (DT, DT), period=periods[0], value=5.0),
+        TaskRequest("beta", (DT, DT), period=periods[1], value=1.0),
+    ]
+    clk = VirtualClock()
+    srv = PharosServer(
+        tasks, 2, policy=policy, clock=clk.now, sleep=clk.sleep
+    )
+    return tasks, reqs, clk, srv
+
+
+def _run(arrivals, shedding=None, horizon=0.5, monitor=None):
+    _tasks, reqs, clk, srv = _mk_setup()
+    gw = TrafficGateway(
+        srv,
+        AdmissionController([0.0, 0.0]),
+        reqs,
+        arrivals,
+        shedding=shedding,
+        monitor=monitor,
+        clock=clk,
+    )
+    return gw.run(horizon, virtual_dt=DT), srv
+
+
+def test_gateway_run_is_deterministic():
+    arr = [
+        PoissonArrivals(rate=60.0, seed=3),
+        PoissonArrivals(rate=30.0, seed=4),
+    ]
+    rep1, srv1 = _run(arr)
+    rep2, srv2 = _run(arr)
+    assert (
+        srv1.report.response_times == srv2.report.response_times
+    )
+    assert [t.released for t in rep1.tenants] == [
+        t.released for t in rep2.tenants
+    ]
+    assert rep1.total_released() > 0
+    assert rep1.total_shed() == 0  # feasible traffic: nothing shed
+
+
+def test_gateway_rejects_infeasible_tenant_upfront():
+    _tasks, reqs, clk, srv = _mk_setup()
+    # beta asks for 3x a stage's capacity: must be refused, releasing 0
+    reqs[1] = TaskRequest("beta", (3 * DT, DT), period=DT, value=1.0)
+    gw = TrafficGateway(
+        srv,
+        AdmissionController([0.0, 0.0]),
+        reqs,
+        [PeriodicArrivals(period=0.01), PeriodicArrivals(period=DT)],
+        clock=clk,
+    )
+    rep = gw.run(0.2, virtual_dt=DT)
+    beta = rep.tenant("beta")
+    assert not beta.admitted
+    assert beta.released == beta.degraded == 0
+    assert rep.tenant("alpha").released > 0
+    # decisions log holds the rejection with its bottleneck stage
+    rej = [d for d in rep.decisions if not d.admitted]
+    assert len(rej) == 1 and rej[0].request.name == "beta"
+
+
+def test_gateway_admission_matches_full_analysis_on_every_decision():
+    _tasks, reqs, clk, srv = _mk_setup()
+    ctl = AdmissionController([0.0, 0.0])
+    gw = TrafficGateway(
+        srv,
+        ctl,
+        reqs,
+        [PeriodicArrivals(period=0.01), PeriodicArrivals(period=0.02)],
+        clock=clk,
+    )
+    gw.open()
+    assert ctl.verify()
+    for dec in ctl.decisions:
+        assert dec.admitted
+
+
+def test_gateway_sheds_under_2x_overload_and_protects_admitted():
+    """(c) at the serving layer: beta's traffic arrives at ~2x its
+    provisioned rate. Without shedding the backlog diverges; with
+    reject-newest, beta sheds and alpha's responses stay bounded."""
+    horizon = 1.0
+    # virtual capacity: one window (= one job-layer) per DT per stage
+    # -> 1000 layers/s/stage. alpha takes 100 of those; beta is
+    # provisioned for 50 jobs/s but actually sends ~1500/s, overrunning
+    # the stage-0 capacity and contradicting the analysis.
+    overdriven = [
+        PeriodicArrivals(period=0.01),
+        PoissonArrivals(rate=1500.0, seed=9),
+    ]
+    mon = BacklogMonitor(fallback=6)
+    rep_shed, srv_shed = _run(
+        overdriven,
+        shedding=get_policy("reject_newest"),
+        horizon=horizon,
+        monitor=mon,
+    )
+    rep_free, srv_free = _run(overdriven, shedding=None, horizon=horizon)
+    beta_shed = rep_shed.tenant("beta")
+    assert beta_shed.shed > 0  # overload engaged and dropped jobs
+    # the protected tenant keeps bounded response with shedding on
+    rts_alpha = srv_shed.report.response_times["alpha"]
+    assert rts_alpha and max(rts_alpha) < 20 * 0.01
+    # without shedding the backlog keeps growing instead
+    assert srv_free.pending(1) > srv_shed.pending(1)
+    assert rep_free.total_shed() == 0
+
+
+def test_gateway_degrade_keeps_jobs_running_without_misses():
+    horizon = 0.6
+    overdriven = [
+        PeriodicArrivals(period=0.01),
+        PoissonArrivals(rate=1500.0, seed=9),
+    ]
+    rep, srv = _run(
+        overdriven,
+        shedding=get_policy("degrade_best_effort"),
+        horizon=horizon,
+        monitor=BacklogMonitor(fallback=6),
+    )
+    beta = rep.tenant("beta")
+    assert beta.degraded > 0 and beta.shed == 0
+    # demoted jobs carry inf deadlines -> they never count as misses
+    assert srv.report.deadline_misses["beta"] == 0
+
+
+def test_fifo_best_effort_jobs_yield_to_guaranteed():
+    """Under FIFO, best-effort jobs wait in a background queue: a
+    guaranteed job submitted *after* them still runs first."""
+    _tasks, _reqs, clk, srv = _mk_setup(policy="fifo")
+    # three best-effort beta jobs, then one guaranteed alpha job
+    for _ in range(3):
+        srv.submit(1, clk.now(), best_effort=True)
+    srv.submit(0, clk.now())
+    first_done = []
+    orig = srv._finish_layer_or_forward
+
+    def spy(job, now):
+        if job.layer + 1 >= len(srv.tasks[job.task_id].weights):
+            first_done.append(srv.tasks[job.task_id].name)
+        orig(job, now)
+
+    srv._finish_layer_or_forward = spy
+    for _ in range(40):
+        if not srv.step():
+            break
+        clk.advance(DT)
+    assert first_done and first_done[0] == "alpha"
+    # demoted jobs still complete eventually, without counting misses
+    assert srv.report.deadline_misses["beta"] == 0
+
+
+def test_server_virtual_clock_timestamps_consistent():
+    """The injected clock drives *all* timestamps: on a VirtualClock
+    every response time is an exact multiple of virtual_dt."""
+    _tasks, reqs, clk, srv = _mk_setup()
+    gw = TrafficGateway(
+        srv,
+        AdmissionController([0.0, 0.0]),
+        reqs,
+        [PeriodicArrivals(period=0.01), PeriodicArrivals(period=0.02)],
+        clock=clk,
+    )
+    gw.run(0.3, virtual_dt=DT)
+    for rts in srv.report.response_times.values():
+        for rt in rts:
+            steps = rt / DT
+            assert steps == pytest.approx(round(steps), abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+def test_scenario_registry_contents():
+    names = {n for n, _ in list_scenarios()}
+    assert {
+        "steady_city",
+        "rush_hour",
+        "sensor_fusion",
+        "copilot_decode",
+        "overload_2x",
+    } <= names
+    with pytest.raises(KeyError, match="unknown scenario"):
+        get_scenario("nope")
+
+
+def test_build_scenario_analysis_consistency():
+    from repro.core.perfmodel.hardware import paper_platform
+    from repro.core.rt.schedulability import srt_schedulable
+
+    plat = paper_platform(16)
+    built = build(get_scenario("steady_city"), plat)
+    # the DSE design satisfies Eq. 3 for the provisioned taskset
+    assert srt_schedulable(built.table, built.taskset, preemptive=False)
+    # seeding a controller from the design admits every tenant and
+    # agrees with the offline analysis
+    ctl = AdmissionController.from_table(
+        built.table, built.taskset, preemptive=False
+    )
+    assert ctl.verify()
+    assert ctl.names() == [t.name for t in built.taskset.tasks]
+    # traffic matches provisioning for non-overdriven scenarios
+    for req, proc in zip(built.requests, built.arrivals):
+        assert proc.mean_rate() <= 1.0 / req.period + 1e-9
+    # explicit DES arrivals are consumable
+    arr = built.des_arrivals(50 * max(t.period for t in built.taskset.tasks))
+    assert all(len(a) > 10 for a in arr)
+
+
+def test_build_overdrive_scenario_exceeds_provisioning():
+    from repro.core.perfmodel.hardware import paper_platform
+
+    plat = paper_platform(16)
+    built = build(get_scenario("overload_2x"), plat)
+    req = built.requests[1]
+    proc = built.arrivals[1]
+    # actual mean traffic ~2x the provisioned rate
+    assert proc.mean_rate() > 1.5 / req.period
