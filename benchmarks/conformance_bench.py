@@ -1,0 +1,173 @@
+"""Cross-layer conformance sweep -> BENCH_conformance.json.
+
+Runs the `repro.conformance` harness over the registry's
+contract-honouring scenarios x {fifo, edf} and records, per case and
+per task, the three layers' responses (analytic bound, DES max,
+virtual-runtime max), the verdict chain, and every ordering violation.
+A clean run — the acceptance gate — has **zero** violations: the
+analytic bound dominates the DES, the DES dominates the executing
+runtime (within the window-quantization tolerance), and no layer's
+schedulability verdict inverts.
+
+Also times a wall-clock WCET calibration pass (`CostModel.calibrate`)
+on the ``steady_city`` serve bundle and reports measured-vs-modeled
+segment WCET ratios — the "measured, not modeled" serve-path numbers
+the ROADMAP asked for.
+
+Run: ``PYTHONPATH=src python benchmarks/conformance_bench.py [--quick]``
+Writes ``experiments/benchmarks/BENCH_conformance.json``; exits
+non-zero on any conformance violation so CI enforces the ordering.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+
+from repro.conformance import (
+    DEFAULT_SCENARIOS,
+    POLICIES,
+    ConformanceConfig,
+    CostModel,
+    run_conformance,
+)
+from repro.core.perfmodel.hardware import paper_platform
+
+RESULTS_DIR = os.path.join("experiments", "benchmarks")
+
+
+def _num(x: float):
+    """inf-safe JSON scalar."""
+    return None if not math.isfinite(x) else x
+
+
+def bench_conformance(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
+    cfg = ConformanceConfig(horizon_periods=24.0 if quick else 60.0)
+    t0 = time.perf_counter()
+    report = run_conformance(
+        DEFAULT_SCENARIOS,
+        POLICIES,
+        platform=paper_platform(16),
+        cfg=cfg,
+        prebuilt=prebuilt,
+    )
+    elapsed = time.perf_counter() - t0
+    cases = []
+    for c in report.cases:
+        cases.append(
+            {
+                "scenario": c.scenario,
+                "policy": c.policy,
+                "analysis_schedulable": c.analysis_schedulable,
+                "des_schedulable": c.des_schedulable,
+                "server_bounded": c.server_bounded,
+                "tasks": [
+                    {
+                        "task": t.task,
+                        "analytic_bound_s": _num(t.analytic_bound),
+                        "des_max_s": t.des_max,
+                        "des_jobs": t.des_jobs,
+                        "server_max_s": t.server_max,
+                        "server_jobs": t.server_jobs,
+                        "in_flight": t.in_flight,
+                        "des_over_bound": _num(
+                            t.des_max / t.analytic_bound
+                            if t.analytic_bound > 0
+                            and math.isfinite(t.analytic_bound)
+                            else float("inf")
+                        ),
+                        "server_over_des": (
+                            t.server_max / t.des_max
+                            if t.des_max > 0
+                            else None
+                        ),
+                    }
+                    for t in c.tasks
+                ],
+                "violations": [str(v) for v in c.violations],
+            }
+        )
+    payload = {
+        "horizon_periods": cfg.horizon_periods,
+        "wall_seconds": elapsed,
+        "cases": cases,
+        "total_violations": len(report.violations),
+    }
+    print(report.summary())
+    return payload, report.ok
+
+
+def bench_calibration(quick: bool, built) -> dict:
+    """Wall-clock WCET calibration on the steady_city serve bundle."""
+    from repro.pipeline.serve import PharosServer
+    from repro.traffic.clock import VirtualClock
+
+    serve_tasks, _reqs, _arr = built.serve_bundle(period_scale=1.0)
+    clk = VirtualClock()
+    srv = PharosServer(
+        serve_tasks,
+        built.design.n_stages,
+        clock=clk.now,
+        sleep=clk.sleep,
+    )
+    t0 = time.perf_counter()
+    measured = CostModel.calibrate(srv, reps=2 if quick else 5)
+    calib_s = time.perf_counter() - t0
+    modeled = CostModel.from_exec_model(
+        built.design, list(built.workloads), serve_tasks
+    )
+    rows = []
+    for i, t in enumerate(serve_tasks):
+        for k in range(built.design.n_stages):
+            b_meas = measured.segment_cost(i, k)
+            b_model = modeled.segment_cost(i, k)
+            if b_model > 0:
+                rows.append(
+                    {
+                        "task": t.name,
+                        "stage": k,
+                        "measured_s": b_meas,
+                        "modeled_s": b_model,
+                        "ratio": b_meas / b_model,
+                    }
+                )
+    return {
+        "calibration_wall_seconds": calib_s,
+        "segments": rows,
+        "note": (
+            "measured = host wall-clock window probes (jnp backend); "
+            "modeled = TPU exec-model latency — the ratio is the "
+            "host/TPU speed gap, stable within a run"
+        ),
+    }
+
+
+def main() -> None:
+    from repro.traffic.scenarios import build, get_scenario
+
+    quick = "--quick" in sys.argv
+    # steady_city's DSE result is shared by the sweep and calibration
+    steady = build(
+        get_scenario("steady_city"), paper_platform(16), beam_width=4
+    )
+    conf, ok = bench_conformance(quick, {"steady_city": steady})
+    payload = {
+        "bench": "conformance",
+        "quick": quick,
+        "conformance": conf,
+        "calibration": bench_calibration(quick, steady),
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_conformance.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {path}")
+    if not ok:
+        print("CONFORMANCE VIOLATIONS DETECTED", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

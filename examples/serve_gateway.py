@@ -11,7 +11,8 @@ MMPP DeiT camera stream) end-to-end through the traffic subsystem:
    traffic each stage/tenant could take;
 3. the `TrafficGateway` releases the MMPP/sporadic traffic into a
    `PharosServer` on a deterministic `VirtualClock` (real GEMM windows,
-   virtual time), with reject-newest shedding armed;
+   virtual time driven per-window by the conformance `CostModel` — the
+   same WCETs the analysis uses), with reject-newest shedding armed;
 4. the same pipeline is then hammered with the ``overload_2x`` scenario
    — traffic at twice its provisioned rate — to show the backlog
    monitor engaging shedding when reality contradicts the analysis.
@@ -31,8 +32,6 @@ from repro.traffic import (
 )
 from repro.traffic.shedding import get_policy
 
-VIRTUAL_DT = 1e-3  # one serving window = 1 virtual millisecond
-
 
 def run_scenario(name: str, horizon_periods: float = 60.0) -> None:
     plat = paper_platform(16)
@@ -44,18 +43,22 @@ def run_scenario(name: str, horizon_periods: float = 60.0) -> None:
         f"max analytic util {built.design.max_util:.3f}"
     )
 
-    scale = built.virtual_period_scale(VIRTUAL_DT)
-    tasks, requests, arrivals = built.serve_bundle(period_scale=scale)
+    # serve directly on the analysis timebase: the CostModel charges
+    # every executed tile window its modeled per-layer WCET, so the
+    # virtual run needs no period rescaling or quantization knob
+    tasks, requests, arrivals = built.serve_bundle(period_scale=1.0)
+    cost_model = built.conformance_cost_model(tasks)
     clk = VirtualClock()
     server = PharosServer(
         tasks,
         built.design.n_stages,
         policy=scenario.policy,
+        cost_model=cost_model,
         clock=clk.now,
         sleep=clk.sleep,
     )
     admission = AdmissionController(
-        [o * scale for o in built.table.overhead],
+        list(built.table.overhead),
         preemptive=scenario.policy == "edf",
     )
     gateway = TrafficGateway(
@@ -83,7 +86,7 @@ def run_scenario(name: str, horizon_periods: float = 60.0) -> None:
         print(f"    {tenant:14s} admits up to {mult:.2f}x its rate")
 
     horizon = horizon_periods * max(r.period for r in requests)
-    report = gateway.run(horizon, virtual_dt=VIRTUAL_DT)
+    report = gateway.run(horizon)
 
     sr = report.server_report
     for t in report.tenants:

@@ -1,0 +1,40 @@
+"""Cross-layer conformance: one scenario, three layers, one verdict.
+
+- `costmodel` — `CostModel`: per-(task, layer) virtual WCETs from the
+  exec model or from wall-clock calibration probes; drives the serving
+  runtime's virtual time and exports the same WCETs to the analysis
+  (`segment_table`) and the DES (`des_overheads`).
+- `harness` — `run_conformance` / `run_case`: differential testing of
+  `core.rt` analysis vs `scheduler.des` vs a virtual-clock
+  `PharosServer`, enforcing ``analytic bound >= DES >= runtime`` and
+  verdict agreement, reporting every `Violation` with its margin.
+"""
+from repro.conformance.costmodel import CostModel
+from repro.conformance.harness import (
+    DEFAULT_SCENARIOS,
+    POLICIES,
+    CaseResult,
+    ConformanceConfig,
+    ConformanceReport,
+    TaskConformance,
+    Violation,
+    regulate_trace,
+    run_case,
+    run_conformance,
+    run_virtual_server,
+)
+
+__all__ = [
+    "CostModel",
+    "DEFAULT_SCENARIOS",
+    "POLICIES",
+    "CaseResult",
+    "ConformanceConfig",
+    "ConformanceReport",
+    "TaskConformance",
+    "Violation",
+    "regulate_trace",
+    "run_case",
+    "run_conformance",
+    "run_virtual_server",
+]

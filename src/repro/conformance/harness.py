@@ -1,0 +1,451 @@
+"""Cross-layer conformance harness: analysis vs DES vs serving runtime.
+
+PHAROS's safety story rests on three layers telling the same story
+about one scenario:
+
+1. the **analysis** (`core.rt`): Eq. 3 schedulability + busy-period
+   response bounds — sound upper bounds;
+2. the **DES** (`scheduler.des`): event-driven simulation on the same
+   WCETs — tighter, still model-level;
+3. the **runtime** (`pipeline.serve` on a `VirtualClock` driven by a
+   `CostModel`): the executing control flow, real GEMM windows, virtual
+   time charged per window from the same WCETs.
+
+The harness runs one scenario through all three under one policy and
+enforces the soundness ordering
+
+    analytical bound  >=  DES response  >=  runtime response (~)
+
+together with verdict agreement: analysis-schedulable implies
+DES-schedulable implies the runtime accumulates no backlog. Every
+failure is reported as a `Violation` naming the two layers that
+disagree and by how much — this is the differential-oracle methodology
+real-time frameworks (Cheddar, MAST) use to validate analyses against
+simulation, applied across our stack.
+
+Modeling notes that make the comparison apples-to-apples:
+
+- All three layers read their WCETs from the same `CostModel`
+  (`segment_table()` for analysis/DES, per-window costs for the
+  runtime), so a disagreement is a *semantics* bug, never a unit skew.
+- The virtual runtime preempts only at window boundaries, but that
+  deferral inserts **no extra work** (the in-flight window completes
+  useful work; accumulators stay resident, so there is no spill/reload
+  xi). The layers therefore compare on *raw* WCETs — Eq. 3 on raw
+  utilization is the sound verdict for every layer — and the window
+  quantum enters as the DES-vs-runtime comparison tolerance instead of
+  as Eq. 4 inflation. (`CostModel.segment_table`/`des_overheads` still
+  expose the conservative inserted-overhead accounting for admission
+  users that want Eq. 4 margins.)
+- Traffic is **regulated** to the admission contract before the run
+  (`regulate_trace`): the analytic layer's premise is a minimum
+  inter-arrival of one provisioned period, which raw Poisson/MMPP
+  traces violate with probability 1. Unregulated overload is the
+  shedding layer's test surface, not conformance's.
+- The DES >= runtime comparison carries a small schedule-noise
+  tolerance (`tol_rel`, plus `quantum_slack` windows absolute): the
+  runtime resolves simultaneous-event ties by stage iteration order
+  and defers preemption to window boundaries, which can locally
+  reorder two equal-priority jobs without breaking soundness.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.conformance.costmodel import CostModel
+from repro.core.rt.response_time import end_to_end_bounds
+from repro.core.rt.schedulability import srt_schedulable
+from repro.core.rt.task import SegmentTable
+from repro.scheduler.des import SimResult, simulate_taskset
+
+
+#: the registry scenarios whose traffic honours its own contract
+#: (overdrive == 1) — the conformance acceptance sweep
+DEFAULT_SCENARIOS = (
+    "steady_city",
+    "rush_hour",
+    "sensor_fusion",
+    "copilot_decode",
+)
+
+POLICIES = ("fifo", "edf")
+
+
+def regulate_trace(times, min_gap: float) -> list[float]:
+    """Clamp a release trace to the admission contract: consecutive
+    gaps of at least ``min_gap`` (a leaky-bucket regulator — arrivals
+    are delayed, never dropped)."""
+    out: list[float] = []
+    prev = None
+    for t in times:
+        t = float(t) if prev is None else max(float(t), prev + min_gap)
+        out.append(t)
+        prev = t
+    return out
+
+
+@dataclass(frozen=True)
+class ConformanceConfig:
+    #: simulated horizon, in multiples of the longest tenant period
+    horizon_periods: float = 40.0
+    #: enforce the min-inter-arrival contract on stochastic traces
+    regulate: bool = True
+    #: DES-vs-runtime schedule-noise tolerance (relative on the DES max)
+    tol_rel: float = 0.02
+    #: plus this many worst-case windows of absolute slack
+    quantum_slack: float = 2.0
+    #: analysis-vs-DES tolerance (bounds are sound: float noise only)
+    analysis_tol_rel: float = 1e-9
+    #: runtime backlog divergence threshold (mirrors the DES's
+    #: `SimConfig.backlog_limit` default)
+    backlog_limit: int = 64
+    #: surrogate-GEMM dimension cap for the virtual-server leg: timing
+    #: comes from the CostModel, so the executed GEMMs only preserve
+    #: window/stage structure (keeps LM-tenant chains host-runnable)
+    max_dim: int = 512
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class TaskConformance:
+    """Per-task view of one conformance case."""
+
+    task: str
+    analytic_bound: float
+    des_max: float
+    des_jobs: int
+    server_max: float
+    server_jobs: int
+    in_flight: int
+
+
+@dataclass(frozen=True)
+class Violation:
+    """Two adjacent layers disagree; ``lhs`` should not exceed ``rhs``."""
+
+    scenario: str
+    policy: str
+    task: str
+    kind: str  # analytic_vs_des | des_vs_server | verdict_*
+    lhs: float
+    rhs: float
+    detail: str
+
+    @property
+    def margin(self) -> float:
+        return self.lhs - self.rhs
+
+    def __str__(self) -> str:
+        return (
+            f"[{self.scenario}/{self.policy}] {self.kind} ({self.task}): "
+            f"{self.lhs:.6g} > {self.rhs:.6g} — {self.detail}"
+        )
+
+
+@dataclass(frozen=True)
+class CaseResult:
+    scenario: str
+    policy: str
+    analysis_schedulable: bool
+    des_schedulable: bool
+    server_bounded: bool
+    tasks: tuple[TaskConformance, ...]
+    violations: tuple[Violation, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+@dataclass(frozen=True)
+class ConformanceReport:
+    """Sweep result: scenarios x policies, one `CaseResult` each."""
+
+    cases: tuple[CaseResult, ...]
+
+    @property
+    def violations(self) -> tuple[Violation, ...]:
+        return tuple(v for c in self.cases for v in c.violations)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def case(self, scenario: str, policy: str) -> CaseResult:
+        for c in self.cases:
+            if c.scenario == scenario and c.policy == policy:
+                return c
+        raise KeyError((scenario, policy))
+
+    def summary(self) -> str:
+        lines = [
+            f"{'scenario':14s} {'policy':6s} {'A-sched':7s} "
+            f"{'DES-sched':9s} {'srv-ok':6s} {'worst des/bound':15s} "
+            f"{'worst srv/des':13s} viol"
+        ]
+        for c in self.cases:
+            r_ad = max(
+                (
+                    t.des_max / t.analytic_bound
+                    for t in c.tasks
+                    if math.isfinite(t.analytic_bound)
+                    and t.analytic_bound > 0
+                ),
+                default=float("nan"),
+            )
+            r_sd = max(
+                (
+                    t.server_max / t.des_max
+                    for t in c.tasks
+                    if t.des_max > 0 and t.server_jobs
+                ),
+                default=float("nan"),
+            )
+            lines.append(
+                f"{c.scenario:14s} {c.policy:6s} "
+                f"{str(c.analysis_schedulable):7s} "
+                f"{str(c.des_schedulable):9s} "
+                f"{str(c.server_bounded):6s} "
+                f"{r_ad:15.4f} {r_sd:13.4f} {len(c.violations)}"
+            )
+        for v in self.violations:
+            lines.append(f"  VIOLATION {v}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# the virtual-server leg
+# ---------------------------------------------------------------------------
+def run_virtual_server(
+    serve_tasks,
+    n_stages: int,
+    policy: str,
+    cost_model: CostModel,
+    traces,
+    horizon: float,
+):
+    """Drive a cost-model `PharosServer` with explicit release traces on
+    a `VirtualClock`, event-to-event (no quantization, no shedding — the
+    conformance leg must see the raw runtime)."""
+    from repro.pipeline.serve import PharosServer
+    from repro.traffic.clock import VirtualClock
+
+    clk = VirtualClock()
+    srv = PharosServer(
+        serve_tasks,
+        n_stages,
+        policy=policy,
+        cost_model=cost_model,
+        clock=clk.now,
+        sleep=clk.sleep,
+    )
+    sched = sorted(
+        (t, i) for i, trace in enumerate(traces) for t in trace
+    )
+    pos = 0
+    while True:
+        now = clk.now()
+        while pos < len(sched) and sched[pos][0] <= now:
+            srv.submit(sched[pos][1], sched[pos][0])
+            pos += 1
+        if now >= horizon:
+            break
+        srv.step()
+        nxt = srv.next_completion_time()
+        if pos < len(sched):
+            nxt = min(nxt, sched[pos][0])
+        nxt = min(nxt, horizon)
+        now2 = clk.now()
+        if nxt > now2:
+            clk.advance(nxt - now2)
+    return srv.finalize_report(horizon)
+
+
+# ---------------------------------------------------------------------------
+# one case: scenario x policy through all three layers
+# ---------------------------------------------------------------------------
+def run_case(
+    built,
+    policy: str,
+    *,
+    cfg: ConformanceConfig | None = None,
+) -> CaseResult:
+    """Run one `BuiltScenario` through analysis, DES and the virtual
+    runtime under ``policy`` and compare."""
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}")
+    cfg = cfg or ConformanceConfig()
+    scenario = built.scenario.name
+    taskset = built.taskset
+    preemptive = policy == "edf"
+
+    serve_tasks, _requests, _arrivals = built.serve_bundle(
+        period_scale=1.0, seed=cfg.seed, max_dim=cfg.max_dim
+    )
+    cm = CostModel.from_exec_model(
+        built.design, list(built.workloads), serve_tasks
+    )
+    # zero-overhead WCET view: window-boundary deferral inserts no work
+    # (see module docstring), so analysis and DES run on raw WCETs and
+    # the quantum shows up only in the DES-vs-runtime tolerance
+    table = SegmentTable(
+        base=cm.segment_table().base,
+        overhead=[0.0] * cm.n_stages,
+    )
+    periods = [t.period for t in taskset.tasks]
+    horizon = cfg.horizon_periods * max(periods)
+
+    traces = built.des_arrivals(horizon)
+    if cfg.regulate:
+        traces = [
+            [t for t in regulate_trace(tr, p) if t < horizon]
+            for tr, p in zip(traces, periods)
+        ]
+
+    # layer 1: analysis
+    sched_a = srt_schedulable(table, taskset, preemptive)
+    bounds = end_to_end_bounds(table, taskset, policy)
+
+    # layer 2: DES on the same WCETs (immediate preemption, zero xi —
+    # the runtime's deferred-preemption divergence from this ideal is
+    # bounded by the window quantum and absorbed below)
+    des: SimResult = simulate_taskset(
+        table,
+        taskset,
+        policy,
+        horizon=horizon,
+        overheads=None,
+        arrivals=traces,
+    )
+
+    # layer 3: the executing runtime in model-driven virtual time
+    srv = run_virtual_server(
+        serve_tasks, built.design.n_stages, policy, cm, traces, horizon
+    )
+
+    # ---- compare ----
+    # per-task deferral allowance: at each visited stage the runtime
+    # may hold an urgent job behind (at most) one in-flight window
+    quanta = cm.stage_window_quantum()
+    visit_quanta = [
+        sum(q for q, b in zip(quanta, row) if b > 0.0)
+        for row in table.base
+    ]
+    violations: list[Violation] = []
+    task_rows: list[TaskConformance] = []
+    for i, t in enumerate(taskset.tasks):
+        r_des = des.response_times[i]
+        r_srv = srv.response_times.get(t.name, [])
+        des_max = max(r_des) if r_des else 0.0
+        bound = bounds[i]
+        if r_des and math.isfinite(bound):
+            lhs = des_max
+            if lhs > bound * (1.0 + cfg.analysis_tol_rel) + 1e-12:
+                violations.append(
+                    Violation(
+                        scenario, policy, t.name, "analytic_vs_des",
+                        lhs, bound,
+                        "DES response exceeds the analytical bound",
+                    )
+                )
+        # Same-task jobs complete in release order in both layers, so
+        # index j names the *same job* on each side — compare job-wise.
+        # A job only one side completed carries no ordering claim: the
+        # other side not finishing it by the horizon means it was the
+        # slower one on exactly that job (the runtime-slower direction
+        # is still caught through in_flight/backlog below).
+        allow = des_max * cfg.tol_rel + cfg.quantum_slack * visit_quanta[i]
+        worst = None  # (excess, job index)
+        for j, (rd, rs) in enumerate(zip(r_des, r_srv)):
+            if rs > rd + allow and (worst is None or rs - rd > worst[0]):
+                worst = (rs - rd, j)
+        if worst is not None:
+            j = worst[1]
+            violations.append(
+                Violation(
+                    scenario, policy, t.name, "des_vs_server",
+                    r_srv[j], r_des[j],
+                    f"runtime response of job {j} exceeds the DES "
+                    "beyond the window-quantization tolerance",
+                )
+            )
+        task_rows.append(
+            TaskConformance(
+                task=t.name,
+                analytic_bound=bound,
+                des_max=des_max,
+                des_jobs=len(r_des),
+                server_max=max(r_srv) if r_srv else 0.0,
+                server_jobs=len(r_srv),
+                in_flight=srv.in_flight.get(t.name, 0),
+            )
+        )
+
+    server_bounded = srv.jobs_completed > 0 and all(
+        row.in_flight <= cfg.backlog_limit for row in task_rows
+    )
+    if sched_a and not des.schedulable:
+        violations.append(
+            Violation(
+                scenario, policy, "*", "verdict_analysis_des",
+                1.0, 0.0,
+                "analysis says schedulable but the DES detected "
+                f"divergence (overload={des.overload_detected}, "
+                f"growth={des.growth_detected})",
+            )
+        )
+    if des.schedulable and not server_bounded:
+        violations.append(
+            Violation(
+                scenario, policy, "*", "verdict_des_server",
+                float(max((r.in_flight for r in task_rows), default=0)),
+                float(cfg.backlog_limit),
+                "DES says schedulable but the runtime accumulated "
+                "backlog",
+            )
+        )
+    return CaseResult(
+        scenario=scenario,
+        policy=policy,
+        analysis_schedulable=sched_a,
+        des_schedulable=des.schedulable,
+        server_bounded=server_bounded,
+        tasks=tuple(task_rows),
+        violations=tuple(violations),
+    )
+
+
+def run_conformance(
+    scenarios=DEFAULT_SCENARIOS,
+    policies=POLICIES,
+    *,
+    platform=None,
+    cfg: ConformanceConfig | None = None,
+    max_m: int = 3,
+    beam_width: int = 4,
+    prebuilt: dict | None = None,
+) -> ConformanceReport:
+    """Sweep ``scenarios x policies`` and collect every violation.
+
+    Each scenario is resolved once (`traffic.scenarios.build` runs the
+    DSE) and reused across policies; ``prebuilt`` maps scenario names
+    to already-resolved `BuiltScenario`s to skip their DSE entirely.
+    """
+    from repro.core.perfmodel.hardware import paper_platform
+    from repro.traffic.scenarios import build, get_scenario
+
+    platform = platform or paper_platform(16)
+    cfg = cfg or ConformanceConfig()
+    cases = []
+    for name in scenarios:
+        built = (prebuilt or {}).get(name) or build(
+            get_scenario(name),
+            platform,
+            max_m=max_m,
+            beam_width=beam_width,
+            seed=cfg.seed,
+        )
+        for policy in policies:
+            cases.append(run_case(built, policy, cfg=cfg))
+    return ConformanceReport(cases=tuple(cases))

@@ -83,7 +83,15 @@ def edf_stage_bound(
     k: int,
     jitters: list[float],
 ) -> StageBounds:
-    """EDF response bound at stage k: min(d_i + J_i, busy period)."""
+    """EDF response bound at stage k: min(d_i + J_i, busy period).
+
+    The deadline term is only a valid bound while the stage's busy
+    period is finite (its premise — uniprocessor EDF meets deadlines —
+    needs ``u < 1``): on a saturated or overloaded stage (``L == inf``)
+    claiming ``R <= d + J`` would be unsound, so the bound degrades to
+    ``inf`` (caught by the cross-layer conformance harness: the DES
+    exceeded the "bound" on exactly such stages).
+    """
     wcets = [table.wcet(i, k, preemptive=True) for i in range(table.n_tasks)]
     periods = [t.period for t in taskset.tasks]
     L = busy_period(wcets, periods, jitters)
@@ -91,6 +99,9 @@ def edf_stage_bound(
     for i, e in enumerate(wcets):
         if e <= 0:
             out.append(0.0)
+            continue
+        if L == math.inf:
+            out.append(math.inf)
             continue
         deadline_bound = taskset.tasks[i].deadline + jitters[i]
         out.append(min(max(deadline_bound, e), L))

@@ -87,10 +87,22 @@ def stage_slacks(
 ) -> list[float]:
     """Per-stage admission slack ``1 - u^k`` — the utilization budget an
     online admission controller may still hand out on each accelerator
-    before Eq. 3 flips."""
-    return [
-        1.0 - u for u in stage_utilizations(table, taskset, preemptive)
-    ]
+    before Eq. 3 flips.
+
+    Clamped at 0 within the same ``EPS`` band `srt_schedulable` treats
+    as feasible: a stage whose utilization lands within float roundoff
+    above 1.0 passes the Eq. 3 gate, so reporting a (tiny) negative
+    slack for it would hand the admission layer negative headroom for a
+    system the analysis just called schedulable. Genuinely infeasible
+    stages (``u^k > 1 + EPS``) still report their negative slack.
+    """
+    out = []
+    for u in stage_utilizations(table, taskset, preemptive):
+        slack = 1.0 - u
+        if -EPS <= slack < 0.0:
+            slack = 0.0
+        out.append(slack)
+    return out
 
 
 def max_admissible_rate(

@@ -47,6 +47,20 @@ from repro.kernels.preemptible_matmul import (
 DEFAULT_BLOCK = (128, 128, 128)
 
 
+def window_plan(
+    M: int, N: int, K: int, *, block, backend: str, window_tiles: int
+) -> tuple[int, int]:
+    """(window size, window count) the executor runs for one
+    ``(M,K) @ (K,N)`` layer — the single source of truth for window
+    geometry, shared by `_window_for`, the cost-model validation in
+    `PharosServer.__init__` and `repro.conformance.CostModel`. The jnp
+    backend serves one output-tile row per window (exact-FLOP fast
+    path); the pallas backend honours the configured tile count."""
+    _, n_n, _, total = grid_geometry(M, N, K, block)
+    window = n_n if backend == "jnp" else pick_window(total, window_tiles)
+    return window, -(-total // window)
+
+
 # ---------------------------------------------------------------------------
 # window executors
 # ---------------------------------------------------------------------------
@@ -177,6 +191,16 @@ class StageRuntime:
         self.fifo_be: deque[Job] = deque()  # best-effort background
         self.edf: list[tuple[float, int, Job]] = []
         self.running: Job | None = None
+        # cost-model (virtual-time) mode: end of the window in flight
+        self.busy_until = 0.0
+
+    def jobs(self) -> list[Job]:
+        """Every job currently resident on this stage (pool + running)."""
+        out = list(self.fifo) + list(self.fifo_be)
+        out += [j for _, _, j in self.edf]
+        if self.running is not None:
+            out.append(self.running)
+        return out
 
     def push(self, job: Job) -> None:
         if self.policy == "fifo":
@@ -211,10 +235,18 @@ class ServerReport:
     jobs_completed: int
     jobs_released: int
     windows_executed: int
+    #: released-but-unfinished jobs per task at the last
+    #: `PharosServer.finalize_report` — the same number the gateway's
+    #: backlog monitor polls via `pending`, so overload verdicts and
+    #: conformance checks read one counter
+    in_flight: dict[str, int] = field(default_factory=dict)
 
     def max_response(self, name: str) -> float:
         r = self.response_times.get(name, [])
         return max(r) if r else 0.0
+
+    def total_in_flight(self) -> int:
+        return sum(self.in_flight.values())
 
 
 class PharosServer:
@@ -224,6 +256,14 @@ class PharosServer:
     timestamps inside one serving step come from the same clock, so a
     virtual clock (repro.traffic.clock.VirtualClock) makes the runtime
     fully deterministic for tests and for the traffic gateway.
+
+    ``cost_model`` (repro.conformance.CostModel) switches virtual-time
+    service from wall-side quantization to model-driven timing: every
+    executed tile window occupies its stage for exactly the model's
+    per-window WCET on the injected clock, preemption waits for the
+    window boundary, and completions are stamped at the modeled finish
+    time. Requires an injected (virtual) clock — advancing a wall clock
+    by modeled WCETs would be meaningless.
     """
 
     def __init__(
@@ -238,16 +278,47 @@ class PharosServer:
         seed: int = 0,
         clock=None,
         sleep=None,
+        cost_model=None,
     ):
         if policy not in ("fifo", "edf"):
             raise ValueError(policy)
+        if cost_model is not None:
+            if clock is None:
+                raise ValueError(
+                    "cost_model-driven serving needs an injected "
+                    "(virtual) clock"
+                )
+            if cost_model.n_tasks != len(tasks) or any(
+                len(cost_model.layer_costs[i]) != len(t.weights)
+                for i, t in enumerate(tasks)
+            ):
+                raise ValueError("cost model does not match the task set")
+            # window counts must match the executor's real geometry or
+            # per-window charges silently mis-time the whole run
+            for i, t in enumerate(tasks):
+                for j, w in enumerate(t.weights):
+                    K, N = w.shape
+                    _, expect = window_plan(
+                        t.input_rows, N, K,
+                        block=block, backend=backend,
+                        window_tiles=window_tiles,
+                    )
+                    have = cost_model.layer_windows[i][j]
+                    if have != expect:
+                        raise ValueError(
+                            f"cost model window count for task {i} "
+                            f"layer {j} is {have}, executor runs "
+                            f"{expect}"
+                        )
         self.tasks = tasks
         self.policy = policy
         self.block = block
         self.window_tiles = window_tiles
         self.backend = backend
+        self.cost_model = cost_model
         self.clock = clock if clock is not None else time.perf_counter
         self.sleep = sleep if sleep is not None else time.sleep
+        self._missed_in_flight: set[int] = set()
         self.released_per_task = [0] * len(tasks)
         self.completed_per_task = [0] * len(tasks)
         self.stages = [StageRuntime(k, policy) for k in range(n_stages)]
@@ -284,16 +355,16 @@ class PharosServer:
         return total
 
     def _window_for(self, job: Job) -> int:
-        """Preemption quantum. The jnp backend uses one output-tile ROW
-        per window (exact-FLOP fast path); the pallas backend honours
-        the configured tile count."""
+        """Preemption quantum of the current layer (see `window_plan`)."""
         t = self.tasks[job.task_id]
         w = t.weights[job.layer]
         M, K = job.x.shape
-        _, n_n, _, total = grid_geometry(M, w.shape[1], K, self.block)
-        if self.backend == "jnp":
-            return n_n
-        return pick_window(total, self.window_tiles)
+        window, _ = window_plan(
+            M, w.shape[1], K,
+            block=self.block, backend=self.backend,
+            window_tiles=self.window_tiles,
+        )
+        return window
 
     def _finish_layer_or_forward(self, job: Job, now: float) -> None:
         """Layer done: advance; forward to next stage / complete job."""
@@ -308,7 +379,11 @@ class PharosServer:
             self.completed_per_task[job.task_id] += 1
             rt = now - job.release
             self.report.response_times[t.name].append(rt)
-            if now > job.abs_deadline:
+            if (
+                now > job.abs_deadline
+                and job.uid not in self._missed_in_flight
+            ):
+                # not already counted by a mid-run finalize_report
                 self.report.deadline_misses[t.name] += 1
             return
         nxt = t.stage_of_layer[job.layer]
@@ -320,9 +395,8 @@ class PharosServer:
             # release to successor via the inter-stage FIFO (paper §3.2)
             self.stages[nxt].push(job)
 
-    def _step_stage(self, st: StageRuntime, now: float) -> bool:
-        """Run one tile window on stage ``st``. Returns True if it ran."""
-        # EDF preemption check between windows (tile boundary)
+    def _preempt_if_due(self, st: StageRuntime) -> None:
+        """EDF preemption check between windows (tile boundary)."""
         if (
             self.policy == "edf"
             and st.running is not None
@@ -333,13 +407,10 @@ class PharosServer:
             self.report.preemptions += 1
             st.push(preempted)  # progress table keeps (layer, next_tile)
             st.running = None
-        if st.running is None:
-            st.running = st.pop()
-            if st.running is None:
-                return False
-            if st.running.c_acc is None:
-                self._start_layer(st.running)
-        job = st.running
+
+    def _exec_window(self, job: Job) -> int:
+        """Execute one tile window of ``job``'s current layer; returns
+        the layer's total tile count."""
         t = self.tasks[job.task_id]
         w = t.weights[job.layer]
         total = self._layer_tiles(job)
@@ -354,12 +425,52 @@ class PharosServer:
             backend=self.backend,
         )
         self.report.windows_executed += 1
+        return total
+
+    def _step_stage(self, st: StageRuntime, now: float) -> bool:
+        """Run one tile window on stage ``st``. Returns True if it ran."""
+        self._preempt_if_due(st)
+        if st.running is None:
+            st.running = st.pop()
+            if st.running is None:
+                return False
+            if st.running.c_acc is None:
+                self._start_layer(st.running)
+        job = st.running
+        total = self._exec_window(job)
         if job.next_tile >= total:
             st.running = None
             # Completion is stamped off the *injected* clock (the window
             # just executed, so re-read rather than reuse loop-entry
             # `now`) — keeps all timestamps on one timebase.
             self._finish_layer_or_forward(job, self.clock())
+        return True
+
+    def _step_stage_virtual(self, st: StageRuntime, now: float) -> bool:
+        """Cost-model stepping: the stage is occupied until the modeled
+        end of the window in flight; compute runs eagerly at window
+        start, completion bookkeeping is stamped at ``busy_until``."""
+        job = st.running
+        if job is not None:
+            if now < st.busy_until - 1e-18:
+                return False  # mid-window in virtual time
+            if job.next_tile >= self._layer_tiles(job):
+                st.running = None
+                self._finish_layer_or_forward(job, st.busy_until)
+                # a same-stage next layer re-occupies `running`; a
+                # forwarded/finished job frees the stage for the pool
+        self._preempt_if_due(st)
+        if st.running is None:
+            st.running = st.pop()
+            if st.running is None:
+                return False
+            if st.running.c_acc is None:
+                self._start_layer(st.running)
+        job = st.running
+        self._exec_window(job)
+        st.busy_until = now + self.cost_model.window_cost(
+            job.task_id, job.layer
+        )
         return True
 
     # ------------------------------------------------------------------
@@ -391,9 +502,23 @@ class PharosServer:
         """Run at most one tile window on every stage; True if any ran."""
         ran = False
         now = self.clock()
+        stepper = (
+            self._step_stage_virtual
+            if self.cost_model is not None
+            else self._step_stage
+        )
         for st in self.stages:
-            ran |= self._step_stage(st, now)
+            ran |= stepper(st, now)
         return ran
+
+    def next_completion_time(self) -> float:
+        """Earliest modeled window-boundary across busy stages (inf when
+        every stage is idle) — the event a cost-model-driven caller
+        should advance its virtual clock to."""
+        ends = [
+            st.busy_until for st in self.stages if st.running is not None
+        ]
+        return min(ends) if ends else float("inf")
 
     def pending(self, task_id: int) -> int:
         """Jobs of ``task_id`` released but not yet completed."""
@@ -422,10 +547,10 @@ class PharosServer:
             x = self.inputs[i]
             for w in t.weights:
                 M, N = x.shape[0], w.shape[1]
-                _, n_n, _, total = grid_geometry(M, N, x.shape[1], self.block)
-                window = (
-                    n_n if self.backend == "jnp"
-                    else pick_window(total, self.window_tiles)
+                window, _ = window_plan(
+                    M, N, x.shape[1],
+                    block=self.block, backend=self.backend,
+                    window_tiles=self.window_tiles,
                 )
                 c = jnp.zeros((M, N), jnp.float32)
                 c, _ = _run_window(
@@ -434,6 +559,27 @@ class PharosServer:
                 )
                 jax.block_until_ready(c)
                 x = c  # chain shapes like the real execution
+
+    def finalize_report(self, now: float | None = None) -> ServerReport:
+        """Horizon-end accounting: expose per-task in-flight counts and
+        count deadline misses of jobs still executing past their
+        absolute deadline — an overloaded run would otherwise report
+        zero misses because unfinished jobs were never examined.
+        Idempotent: each in-flight job is counted as a miss once."""
+        now = self.clock() if now is None else now
+        self.report.in_flight = {
+            t.name: self.pending(i) for i, t in enumerate(self.tasks)
+        }
+        for st in self.stages:
+            for job in st.jobs():
+                if (
+                    now > job.abs_deadline
+                    and job.uid not in self._missed_in_flight
+                ):
+                    self._missed_in_flight.add(job.uid)
+                    name = self.tasks[job.task_id].name
+                    self.report.deadline_misses[name] += 1
+        return self.report
 
     def run(self, horizon_s: float) -> ServerReport:
         """Serve for ``horizon_s`` clock seconds (periodic releases)."""
@@ -448,6 +594,20 @@ class PharosServer:
                 while next_release[i] <= now:
                     self.submit(i, next_release[i])
                     next_release[i] += t.period
-            if not self.step():
+            ran = self.step()
+            if self.cost_model is not None:
+                # event-driven virtual time: jump to the next modeled
+                # window boundary or the next periodic release
+                nxt = min(
+                    self.next_completion_time(),
+                    min(next_release),
+                    t0 + horizon_s,
+                )
+                now2 = self.clock()
+                if nxt > now2:
+                    self.sleep(nxt - now2)
+                elif not ran:
+                    self.sleep(1e-9)  # degenerate safety tick
+            elif not ran:
                 self.sleep(1e-4)  # idle
-        return self.report
+        return self.finalize_report(t0 + horizon_s)

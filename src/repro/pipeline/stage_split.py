@@ -28,6 +28,7 @@ def design_to_segments(
     rows: int = 128,
     dtype=jnp.float32,
     period_scale: float = 1.0,
+    max_dim: int | None = None,
 ) -> list[ServeTask]:
     """Materialize each task's layer chain as chained GEMM weights with
     the design's stage map (block-aligned so the preemptible kernel's
@@ -39,9 +40,17 @@ def design_to_segments(
     rescales the analytic (TPU-model) periods to the host's wall-clock
     timebase — the schedule structure (ratios, utilization) is
     preserved, only the unit changes.
+
+    ``max_dim`` caps each layer's K/N at a block-multiple — surrogate
+    weights for cost-model-driven virtual serving, where timing comes
+    from the model and the executed GEMM only has to preserve the
+    window/stage structure (clamping K/N changes neither the window
+    grid rows nor the stage map; it keeps a many-GB LM chain runnable
+    on the host). Leave ``None`` whenever the computed *values* matter.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
     bm, bk, bn = block
+    cap = None if max_dim is None else _round_up(max_dim, max(bk, bn))
     out = []
     for i, (w, t) in enumerate(zip(workloads, taskset.tasks)):
         stage_of_layer = []
@@ -49,8 +58,12 @@ def design_to_segments(
             stage_of_layer += [k] * design.splits[k][i]
         dims = []  # chained (K, N) per layer
         prev_n = _round_up(w.layers[0].K, bk)
+        if cap is not None:
+            prev_n = min(prev_n, cap)
         for l in w.layers:
             n = _round_up(l.N, bn)
+            if cap is not None:
+                n = min(n, cap)
             dims.append((prev_n, n))
             prev_n = n
         weights = []

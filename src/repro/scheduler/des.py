@@ -365,12 +365,20 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
     # occur in any interval as a periodic task at that gap, so the cap
     # stays a valid upper bound (and degrades to inf for bursty traces
     # whose min gap saturates a stage — conservative direction).
+    # Under a preemptive policy the busy-period demand must carry the
+    # Eq. 4 overhead inflation (xi per stage visit): a system whose
+    # overhead-inflated utilization reaches 1 can genuinely diverge even
+    # though its raw u^k < 1, and a raw-WCET cap would wrongly clear the
+    # growth flag for it.
     theory_cap = 0.0
     acct_periods = [t.min_inter_arrival() for t in tasks]
     for k in range(n_stages):
-        e_k = [
-            sum(w for st, w in t.segments if st == k) for t in tasks
-        ]
+        xi_k = overheads[k].xi if preemptive else 0.0
+        e_k = []
+        for t in tasks:
+            raw = sum(w for st, w in t.segments if st == k)
+            visits = sum(1 for st, _w in t.segments if st == k)
+            e_k.append(raw + xi_k * visits if raw > 0.0 else 0.0)
         u_k = sum(
             e / p for e, p in zip(e_k, acct_periods) if p > 0.0
         )
@@ -396,7 +404,18 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
             ):
                 growth = True
         elif release_counts[t_id] >= 8:
-            growth = True  # many released, almost none finished
+            # Few completions despite many releases is only divergence
+            # when completions actually *lag* the releases: a finite
+            # trace whose last jobs are simply cut off by the horizon
+            # (explicit-arrival bursts, long tails) must not be flagged.
+            # Short traces where the lag is large but under the margin
+            # are inherently ambiguous (pipeline fill vs true growth);
+            # this heuristic deliberately errs schedulable there and
+            # leaves those to the primary detectors (backlog_limit
+            # overload and, on longer traces, the two-halves test).
+            lag = release_counts[t_id] - len(r)
+            if lag >= 8 and 2 * lag > release_counts[t_id]:
+                growth = True  # most released jobs never finished
     if (
         growth
         and theory_cap != math.inf

@@ -12,8 +12,11 @@ contract) and an `ArrivalProcess` (its actual traffic). At ``run``:
    and, while observed backlog contradicts the analysis, routed through
    the `SheddingPolicy` (submit / drop / degrade-to-best-effort);
 3. the server is stepped between releases. With a `VirtualClock` the
-   whole run is deterministic: each serving iteration charges
-   ``virtual_dt`` seconds, and idle gaps fast-forward to the next
+   whole run is deterministic: when the server carries a
+   `repro.conformance.CostModel` the clock jumps event-to-event (every
+   executed tile window occupies its stage for the model's per-window
+   WCET); otherwise each serving iteration charges the legacy
+   ``virtual_dt`` quantum, and idle gaps fast-forward to the next
    arrival.
 
 The gateway and server must share a timebase: construct the server with
@@ -141,6 +144,12 @@ class TrafficGateway:
             stats[i].scheduled += 1
 
         virtual = hasattr(self.clock, "advance")
+        # with a CostModel on the server, virtual time is event-driven
+        # (per-window WCETs), not quantized — virtual_dt only survives
+        # as a degenerate-progress safety tick
+        cost_driven = (
+            virtual and getattr(self.server, "cost_model", None) is not None
+        )
         if virtual and virtual_dt is None:
             # default serving quantum: a fraction of the tightest
             # analysis period, so even the fastest tenant gets many
@@ -172,7 +181,19 @@ class TrafficGateway:
             if rel >= horizon_s:
                 break
             ran = self.server.step()
-            if virtual:
+            if cost_driven:
+                # advance to the next modeled window boundary or the
+                # next scheduled arrival, whichever comes first
+                nxt = self.server.next_completion_time()
+                if pos < len(sched):
+                    nxt = min(nxt, t0 + sched[pos][0])
+                nxt = min(nxt, t0 + horizon_s)
+                now2 = self.clock.now()
+                if nxt > now2:
+                    self.clock.advance(nxt - now2)
+                elif not ran:
+                    self.clock.advance(virtual_dt)  # degenerate safety
+            elif virtual:
                 if not ran and pos < len(sched):
                     # idle: fast-forward to the next arrival
                     self.clock.advance(
@@ -185,7 +206,7 @@ class TrafficGateway:
         return GatewayReport(
             tenants=stats,
             decisions=list(self.admission.decisions),
-            server_report=self.server.report,
+            server_report=self.server.finalize_report(self.clock.now()),
         )
 
     def _release(

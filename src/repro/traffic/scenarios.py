@@ -181,6 +181,7 @@ class BuiltScenario:
         period_scale: float,
         seed: int = 0,
         rows: int = 128,
+        max_dim: int | None = None,
     ):
         """Rescale to the serving timebase and materialize GEMM chains.
 
@@ -188,6 +189,8 @@ class BuiltScenario:
         `TrafficGateway`: periods *and* WCETs scale together by
         ``period_scale`` so every utilization — and therefore every
         admission verdict — is preserved; only the time unit changes.
+        ``max_dim`` caps surrogate-GEMM dims for cost-model-driven
+        virtual runs (see `design_to_segments`).
         """
         from repro.pipeline.stage_split import design_to_segments
 
@@ -197,6 +200,7 @@ class BuiltScenario:
             self.taskset,
             rows=rows,
             period_scale=period_scale,
+            max_dim=max_dim,
         )
         requests = tuple(
             TaskRequest(
@@ -218,31 +222,23 @@ class BuiltScenario:
         )
         return serve_tasks, requests, arrivals
 
-    def virtual_period_scale(self, virtual_dt: float) -> float:
-        """Period scale making a `VirtualClock` gateway run mirror the
-        analysis.
-
-        With the jnp backend and 128-row inputs every layer completes in
-        exactly one tile window, so a job's virtual service on stage k
-        is ``(layers on k) * virtual_dt``. Scaling periods by the
-        returned factor makes the *virtual* bottleneck utilization equal
-        the analytic one — admitted-only traffic then behaves exactly as
-        Eq. 3 promises in virtual time, and overdriven traffic overloads
-        by the same factor it overdrives.
+    def conformance_cost_model(self, serve_tasks, *, period_scale: float = 1.0):
+        """The `repro.conformance.CostModel` pricing ``serve_tasks`` on
+        this scenario's design — the model-driven replacement for the
+        old ``virtual_period_scale`` one-window-per-``virtual_dt``
+        quantization: virtual serving is charged per executed window
+        from the same exec-model WCETs the analysis uses. Pass the
+        same ``period_scale`` the serve bundle was built with so costs
+        and periods stay on one timebase.
         """
-        from repro.core.rt.schedulability import max_utilization
+        from repro.conformance import CostModel
 
-        target = max_utilization(self.table, self.taskset, False)
-        worst = 0.0
-        for k in range(self.design.n_stages):
-            u_k = sum(
-                self.design.splits[k][i] * virtual_dt / t.period
-                for i, t in enumerate(self.taskset.tasks)
-            )
-            worst = max(worst, u_k)
-        if target <= 0 or worst <= 0:
-            raise ValueError("degenerate scenario: zero utilization")
-        return worst / target
+        return CostModel.from_exec_model(
+            self.design,
+            list(self.workloads),
+            serve_tasks,
+            period_scale=period_scale,
+        )
 
     def _base_periods(self) -> tuple[float, ...]:
         # un-provisioned tenant periods (P'/ratio), recovered from the
