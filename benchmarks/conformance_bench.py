@@ -6,8 +6,18 @@ per task, the three layers' responses (analytic bound, DES max,
 virtual-runtime max), the verdict chain, and every ordering violation.
 A clean run — the acceptance gate — has **zero** violations: the
 analytic bound dominates the DES, the DES dominates the executing
-runtime (within the window-quantization tolerance), and no layer's
+runtime (within the tie-breaking tolerance), and no layer's
 schedulability verdict inverts.
+
+Two CI-enforced invariants ride on top of the sweep:
+
+- **tightened tolerance** — the window-boundary DES must hold a
+  DES-vs-runtime tolerance *strictly below* the PR-2 values that
+  absorbed the idealized-DES deferral gap (asserted against
+  `PR2_TOL_REL` / `PR2_QUANTUM_SLACK`);
+- **wall-clock case** — `run_wallclock_case` drives the gateway on the
+  real clock against the calibrated `CostModel` (one retry absorbs a
+  host throttle landing mid-run; two consecutive failures fail CI).
 
 Also times a wall-clock WCET calibration pass (`CostModel.calibrate`)
 on the ``steady_city`` serve bundle and reports measured-vs-modeled
@@ -29,9 +39,12 @@ import time
 from repro.conformance import (
     DEFAULT_SCENARIOS,
     POLICIES,
+    PR2_QUANTUM_SLACK,
+    PR2_TOL_REL,
     ConformanceConfig,
     CostModel,
     run_conformance,
+    run_wallclock_case,
 )
 from repro.core.perfmodel.hardware import paper_platform
 
@@ -45,6 +58,16 @@ def _num(x: float):
 
 def bench_conformance(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
     cfg = ConformanceConfig(horizon_periods=24.0 if quick else 60.0)
+    # CI invariant: the window-boundary DES must run under a strictly
+    # tighter DES-vs-runtime tolerance than the idealized-preemption
+    # DES of PR 2 needed — loosening it back is a regression
+    assert cfg.tol_rel < PR2_TOL_REL, (
+        f"tol_rel {cfg.tol_rel} regressed to >= PR-2's {PR2_TOL_REL}"
+    )
+    assert cfg.quantum_slack < PR2_QUANTUM_SLACK, (
+        f"quantum_slack {cfg.quantum_slack} regressed to >= "
+        f"PR-2's {PR2_QUANTUM_SLACK}"
+    )
     t0 = time.perf_counter()
     report = run_conformance(
         DEFAULT_SCENARIOS,
@@ -144,19 +167,77 @@ def bench_calibration(quick: bool, built) -> dict:
     }
 
 
+def bench_wallclock(quick: bool, built) -> tuple[dict, bool]:
+    """The calibrated wall-clock case (gateway on the real clock vs the
+    measured `CostModel`), with one retry: a CPU-quota throttle or load
+    spike landing mid-run inflates every wall number at once, which is
+    host noise, not a model defect. Two failures in a row count."""
+    cfg = ConformanceConfig(
+        wall_horizon_periods=8.0 if quick else 12.0,
+        wall_reps=2 if quick else 3,
+    )
+    attempts = []
+    ok = False
+    for attempt in range(2):
+        t0 = time.perf_counter()
+        case = run_wallclock_case(built, "edf", cfg=cfg)
+        attempts.append(
+            {
+                "attempt": attempt,
+                "policy": case.policy,
+                "period_scale": case.period_scale,
+                "horizon_s": case.horizon_s,
+                "margin": case.margin,
+                "wall_seconds": time.perf_counter() - t0,
+                "tasks": [
+                    {
+                        "task": t.task,
+                        "measured_median_s": t.measured_median,
+                        "measured_max_s": t.measured_max,
+                        "jobs": t.jobs,
+                        "predicted_des_max_s": t.predicted_des_max,
+                        "predicted_bound_s": _num(t.predicted_bound),
+                        "in_flight": t.in_flight,
+                    }
+                    for t in case.tasks
+                ],
+                "violations": [str(v) for v in case.violations],
+            }
+        )
+        for row in case.tasks:
+            print(
+                f"wall[{attempt}] {row.task:16s} "
+                f"median={1e3 * row.measured_median:7.3f}ms "
+                f"max={1e3 * row.measured_max:7.3f}ms "
+                f"bound={1e3 * row.predicted_bound:7.3f}ms "
+                f"jobs={row.jobs}"
+            )
+        if case.ok:
+            ok = True
+            break
+        if attempt == 0:
+            print("wall-clock case violated; retrying once", file=sys.stderr)
+        else:
+            print("wall-clock case violated twice; giving up", file=sys.stderr)
+    return {"attempts": attempts, "ok": ok}, ok
+
+
 def main() -> None:
     from repro.traffic.scenarios import build, get_scenario
 
     quick = "--quick" in sys.argv
-    # steady_city's DSE result is shared by the sweep and calibration
+    # steady_city's DSE result is shared by the sweep, calibration and
+    # the wall-clock case
     steady = build(
         get_scenario("steady_city"), paper_platform(16), beam_width=4
     )
     conf, ok = bench_conformance(quick, {"steady_city": steady})
+    wall, wall_ok = bench_wallclock(quick, steady)
     payload = {
         "bench": "conformance",
         "quick": quick,
         "conformance": conf,
+        "wallclock": wall,
         "calibration": bench_calibration(quick, steady),
     }
     os.makedirs(RESULTS_DIR, exist_ok=True)
@@ -164,7 +245,7 @@ def main() -> None:
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"\nwrote {path}")
-    if not ok:
+    if not ok or not wall_ok:
         print("CONFORMANCE VIOLATIONS DETECTED", file=sys.stderr)
         sys.exit(1)
 

@@ -3,38 +3,53 @@
 - `costmodel` — `CostModel`: per-(task, layer) virtual WCETs from the
   exec model or from wall-clock calibration probes; drives the serving
   runtime's virtual time and exports the same WCETs to the analysis
-  (`segment_table`) and the DES (`des_overheads`).
+  (`segment_table`), the DES's limited-preemption chunk schedules
+  (`chunk_schedule`) and its overhead accounting (`des_overheads`).
 - `harness` — `run_conformance` / `run_case`: differential testing of
-  `core.rt` analysis vs `scheduler.des` vs a virtual-clock
-  `PharosServer`, enforcing ``analytic bound >= DES >= runtime`` and
-  verdict agreement, reporting every `Violation` with its margin.
+  `core.rt` analysis vs the window-boundary `scheduler.des` vs a
+  virtual-clock `PharosServer`, enforcing ``analytic bound >= DES >=
+  runtime`` and verdict agreement, reporting every `Violation` with
+  its margin; plus `run_wallclock_case`, the calibrated real-clock leg
+  (gateway on `WallClock` vs the measured `CostModel`).
+
+See ``docs/conformance.md`` for the full contract and tolerance model.
 """
 from repro.conformance.costmodel import CostModel
 from repro.conformance.harness import (
     DEFAULT_SCENARIOS,
     POLICIES,
+    PR2_QUANTUM_SLACK,
+    PR2_TOL_REL,
     CaseResult,
     ConformanceConfig,
     ConformanceReport,
     TaskConformance,
     Violation,
+    WallClockCase,
+    WallClockTask,
     regulate_trace,
     run_case,
     run_conformance,
     run_virtual_server,
+    run_wallclock_case,
 )
 
 __all__ = [
     "CostModel",
     "DEFAULT_SCENARIOS",
     "POLICIES",
+    "PR2_QUANTUM_SLACK",
+    "PR2_TOL_REL",
     "CaseResult",
     "ConformanceConfig",
     "ConformanceReport",
     "TaskConformance",
     "Violation",
+    "WallClockCase",
+    "WallClockTask",
     "regulate_trace",
     "run_case",
     "run_conformance",
     "run_virtual_server",
+    "run_wallclock_case",
 ]

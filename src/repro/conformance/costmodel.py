@@ -132,6 +132,24 @@ class CostModel:
             StageOverhead(e_tile=q) for q in self.stage_window_quantum()
         ]
 
+    def chunk_schedule(self) -> list[dict[int, tuple[float, ...]]]:
+        """Per task: stage -> the non-preemptible chunk lengths (one
+        per executed tile window, in execution order) of that task's
+        segment on the stage — exactly the service quanta
+        `PharosServer` charges between preemption opportunities. Feeds
+        `scheduler.des.simulate_taskset(chunk_schedules=...,
+        preemption="window")` so the DES defers preemption at the same
+        boundaries the runtime does."""
+        out: list[dict[int, tuple[float, ...]]] = []
+        for i in range(self.n_tasks):
+            per_stage: dict[int, list[float]] = {}
+            for j, s in enumerate(self.stage_of_layer[i]):
+                per_stage.setdefault(s, []).extend(
+                    [self.window_cost(i, j)] * self.layer_windows[i][j]
+                )
+            out.append({k: tuple(v) for k, v in per_stage.items()})
+        return out
+
     def scaled(self, factor: float) -> "CostModel":
         """Rescale every cost (e.g. analytic seconds -> wall seconds)."""
         if factor <= 0.0:

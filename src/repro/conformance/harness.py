@@ -23,29 +23,45 @@ disagree and by how much — this is the differential-oracle methodology
 real-time frameworks (Cheddar, MAST) use to validate analyses against
 simulation, applied across our stack.
 
+Preemption model and clock semantics: all three layers model the
+**same limited-preemption discipline** — preemption only at tile-window
+boundaries. The analysis carries it as a per-stage blocking term
+(`end_to_end_bounds(blocking=...)`), the DES executes the `CostModel`'s
+window chunks with boundary-deferred preemption
+(``preemption="window"``), and the runtime realizes it between executed
+GEMM windows. Analysis and DES run on their own exact virtual
+timebases; the runtime leg runs on a `VirtualClock` advanced
+event-to-event by modeled window WCETs (`run_virtual_server`), so every
+number compared here is a deterministic model second. The one
+wall-clock leg is `run_wallclock_case`, which runs the gateway on a
+`WallClock` and compares against a *calibrated* (measured-WCET)
+`CostModel` under an explicit noise margin.
+
 Modeling notes that make the comparison apples-to-apples:
 
 - All three layers read their WCETs from the same `CostModel`
   (`segment_table()` for analysis/DES, per-window costs for the
   runtime), so a disagreement is a *semantics* bug, never a unit skew.
-- The virtual runtime preempts only at window boundaries, but that
-  deferral inserts **no extra work** (the in-flight window completes
-  useful work; accumulators stay resident, so there is no spill/reload
-  xi). The layers therefore compare on *raw* WCETs — Eq. 3 on raw
-  utilization is the sound verdict for every layer — and the window
-  quantum enters as the DES-vs-runtime comparison tolerance instead of
-  as Eq. 4 inflation. (`CostModel.segment_table`/`des_overheads` still
-  expose the conservative inserted-overhead accounting for admission
-  users that want Eq. 4 margins.)
+- The window-boundary deferral inserts **no extra work** (the in-flight
+  window completes useful work; accumulators stay resident, so there is
+  no spill/reload xi). The layers therefore compare on *raw* WCETs —
+  Eq. 3 on raw utilization is the sound verdict for every layer — and
+  the window quantum enters the analysis once per stage as the
+  limited-preemption **blocking term**, not as Eq. 4 inflation.
+  (`CostModel.segment_table`/`des_overheads` still expose the
+  conservative inserted-overhead accounting for admission users that
+  want Eq. 4 margins.)
 - Traffic is **regulated** to the admission contract before the run
   (`regulate_trace`): the analytic layer's premise is a minimum
   inter-arrival of one provisioned period, which raw Poisson/MMPP
   traces violate with probability 1. Unregulated overload is the
   shedding layer's test surface, not conformance's.
-- The DES >= runtime comparison carries a small schedule-noise
-  tolerance (`tol_rel`, plus `quantum_slack` windows absolute): the
-  runtime resolves simultaneous-event ties by stage iteration order
-  and defers preemption to window boundaries, which can locally
+- Because the DES now defers preemption at the same window boundaries
+  as the runtime, the DES >= runtime comparison needs only a small
+  tie-breaking tolerance (`tol_rel`, plus `quantum_slack` windows
+  absolute — both strictly tighter than the PR-2 values that had to
+  absorb the idealized-DES deferral gap): the runtime resolves
+  simultaneous-event ties by stage iteration order, which can locally
   reorder two equal-priority jobs without breaking soundness.
 """
 from __future__ import annotations
@@ -85,16 +101,29 @@ def regulate_trace(times, min_gap: float) -> list[float]:
     return out
 
 
+#: the DES-vs-runtime tolerance PR 2 shipped with an idealized
+#: (instant-preemption) DES — kept as the reference point the
+#: window-boundary DES must beat (asserted by
+#: ``benchmarks/conformance_bench.py`` in CI)
+PR2_TOL_REL = 0.02
+PR2_QUANTUM_SLACK = 2.0
+
+
 @dataclass(frozen=True)
 class ConformanceConfig:
     #: simulated horizon, in multiples of the longest tenant period
     horizon_periods: float = 40.0
     #: enforce the min-inter-arrival contract on stochastic traces
     regulate: bool = True
-    #: DES-vs-runtime schedule-noise tolerance (relative on the DES max)
-    tol_rel: float = 0.02
+    #: DES-vs-runtime schedule-noise tolerance (relative on the DES
+    #: max). With the window-boundary DES the systematic deferral gap
+    #: is gone; what remains is simultaneous-event tie-breaking, so
+    #: both knobs sit strictly below the `PR2_*` values (worst residual
+    #: observed across the registry: 0.36 visit-quanta, on
+    #: ``sensor_fusion``/fifo forwarding ties)
+    tol_rel: float = 0.01
     #: plus this many worst-case windows of absolute slack
-    quantum_slack: float = 2.0
+    quantum_slack: float = 0.75
     #: analysis-vs-DES tolerance (bounds are sound: float noise only)
     analysis_tol_rel: float = 1e-9
     #: runtime backlog divergence threshold (mirrors the DES's
@@ -105,6 +134,22 @@ class ConformanceConfig:
     #: window/stage structure (keeps LM-tenant chains host-runnable)
     max_dim: int = 512
     seed: int = 0
+    # -- wall-clock case (`run_wallclock_case`) -----------------------
+    #: horizon of the wall run, in multiples of the longest wall period
+    wall_horizon_periods: float = 12.0
+    #: timed repetitions per calibration probe
+    wall_reps: int = 3
+    #: utilization headroom of the wall timebase: periods are scaled so
+    #: measured utilization sits at <= 1/headroom of the modeled one
+    #: (leaves room for the serving loop's own Python overhead, which
+    #: the per-window probes cannot see)
+    wall_scale_headroom: float = 4.0
+    #: noise margin on measured-vs-predicted wall responses: the host
+    #: is not an RTOS — GC, scheduler jitter and JIT cache effects land
+    #: on top of the calibrated WCETs, so the wall leg checks
+    #: ``measured <= margin * analytic bound`` rather than the model
+    #: legs' near-equality
+    wall_margin: float = 3.0
 
 
 @dataclass(frozen=True)
@@ -288,7 +333,8 @@ def run_case(
     )
     # zero-overhead WCET view: window-boundary deferral inserts no work
     # (see module docstring), so analysis and DES run on raw WCETs and
-    # the quantum shows up only in the DES-vs-runtime tolerance
+    # the quantum enters the analysis as the blocking term instead of
+    # as Eq. 4 inflation
     table = SegmentTable(
         base=cm.segment_table().base,
         overhead=[0.0] * cm.n_stages,
@@ -303,13 +349,19 @@ def run_case(
             for tr, p in zip(traces, periods)
         ]
 
-    # layer 1: analysis
-    sched_a = srt_schedulable(table, taskset, preemptive)
-    bounds = end_to_end_bounds(table, taskset, policy)
+    # per-stage blocking term: the longest non-preemptible window a
+    # boundary-deferred preemptor can wait behind
+    quanta = cm.stage_window_quantum()
 
-    # layer 2: DES on the same WCETs (immediate preemption, zero xi —
-    # the runtime's deferred-preemption divergence from this ideal is
-    # bounded by the window quantum and absorbed below)
+    # layer 1: analysis (blocking-aware under EDF: limited preemption
+    # adds at most one in-flight window per stage visit)
+    sched_a = srt_schedulable(table, taskset, preemptive)
+    bounds = end_to_end_bounds(table, taskset, policy, blocking=quanta)
+
+    # layer 2: DES on the same WCETs with the runtime's own
+    # limited-preemption semantics — jobs execute the CostModel's
+    # window chunks and preemption defers to chunk boundaries, so the
+    # DES-vs-runtime gap is tie-breaking noise, not a quantum
     des: SimResult = simulate_taskset(
         table,
         taskset,
@@ -317,6 +369,8 @@ def run_case(
         horizon=horizon,
         overheads=None,
         arrivals=traces,
+        chunk_schedules=cm.chunk_schedule(),
+        preemption="window",
     )
 
     # layer 3: the executing runtime in model-driven virtual time
@@ -325,9 +379,10 @@ def run_case(
     )
 
     # ---- compare ----
-    # per-task deferral allowance: at each visited stage the runtime
-    # may hold an urgent job behind (at most) one in-flight window
-    quanta = cm.stage_window_quantum()
+    # per-task schedule-noise allowance: the DES now defers preemption
+    # at the same window boundaries as the runtime, so the residual gap
+    # is simultaneous-event tie-breaking (fractions of a window), not
+    # the systematic one-window-per-stage deferral PR 2 tolerated
     visit_quanta = [
         sum(q for q, b in zip(quanta, row) if b > 0.0)
         for row in table.base
@@ -411,6 +466,227 @@ def run_case(
         analysis_schedulable=sched_a,
         des_schedulable=des.schedulable,
         server_bounded=server_bounded,
+        tasks=tuple(task_rows),
+        violations=tuple(violations),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the wall-clock case: calibrated CostModel vs the real clock
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class WallClockTask:
+    """Per-task view of one wall-clock conformance case (wall seconds)."""
+
+    task: str
+    measured_median: float
+    measured_max: float
+    jobs: int
+    predicted_des_max: float
+    predicted_bound: float
+    in_flight: int
+
+
+@dataclass(frozen=True)
+class WallClockCase:
+    """One `run_wallclock_case` result: the gateway on a real clock vs
+    the calibrated `CostModel`'s predictions."""
+
+    scenario: str
+    policy: str
+    #: model-seconds -> wall-seconds conversion applied to periods
+    period_scale: float
+    margin: float
+    horizon_s: float
+    tasks: tuple[WallClockTask, ...]
+    violations: tuple[Violation, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def run_wallclock_case(
+    built,
+    policy: str = "edf",
+    *,
+    cfg: ConformanceConfig | None = None,
+) -> WallClockCase:
+    """ROADMAP's calibrated wall-clock conformance case: run the
+    `TrafficGateway` on a **real** `WallClock` and check the observed
+    response times against the *calibrated* `CostModel`'s predictions.
+
+    Procedure:
+
+    1. calibrate per-(task, layer) window WCETs on this host
+       (`CostModel.calibrate` — measured, not modeled);
+    2. rescale the scenario's periods onto the wall timebase with
+       `wall_scale_headroom` of utilization slack (the probes measure
+       pure window execution; the serving loop adds Python overhead the
+       model cannot see);
+    3. release the contract-regulated traces through the gateway on the
+       wall clock, executing real GEMM windows;
+    4. compare each task's **median** measured response against the
+       blocking-aware analytic bound on the *measured* WCET table,
+       under the explicit `wall_margin` (the host is not an RTOS: a GC
+       pause or scheduler throttle can blow any single job's response,
+       so the per-job max is reported but only the typical-path median
+       gates — this leg checks calibrated-model fidelity, not hard
+       real-time).
+
+    The DES prediction on the measured chunks is reported alongside for
+    reference. Violations use kind ``wall_vs_model`` (median response
+    above margin * bound), ``wall_no_jobs`` (a tenant finished nothing
+    inside the horizon) and ``verdict_wall_backlog`` (runtime
+    accumulated backlog the measured-WCET analysis says cannot happen).
+    """
+    from repro.core.rt.task import Task, TaskSet
+    from repro.pipeline.serve import PharosServer
+    from repro.traffic.admission import AdmissionController
+    from repro.traffic.arrival import TraceArrivals
+    from repro.traffic.clock import WallClock
+    from repro.traffic.gateway import TrafficGateway
+
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}")
+    cfg = cfg or ConformanceConfig()
+    scenario = built.scenario.name
+
+    # 1. calibrate on the same GEMM geometry the wall run will execute
+    serve_model, _req, _arr = built.serve_bundle(
+        period_scale=1.0, seed=cfg.seed, max_dim=cfg.max_dim
+    )
+    probe = PharosServer(
+        serve_model, built.design.n_stages, policy=policy
+    )
+    measured = CostModel.calibrate(probe, reps=cfg.wall_reps)
+    modeled = CostModel.from_exec_model(
+        built.design, list(built.workloads), serve_model
+    )
+
+    # 2. wall timebase: scale every period by headroom x the worst
+    # measured/modeled segment ratio, so measured utilization is at
+    # most modeled utilization / headroom on every stage
+    ratio = max(
+        measured.segment_cost(i, k) / modeled.segment_cost(i, k)
+        for i in range(modeled.n_tasks)
+        for k in range(modeled.n_stages)
+        if modeled.segment_cost(i, k) > 0.0
+    )
+    scale = cfg.wall_scale_headroom * ratio
+    serve_tasks, requests, arrivals = built.serve_bundle(
+        period_scale=scale, seed=cfg.seed, max_dim=cfg.max_dim
+    )
+    wall_taskset = TaskSet(
+        tasks=tuple(
+            Task(
+                workload=w,
+                period=t.period * scale,
+                deadline=t.deadline * scale,
+                sporadic=t.sporadic,
+                name=t.name,
+            )
+            for w, t in zip(built.workloads, built.taskset.tasks)
+        )
+    )
+    periods = [t.period for t in wall_taskset.tasks]
+    horizon = cfg.wall_horizon_periods * max(periods)
+
+    # 3. predictions from the measured model (wall seconds throughout)
+    table = SegmentTable(
+        base=measured.segment_table().base,
+        overhead=[0.0] * measured.n_stages,
+    )
+    quanta = measured.stage_window_quantum()
+    bounds = end_to_end_bounds(table, wall_taskset, policy, blocking=quanta)
+    traces = [p.arrivals(horizon) for p in arrivals]
+    if cfg.regulate:
+        traces = [
+            [x for x in regulate_trace(tr, p) if x < horizon]
+            for tr, p in zip(traces, periods)
+        ]
+    des: SimResult = simulate_taskset(
+        table,
+        wall_taskset,
+        policy,
+        horizon=horizon,
+        overheads=None,
+        arrivals=traces,
+        chunk_schedules=measured.chunk_schedule(),
+        preemption="window",
+    )
+
+    # 4. the wall run: same regulated traces, replayed on the real
+    # clock. Admission runs on raw WCETs (zero inserted overhead):
+    # window-boundary deferral blocks, it does not inflate utilization
+    # — the same premise every other conformance leg uses.
+    srv = PharosServer(serve_tasks, built.design.n_stages, policy=policy)
+    admission = AdmissionController(
+        [0.0] * built.design.n_stages,
+        preemptive=(policy == "edf"),
+    )
+    gateway = TrafficGateway(
+        srv,
+        admission,
+        requests,
+        [TraceArrivals(times=tuple(tr)) for tr in traces],
+        clock=WallClock(),
+    )
+    report = gateway.run(horizon, warmup=True)
+    sr = report.server_report
+
+    violations: list[Violation] = []
+    task_rows: list[WallClockTask] = []
+    for i, t in enumerate(wall_taskset.tasks):
+        rts = sorted(sr.response_times.get(t.name, []))
+        measured_median = rts[len(rts) // 2] if rts else 0.0
+        des_r = des.response_times[i]
+        row = WallClockTask(
+            task=t.name,
+            measured_median=measured_median,
+            measured_max=rts[-1] if rts else 0.0,
+            jobs=len(rts),
+            predicted_des_max=max(des_r) if des_r else 0.0,
+            predicted_bound=bounds[i],
+            in_flight=sr.in_flight.get(t.name, 0),
+        )
+        task_rows.append(row)
+        if not rts:
+            violations.append(
+                Violation(
+                    scenario, policy, t.name, "wall_no_jobs",
+                    0.0, 1.0,
+                    "tenant completed no jobs inside the wall horizon",
+                )
+            )
+        elif (
+            math.isfinite(bounds[i])
+            and measured_median > cfg.wall_margin * bounds[i]
+        ):
+            violations.append(
+                Violation(
+                    scenario, policy, t.name, "wall_vs_model",
+                    measured_median, cfg.wall_margin * bounds[i],
+                    "median wall-clock response exceeds the calibrated "
+                    f"analytic bound x{cfg.wall_margin:g} margin",
+                )
+            )
+    worst_backlog = max((r.in_flight for r in task_rows), default=0)
+    if sr.jobs_completed == 0 or worst_backlog > cfg.backlog_limit:
+        violations.append(
+            Violation(
+                scenario, policy, "*", "verdict_wall_backlog",
+                float(worst_backlog), float(cfg.backlog_limit),
+                "measured-WCET analysis says bounded but the wall run "
+                "accumulated backlog",
+            )
+        )
+    return WallClockCase(
+        scenario=scenario,
+        policy=policy,
+        period_scale=scale,
+        margin=cfg.wall_margin,
+        horizon_s=horizon,
         tasks=tuple(task_rows),
         violations=tuple(violations),
     )

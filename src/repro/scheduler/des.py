@@ -1,5 +1,11 @@
 """Event-driven pipeline scheduler simulator.
 
+Clock semantics: the simulator runs on its own event-driven virtual
+timebase — event timestamps are exact model seconds, never wall time.
+It shares no clock with the serving runtime; the conformance harness
+(`repro.conformance`) aligns the two by driving both from the same
+WCETs and release traces.
+
 Design notes
 ------------
 * Entities: ``M`` stages, each a single server with a job pool. A task
@@ -7,12 +13,26 @@ Design notes
   in order; chained (PHAROS) designs have increasing stage indices,
   throughput-guided baselines may revisit stages (backtracking), which
   the polling/no-polling FIFO variants treat differently.
-* Preemption (EDF only): when a job with an earlier absolute deadline
-  arrives at a busy stage, the running job is preempted. Overhead model
-  mirrors the paper's tile-granular mechanism: the preempting job can
-  only start after ``pre = e_tile + e_store`` (drain current tile, spill
-  partial outputs), and the preempted job pays ``post = e_load`` extra
-  when it resumes (buffer reload). FIFO never preempts -> zero overhead.
+* Preemption model (EDF only; FIFO never preempts). Two granularities,
+  selected by ``SimConfig.preemption``:
+
+  - ``"instant"`` — idealized: when a job with an earlier absolute
+    deadline arrives at a busy stage, the running job is preempted
+    immediately. Overhead mirrors the paper's tile-granular mechanism:
+    the preemptor starts after ``pre = e_tile + e_store`` (drain the
+    current tile, spill partial outputs) and the preempted job pays
+    ``post = e_load`` extra on resume (buffer reload).
+  - ``"window"`` — limited preemption, matching the `PharosServer`
+    runtime: each segment executes as a sequence of non-preemptible
+    *chunks* (`SimTask.chunks`, e.g. the `CostModel`'s per-layer tile
+    windows; default: one chunk = the whole segment). Preemption
+    decisions happen **only at chunk boundaries**, so an urgent job
+    blocks for at most the in-flight chunk. Because the boundary
+    already absorbed the drain (``e_tile`` becomes real blocking, not
+    inserted work), each actual preemption *event* charges only
+    ``e_store`` to the preemptor's start and ``e_load`` to the
+    preempted job's resume — Eq. 4's xi is paid per preemption event,
+    not inflated per job.
 * Events are versioned per stage (``epoch``): a scheduled completion is
   ignored if the stage has been re-dispatched since it was scheduled.
 * Schedulability detection (paper §5.2): simulate ``horizon`` (default
@@ -46,14 +66,33 @@ class SimTask:
     phase: float = 0.0
     name: str = ""
     arrivals: tuple[float, ...] | None = None  # explicit release times
+    #: per-segment non-preemptible chunk lengths (window-boundary
+    #: preemption, ``SimConfig.preemption == "window"``); aligned with
+    #: ``segments`` as passed in, each tuple summing to that segment's
+    #: WCET. None -> every segment is one indivisible chunk.
+    chunks: tuple[tuple[float, ...], ...] | None = None
 
     def __post_init__(self) -> None:
         if self.deadline == 0.0:
             object.__setattr__(self, "deadline", self.period)
-        segs = tuple((s, w) for s, w in self.segments if w > 0.0)
+        raw = tuple(self.segments)
+        if self.chunks is not None and len(self.chunks) != len(raw):
+            raise ValueError("chunks must align 1:1 with segments")
+        keep = [i for i, (_s, w) in enumerate(raw) if w > 0.0]
+        segs = tuple((raw[i][0], raw[i][1]) for i in keep)
         object.__setattr__(self, "segments", segs)
         if not segs:
             raise ValueError("task has no non-empty segments")
+        if self.chunks is not None:
+            chs = tuple(tuple(float(c) for c in self.chunks[i]) for i in keep)
+            for (_s, w), ch in zip(segs, chs):
+                if not ch or any(c <= 0.0 for c in ch):
+                    raise ValueError("chunk lengths must be positive")
+                if abs(sum(ch) - w) > 1e-6 * max(w, 1e-12):
+                    raise ValueError(
+                        "segment chunks must sum to the segment WCET"
+                    )
+            object.__setattr__(self, "chunks", chs)
         if self.arrivals is not None:
             arr = tuple(float(a) for a in self.arrivals)
             if any(a < 0.0 for a in arr):
@@ -61,6 +100,13 @@ class SimTask:
             if any(b < a for a, b in zip(arr, arr[1:])):
                 raise ValueError("arrival times must be non-decreasing")
             object.__setattr__(self, "arrivals", arr)
+
+    def segment_chunks(self, seg_idx: int) -> tuple[float, ...]:
+        """Non-preemptible chunk schedule of one segment (the whole
+        segment when no explicit schedule was given)."""
+        if self.chunks is not None:
+            return self.chunks[seg_idx]
+        return (self.segments[seg_idx][1],)
 
     def min_inter_arrival(self) -> float:
         """Smallest observed gap (periodic tasks: the period) — the
@@ -96,6 +142,10 @@ class SimConfig:
     policy: str = "edf"  # "fifo" | "fifo_no_polling" | "edf"
     horizon: float = 0.0  # 0 -> 120 x max period
     overheads: list[StageOverhead] | None = None  # None -> zero overhead
+    #: "instant" — idealized immediate preemption; "window" — limited
+    #: preemption at `SimTask.chunks` boundaries only (the runtime's
+    #: tile-window semantics), xi charged per actual preemption event
+    preemption: str = "instant"
     backlog_limit: int = 64  # pending jobs per task before declaring overload
     #: divergence tolerance, 2nd half vs 1st half of the trace. Growth
     #: is declared only when *both* the mean and the max response rise
@@ -136,6 +186,8 @@ class _Job:
         "remaining",
         "arrive_stage_t",
         "stage_done",
+        "chunk_i",
+        "carry",
     )
 
     def __init__(self, task_id: int, idx: int, release: float, abs_deadline: float):
@@ -148,6 +200,9 @@ class _Job:
         self.arrive_stage_t = release
         # per-segment completion flags, for the polling variants
         self.stage_done: list[bool] = []
+        # window-boundary (limited-preemption) bookkeeping
+        self.chunk_i = 0  # next chunk of the segment in flight
+        self.carry = 0.0  # resume overhead owed before the next chunk
 
 
 class _Stage:
@@ -173,12 +228,15 @@ def _job_key_edf(j: _Job):
 def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
     if cfg.policy not in ("fifo", "fifo_no_polling", "edf"):
         raise ValueError(f"unknown policy {cfg.policy!r}")
+    if cfg.preemption not in ("instant", "window"):
+        raise ValueError(f"unknown preemption model {cfg.preemption!r}")
     n_stages = 1 + max(s for t in tasks for s, _ in t.segments)
     overheads = cfg.overheads or [StageOverhead()] * n_stages
     if len(overheads) < n_stages:
         raise ValueError("overheads shorter than number of stages")
     horizon = cfg.horizon or 120.0 * max(t.period for t in tasks)
     preemptive = cfg.policy == "edf"
+    window_mode = cfg.preemption == "window"
     key = _job_key_edf if preemptive else _job_key_fifo
 
     stages = [_Stage(k) for k in range(n_stages)]
@@ -231,13 +289,18 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
                 return completed_upto[t_id] >= j_idx - 1
             return prev[s_idx]
 
+    def enter_stage(job: _Job, now: float) -> None:
+        stage_k = tasks[job.task_id].segments[job.seg_idx][0]
+        job.arrive_stage_t = now
+        job.remaining = tasks[job.task_id].segments[job.seg_idx][1]
+        job.chunk_i = 0
+        job.carry = 0.0
+        stages[stage_k].pool.append(job)
+        dispatch(stages[stage_k], now)
+
     def try_admit(job: _Job, now: float) -> None:
         if gate_open(job):
-            stage_k = tasks[job.task_id].segments[job.seg_idx][0]
-            job.arrive_stage_t = now
-            job.remaining = tasks[job.task_id].segments[job.seg_idx][1]
-            stages[stage_k].pool.append(job)
-            dispatch(stages[stage_k], now)
+            enter_stage(job, now)
         else:
             gated[job.task_id].append(job)
 
@@ -245,22 +308,35 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
         still = []
         for job in gated[t_id]:
             if gate_open(job):
-                stage_k = tasks[job.task_id].segments[job.seg_idx][0]
-                job.arrive_stage_t = now
-                job.remaining = tasks[job.task_id].segments[job.seg_idx][1]
-                stages[stage_k].pool.append(job)
-                dispatch(stages[stage_k], now)
+                enter_stage(job, now)
             else:
                 still.append(job)
         gated[t_id] = still
 
+    def start_chunk(st: _Stage, job: _Job, now: float) -> None:
+        """Window mode: occupy the stage with ``job``'s next
+        non-preemptible chunk (plus any resume overhead owed)."""
+        quantum = (
+            tasks[job.task_id].segment_chunks(job.seg_idx)[job.chunk_i]
+            + job.carry
+        )
+        job.carry = 0.0
+        st.running = job
+        st.epoch += 1
+        st.run_start = now
+        push(now + quantum, 1, (st.idx, st.epoch))
+
     def dispatch(st: _Stage, now: float) -> None:
-        """(Re)assign the stage server; possibly preempt (EDF)."""
+        """(Re)assign the stage server; possibly preempt (EDF).
+
+        Window mode never preempts here: a busy stage stays busy until
+        its chunk-completion event (`on_chunk_boundary`) fires.
+        """
         nonlocal preemptions
         if not st.pool and st.running is None:
             return
         if st.running is not None:
-            if not preemptive or not st.pool:
+            if window_mode or not preemptive or not st.pool:
                 return
             best = min(st.pool, key=key)
             if best.abs_deadline >= st.running.abs_deadline:
@@ -284,10 +360,42 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
         # idle server: pick next
         nxt = min(st.pool, key=key)
         st.pool.remove(nxt)
+        if window_mode:
+            start_chunk(st, nxt, now)
+            return
         st.running = nxt
         st.epoch += 1
         st.run_start = now
         push(now + nxt.remaining, 1, (st.idx, st.epoch))
+
+    def on_chunk_boundary(st: _Stage, now: float) -> None:
+        """Window mode completion event: one non-preemptible chunk
+        finished. Either the segment is done, or this is the only point
+        where an EDF preemption decision may happen — the runtime's
+        tile-window boundary. A boundary preemption charges ``e_store``
+        to the preemptor's start and ``e_load`` to the preempted job's
+        resume (the drain already happened: the chunk ran to its end)."""
+        nonlocal preemptions
+        job = st.running
+        assert job is not None
+        chs = tasks[job.task_id].segment_chunks(job.seg_idx)
+        job.chunk_i += 1
+        job.remaining = max(0.0, job.remaining - chs[job.chunk_i - 1])
+        if job.chunk_i >= len(chs):
+            on_complete(st, now)
+            return
+        if preemptive and st.pool:
+            best = min(st.pool, key=key)
+            if best.abs_deadline < job.abs_deadline:
+                ov = overheads[st.idx]
+                job.carry += ov.post  # reload when it resumes
+                st.pool.append(job)
+                st.pool.remove(best)
+                preemptions += 1
+                best.carry += ov.e_store  # spill of the preempted job
+                start_chunk(st, best, now)
+                return
+        start_chunk(st, job, now)  # keep running: next chunk
 
     def on_complete(st: _Stage, now: float) -> None:
         nonlocal jobs_completed
@@ -351,7 +459,10 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
             st = stages[st_idx]
             if st.epoch != epoch or st.running is None:
                 continue  # stale completion (preempted/re-dispatched)
-            on_complete(st, now)
+            if window_mode:
+                on_chunk_boundary(st, now)
+            else:
+                on_complete(st, now)
 
     # ---- verdict ----
     # Theory cap: with every stage utilization < 1, any work-conserving
@@ -366,19 +477,36 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
     # stays a valid upper bound (and degrades to inf for bursty traces
     # whose min gap saturates a stage — conservative direction).
     # Under a preemptive policy the busy-period demand must carry the
-    # Eq. 4 overhead inflation (xi per stage visit): a system whose
-    # overhead-inflated utilization reaches 1 can genuinely diverge even
-    # though its raw u^k < 1, and a raw-WCET cap would wrongly clear the
-    # growth flag for it.
+    # Eq. 4 overhead inflation: a system whose overhead-inflated
+    # utilization reaches 1 can genuinely diverge even though its raw
+    # u^k < 1, and a raw-WCET cap would wrongly clear the growth flag
+    # for it. Instant preemption inflates by xi per stage visit; window
+    # mode charges (e_store + e_load) per actual preemption event, and a
+    # segment of c chunks can be preempted at most c - 1 times (only at
+    # its own interior boundaries), so the per-visit inflation is
+    # (e_store + e_load) * (c - 1) — e_tile is real blocking there, not
+    # inserted work.
     theory_cap = 0.0
     acct_periods = [t.min_inter_arrival() for t in tasks]
     for k in range(n_stages):
         xi_k = overheads[k].xi if preemptive else 0.0
+        ev_k = overheads[k].e_store + overheads[k].e_load
         e_k = []
         for t in tasks:
             raw = sum(w for st, w in t.segments if st == k)
-            visits = sum(1 for st, _w in t.segments if st == k)
-            e_k.append(raw + xi_k * visits if raw > 0.0 else 0.0)
+            if not preemptive or raw <= 0.0:
+                e_k.append(raw if raw > 0.0 else 0.0)
+                continue
+            if window_mode:
+                infl = sum(
+                    ev_k * (len(t.segment_chunks(si)) - 1)
+                    for si, (st, _w) in enumerate(t.segments)
+                    if st == k
+                )
+            else:
+                visits = sum(1 for st, _w in t.segments if st == k)
+                infl = xi_k * visits
+            e_k.append(raw + infl)
         u_k = sum(
             e / p for e, p in zip(e_k, acct_periods) if p > 0.0
         )
@@ -444,6 +572,8 @@ def simulate_taskset(
     overheads: list[StageOverhead] | None = None,
     mapping_orders: list[list[int]] | None = None,
     arrivals: list[list[float] | None] | None = None,
+    chunk_schedules: list[dict[int, tuple[float, ...]]] | None = None,
+    preemption: str = "instant",
 ) -> SimResult:
     """Bridge from `SegmentTable`/`TaskSet` (core.rt) to the simulator.
 
@@ -453,9 +583,18 @@ def simulate_taskset(
 
     ``arrivals`` optionally gives, per task, an explicit release-time
     sequence (see `SimTask.arrivals`); ``None`` entries stay periodic.
+
+    ``chunk_schedules`` (with ``preemption="window"``) gives, per task,
+    a stage -> non-preemptible chunk lengths map (e.g.
+    `repro.conformance.CostModel.chunk_schedule`); stages without an
+    entry run their whole segment as one chunk. Tasks that revisit a
+    stage (non-chained mapping orders) cannot carry per-stage chunk
+    schedules — the map would be ambiguous per visit.
     """
     if arrivals is not None and len(arrivals) != len(taskset):
         raise ValueError("arrivals length != taskset size")
+    if chunk_schedules is not None and len(chunk_schedules) != len(taskset):
+        raise ValueError("chunk_schedules length != taskset size")
     tasks = []
     for i, t in enumerate(taskset.tasks):
         order = (
@@ -465,6 +604,17 @@ def simulate_taskset(
         )
         segs = tuple((k, table.base[i][k]) for k in order if table.base[i][k] > 0)
         arr = arrivals[i] if arrivals is not None else None
+        chunks = None
+        if chunk_schedules is not None:
+            sched = chunk_schedules[i]
+            if len({k for k, _w in segs}) != len(segs):
+                raise ValueError(
+                    "per-stage chunk schedules need chained (no-revisit) "
+                    "stage orders"
+                )
+            chunks = tuple(
+                sched.get(k, (w,)) for k, w in segs
+            )
         tasks.append(
             SimTask(
                 segments=segs,
@@ -472,6 +622,7 @@ def simulate_taskset(
                 deadline=t.deadline,
                 name=t.name,
                 arrivals=tuple(arr) if arr is not None else None,
+                chunks=chunks,
             )
         )
     if overheads is None and policy == "edf":
@@ -479,5 +630,10 @@ def simulate_taskset(
             StageOverhead(e_tile=o / 3.0, e_store=o / 3.0, e_load=o / 3.0)
             for o in table.overhead
         ]
-    cfg = SimConfig(policy=policy, horizon=horizon, overheads=overheads)
+    cfg = SimConfig(
+        policy=policy,
+        horizon=horizon,
+        overheads=overheads,
+        preemption=preemption,
+    )
     return simulate(tasks, cfg)

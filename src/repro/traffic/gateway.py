@@ -19,8 +19,22 @@ contract) and an `ArrivalProcess` (its actual traffic). At ``run``:
    ``virtual_dt`` quantum, and idle gaps fast-forward to the next
    arrival.
 
-The gateway and server must share a timebase: construct the server with
-``clock=clk.now, sleep=clk.sleep`` and hand the same ``clk`` here.
+Clock semantics: the gateway and server must share one timebase —
+construct the server with ``clock=clk.now, sleep=clk.sleep`` and hand
+the same ``clk`` here. On a `WallClock` the release loop *polls* real
+time (releases are stamped with their nominal schedule time; polling
+delay shows up as `TenantStats.release_jitter`, not as response time
+skew); on a `VirtualClock` the loop *drives* time and releases land
+exactly on schedule.
+
+Preemption model: the gateway never preempts anything itself — it only
+decides, per release, whether a job enters at all (and in which service
+class). Preemption granularity belongs to the server below: FIFO runs
+every queued window to completion, EDF preempts between tile windows
+only (`pipeline.serve`), which is the limited-preemption semantics the
+DES (``preemption="window"``) and the blocking-aware analysis bound
+model — see `repro.conformance` for the harness that holds all of them
+to it.
 """
 from __future__ import annotations
 

@@ -128,6 +128,53 @@ def test_busy_period_basics():
     assert L2 == pytest.approx(0.9)
 
 
+def test_busy_period_blocking_term():
+    # the limited-preemption B enters once: L = B + sum ceil(L/p)*e
+    assert busy_period([0.2], [1.0], blocking=0.1) == pytest.approx(0.3)
+    # blocking alone (no competing work) is still a busy interval
+    assert busy_period([], [], blocking=0.25) == pytest.approx(0.25)
+    # blocking can push the fixed point over a period boundary:
+    # L = 0.3 + ceil(L/1)*0.4 + ceil(L/1.5)*0.4 -> 1.1 -> 1.5 -> 1.9
+    assert busy_period([0.4, 0.4], [1.0, 1.5], blocking=0.3) == (
+        pytest.approx(1.9)
+    )
+    # divergence is unchanged by blocking
+    assert busy_period([1.0], [1.0], blocking=0.1) == math.inf
+
+
+def test_end_to_end_bounds_blocking_monotone_and_fifo_invariant():
+    w = _mk_workload()
+    table = SegmentTable(
+        base=[[0.2, 0.1], [0.1, 0.2]], overhead=[0.0, 0.0]
+    )
+    ts = TaskSet(
+        tasks=(
+            Task(workload=w, period=1.0, name="a"),
+            Task(workload=w, period=1.5, name="b"),
+        )
+    )
+    blocking = [0.05, 0.08]
+    for policy in ("fifo", "edf"):
+        plain = end_to_end_bounds(table, ts, policy)
+        blocked = end_to_end_bounds(table, ts, policy, blocking=blocking)
+        if policy == "fifo":
+            # FIFO never preempts: chunk granularity is unobservable
+            assert blocked == plain
+        else:
+            # EDF pays for the blocking at every visited stage (jitter
+            # chaining may compound it further downstream) — the bound
+            # must grow, monotonically in B
+            for p, b in zip(plain, blocked):
+                assert b > p
+            half = end_to_end_bounds(
+                table, ts, policy, blocking=[x / 2 for x in blocking]
+            )
+            for h, b in zip(half, blocked):
+                assert h <= b + 1e-12
+    with pytest.raises(ValueError, match="blocking"):
+        end_to_end_bounds(table, ts, "edf", blocking=[0.1])
+
+
 @settings(max_examples=40, deadline=None)
 @given(
     st.lists(st.floats(0.01, 0.3), min_size=1, max_size=4),

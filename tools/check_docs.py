@@ -1,0 +1,256 @@
+#!/usr/bin/env python
+"""Docs-freshness gate: fail CI when README/docs reference code that no
+longer exists.
+
+The check is deliberately grep-shaped (no repo imports, stdlib only) so
+it runs before dependencies are installed:
+
+1. Build a **live-symbol index** from every Python file under ``src/``,
+   ``benchmarks/``, ``examples/``, ``tests/`` and ``tools/``: all
+   identifiers that appear in *code* (names, attributes, def/class
+   names, args, keywords, import aliases) plus words inside non-
+   docstring string literals. Comments and docstrings are excluded on
+   purpose — a removed symbol that survives only in prose ("the old
+   ``virtual_period_scale`` quantization") must not count as alive.
+   File/directory names and ``pyproject.toml``/workflow words join the
+   index so module paths and CLI flags resolve.
+2. Scan ``README.md`` and ``docs/*.md``. Every inline code span that
+   *looks like code* (bare identifier, dotted path, repo path) must
+   resolve: repo paths must exist on disk, identifiers and dotted
+   components must be in the live index. Free-form spans (shell
+   one-liners, math, prose) are skipped — this is a freshness check,
+   not a linter.
+3. A small **tombstone list** of symbols past PRs removed is checked
+   against the full doc text: referencing one of them at all (outside
+   an explicit "removed"/"old"/"retired" context sentence) fails.
+
+Run: ``python tools/check_docs.py`` (from the repo root; CI does).
+Exit 0 = fresh; exit 1 prints every stale reference with its file.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+CODE_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+DOC_FILES = ["README.md"] + sorted(
+    os.path.join("docs", f)
+    for f in (
+        os.listdir(os.path.join(ROOT, "docs"))
+        if os.path.isdir(os.path.join(ROOT, "docs"))
+        else []
+    )
+    if f.endswith(".md")
+)
+
+#: path prefixes whose references must exist on disk
+PATH_DIRS = (
+    "src",
+    "docs",
+    "benchmarks",
+    "examples",
+    "tests",
+    "tools",
+    ".github",
+)
+#: generated-output prefixes: referenced paths need not exist in-tree
+GENERATED_DIRS = ("experiments",)
+
+#: symbols deliberately removed from the codebase: docs must not present
+#: them as current API (mentioning them next to removed/old/retired is
+#: fine — that is documentation of history)
+TOMBSTONES = ("virtual_period_scale",)
+_HISTORY_WORDS = ("removed", "old", "retired", "replaced", "gone", "era")
+
+#: words that legitimately appear in backticks without being repo
+#: symbols (tooling, ecosystems, spec words)
+ALLOW = {
+    "pip",
+    "python",
+    "bash",
+    "git",
+    "mermaid",
+    "toml",
+    "yaml",
+    "yml",
+    "json",
+    "jax",
+    "jnp",
+    "numpy",
+    "pallas",
+    "pytest",
+    "hypothesis",
+    "ubuntu",
+    "github",
+    "tpu",
+    "gemm",
+    "fifo",
+    "edf",
+    "wcet",
+    "wcets",
+    "des",
+    "dse",
+    "srt",
+    "llm",
+    "rtos",
+}
+
+_IDENT = re.compile(r"[A-Za-z_]\w{2,}$")
+_DOTTED = re.compile(r"[A-Za-z_][\w]*(\.[A-Za-z_*][\w]*)+$")
+_PATHLIKE = re.compile(r"[\w.\[\]*-]+(/[\w.\[\]*-]+)+/?$")
+_SPAN = re.compile(r"`([^`\n]+)`")
+_WORD = re.compile(r"[A-Za-z_]\w*")
+
+
+def _index_python(path: str, index: set[str]) -> None:
+    with open(path, encoding="utf-8") as f:
+        src = f.read()
+    try:
+        tree = ast.parse(src)
+    except SyntaxError:
+        return
+    docstrings: set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(
+            node,
+            (ast.Module, ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef),
+        ):
+            body = node.body
+            if (
+                body
+                and isinstance(body[0], ast.Expr)
+                and isinstance(body[0].value, ast.Constant)
+                and isinstance(body[0].value.value, str)
+            ):
+                docstrings.add(id(body[0].value))
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            index.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            index.add(node.attr)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            index.add(node.name)
+        elif isinstance(node, ast.arg):
+            index.add(node.arg)
+        elif isinstance(node, ast.keyword) and node.arg:
+            index.add(node.arg)
+        elif isinstance(node, ast.alias):
+            for part in (node.name or "").split("."):
+                index.add(part)
+            if node.asname:
+                index.add(node.asname)
+        elif (
+            isinstance(node, ast.Constant)
+            and isinstance(node.value, str)
+            and id(node) not in docstrings
+        ):
+            index.update(_WORD.findall(node.value))
+
+
+def build_index() -> set[str]:
+    index: set[str] = set(ALLOW)
+    for top in CODE_DIRS:
+        for dirpath, _dirs, files in os.walk(os.path.join(ROOT, top)):
+            for f in files:
+                full = os.path.join(dirpath, f)
+                rel_parts = os.path.relpath(full, ROOT).split(os.sep)
+                for part in rel_parts:
+                    index.add(part)
+                    index.add(part.rsplit(".", 1)[0])
+                if f.endswith(".py"):
+                    _index_python(full, index)
+    # top-level files + misc config words (flags, extras, job names)
+    for f in os.listdir(ROOT):
+        index.add(f)
+        index.add(f.rsplit(".", 1)[0])
+    for extra in ("pyproject.toml", os.path.join(".github", "workflows")):
+        full = os.path.join(ROOT, extra)
+        paths = (
+            [os.path.join(full, f) for f in os.listdir(full)]
+            if os.path.isdir(full)
+            else [full]
+        )
+        for p in paths:
+            if os.path.isfile(p):
+                with open(p, encoding="utf-8") as fh:
+                    index.update(_WORD.findall(fh.read()))
+    return index
+
+
+def check_span(span: str, index: set[str]) -> str | None:
+    """Return a failure reason for one inline code span, or None."""
+    s = span.strip().rstrip("=").removesuffix("()").strip()
+    s = s.lstrip("-")  # CLI flags: --quick -> quick
+    if not s:
+        return None
+    if _PATHLIKE.match(s) and "/" in s:
+        path = s.rstrip("/")
+        if path.startswith(GENERATED_DIRS):
+            return None  # generated artifact; existence not required
+        if path.startswith(PATH_DIRS):
+            if any(c in path for c in "*[]"):
+                return None  # glob: spot-check the literal prefix only
+            if not os.path.exists(os.path.join(ROOT, path)):
+                return f"path does not exist: {s!r}"
+        return None
+    s = s.rstrip("/")
+    if _DOTTED.match(s):
+        missing = [
+            part
+            for part in s.split(".")
+            if len(part) >= 3 and part != "*" and part not in index
+        ]
+        if missing:
+            return f"unknown symbol component(s) {missing} in {s!r}"
+        return None
+    if _IDENT.match(s):
+        if s not in index:
+            return f"unknown symbol: {s!r}"
+        return None
+    return None  # free-form span (command line, math, prose)
+
+
+def check_doc(rel: str, index: set[str]) -> list[str]:
+    with open(os.path.join(ROOT, rel), encoding="utf-8") as f:
+        text = f.read()
+    problems = []
+    for m in _SPAN.finditer(text):
+        reason = check_span(m.group(1), index)
+        if reason:
+            line = text.count("\n", 0, m.start()) + 1
+            problems.append(f"{rel}:{line}: {reason}")
+    for lineno, line in enumerate(text.splitlines(), 1):
+        for dead in TOMBSTONES:
+            if dead in line and not any(
+                w in line.lower() for w in _HISTORY_WORDS
+            ):
+                problems.append(
+                    f"{rel}:{lineno}: references removed symbol "
+                    f"{dead!r} as if current"
+                )
+    return problems
+
+
+def main() -> int:
+    index = build_index()
+    problems: list[str] = []
+    for rel in DOC_FILES:
+        problems.extend(check_doc(rel, index))
+    if problems:
+        print("stale documentation references:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(
+        f"docs fresh: {len(DOC_FILES)} file(s) checked against "
+        f"{len(index)} live symbols"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
