@@ -9,12 +9,21 @@ analytic bound dominates the DES, the DES dominates the executing
 runtime (within the tie-breaking tolerance), and no layer's
 schedulability verdict inverts.
 
-Two CI-enforced invariants ride on top of the sweep:
+Four CI-enforced invariants ride on top of the sweep:
 
 - **tightened tolerance** — the window-boundary DES must hold a
   DES-vs-runtime tolerance *strictly below* the PR-2 values that
   absorbed the idealized-DES deferral gap (asserted against
-  `PR2_TOL_REL` / `PR2_QUANTUM_SLACK`);
+  `PR2_TOL_REL` / `PR2_QUANTUM_SLACK`), and — now that the DES adopts
+  the runtime's simultaneous-event tie-breaking — strictly below the
+  pre-alignment `PR3_QUANTUM_SLACK` too;
+- **sharded cases** — `run_sharded_case` places ``sharded_city``
+  across K pipeline shards (every placement policy) and holds every
+  shard to the full three-layer contract plus a bit-exact per-shard
+  admission verdict;
+- **shedding cases** — `run_shedding_case` drives overdriven
+  scenarios with identical drop-shedding armed in DES and runtime and
+  matches the surviving jobs by release time;
 - **wall-clock case** — `run_wallclock_case` drives the gateway on the
   real clock against the calibrated `CostModel` (one retry absorbs a
   host throttle landing mid-run; two consecutive failures fail CI).
@@ -41,9 +50,12 @@ from repro.conformance import (
     POLICIES,
     PR2_QUANTUM_SLACK,
     PR2_TOL_REL,
+    PR3_QUANTUM_SLACK,
     ConformanceConfig,
     CostModel,
     run_conformance,
+    run_sharded_case,
+    run_shedding_case,
     run_wallclock_case,
 )
 from repro.core.perfmodel.hardware import paper_platform
@@ -67,6 +79,12 @@ def bench_conformance(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
     assert cfg.quantum_slack < PR2_QUANTUM_SLACK, (
         f"quantum_slack {cfg.quantum_slack} regressed to >= "
         f"PR-2's {PR2_QUANTUM_SLACK}"
+    )
+    # ...and, since the DES adopted the runtime's simultaneous-event
+    # tie-breaking, strictly tighter than the pre-alignment slack too
+    assert cfg.quantum_slack < PR3_QUANTUM_SLACK, (
+        f"quantum_slack {cfg.quantum_slack} regressed to >= "
+        f"the pre-tie-break-alignment {PR3_QUANTUM_SLACK}"
     )
     t0 = time.perf_counter()
     report = run_conformance(
@@ -120,6 +138,116 @@ def bench_conformance(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
     }
     print(report.summary())
     return payload, report.ok
+
+
+def bench_sharded(quick: bool, built) -> tuple[dict, bool]:
+    """The sharded conformance cases: `sharded_city` placed across K
+    pipeline shards, every shard held to the full three-layer contract
+    plus the bit-exact per-shard admission check. K=1 anchors the
+    equivalence (it *is* `run_case` plus the admission check)."""
+    cfg = ConformanceConfig(horizon_periods=24.0 if quick else 40.0)
+    placements = (
+        ("least_loaded",)
+        if quick
+        else ("hash_by_tenant", "least_loaded", "slack_aware")
+    )
+    cases = []
+    ok = True
+    for policy in POLICIES:
+        for shards, placement in [(1, "least_loaded")] + [
+            (2, p) for p in placements
+        ]:
+            res = run_sharded_case(
+                built, policy, shards=shards, placement=placement, cfg=cfg
+            )
+            ok = ok and res.ok
+            cases.append(
+                {
+                    "scenario": res.scenario,
+                    "policy": res.policy,
+                    "shards": res.n_shards,
+                    "placement": res.placement,
+                    "assignment": list(res.assignment),
+                    "shard_cases": [
+                        {
+                            "shard_scenario": c.scenario,
+                            "analysis_schedulable": c.analysis_schedulable,
+                            "des_schedulable": c.des_schedulable,
+                            "server_bounded": c.server_bounded,
+                            "violations": [str(v) for v in c.violations],
+                        }
+                        for c in res.cases
+                    ],
+                    "violations": [str(v) for v in res.violations],
+                }
+            )
+            print(
+                f"sharded {res.scenario:12s} {res.policy:4s} "
+                f"K={res.n_shards} {res.placement:14s} "
+                f"assign={res.assignment} viol={len(res.violations)}"
+            )
+    return {"cases": cases}, ok
+
+
+def bench_shedding(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
+    """Overload conformance: overdriven scenarios with the same (drop)
+    shedding machinery armed in DES and runtime — surviving jobs
+    matched by release, verdict chain enforced."""
+    from repro.core.perfmodel.hardware import paper_platform
+    from repro.traffic.scenarios import build, get_scenario
+
+    cfg = ConformanceConfig(horizon_periods=24.0 if quick else 60.0)
+    scenarios = ("overload_2x", "noisy_neighbor")
+    policies = ("reject_newest",) if quick else (
+        "reject_newest",
+        "shed_by_value",
+    )
+    cases = []
+    ok = True
+    for name in scenarios:
+        built = prebuilt.get(name) or build(
+            get_scenario(name), paper_platform(16), beam_width=4
+        )
+        prebuilt[name] = built
+        for shed_policy in policies:
+            res = run_shedding_case(
+                built, "edf", shed_policy=shed_policy, cfg=cfg
+            )
+            ok = ok and res.ok
+            des_shed, srv_shed = res.total_shed()
+            cases.append(
+                {
+                    "scenario": res.scenario,
+                    "policy": res.policy,
+                    "shed_policy": res.shed_policy,
+                    "analysis_schedulable": res.analysis_schedulable,
+                    "des_overloaded": res.des_overloaded,
+                    "server_bounded": res.server_bounded,
+                    "des_shed": des_shed,
+                    "server_shed": srv_shed,
+                    "tasks": [
+                        {
+                            "task": t.task,
+                            "des_completed": t.des_completed,
+                            "des_shed": t.des_shed,
+                            "server_completed": t.server_completed,
+                            "server_shed": t.server_shed,
+                            "matched_jobs": t.matched_jobs,
+                            "des_max_s": t.des_max,
+                            "server_max_s": t.server_max,
+                            "in_flight": t.in_flight,
+                        }
+                        for t in res.tasks
+                    ],
+                    "violations": [str(v) for v in res.violations],
+                }
+            )
+            print(
+                f"shedding {res.scenario:14s} {shed_policy:16s} "
+                f"shed des/srv={des_shed}/{srv_shed} "
+                f"viol={len(res.violations)}"
+            )
+    return {"cases": cases}, ok
 
 
 def bench_calibration(quick: bool, built) -> dict:
@@ -227,16 +355,23 @@ def main() -> None:
 
     quick = "--quick" in sys.argv
     # steady_city's DSE result is shared by the sweep, calibration and
-    # the wall-clock case
+    # the wall-clock case; sharded_city backs the sharded cases
     steady = build(
         get_scenario("steady_city"), paper_platform(16), beam_width=4
     )
+    sharded_city = build(
+        get_scenario("sharded_city"), paper_platform(16), beam_width=4
+    )
     conf, ok = bench_conformance(quick, {"steady_city": steady})
+    sharded, sharded_ok = bench_sharded(quick, sharded_city)
+    shedding, shedding_ok = bench_shedding(quick, {})
     wall, wall_ok = bench_wallclock(quick, steady)
     payload = {
         "bench": "conformance",
         "quick": quick,
         "conformance": conf,
+        "sharded": sharded,
+        "shedding": shedding,
         "wallclock": wall,
         "calibration": bench_calibration(quick, steady),
     }
@@ -245,7 +380,7 @@ def main() -> None:
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"\nwrote {path}")
-    if not ok or not wall_ok:
+    if not ok or not sharded_ok or not shedding_ok or not wall_ok:
         print("CONFORMANCE VIOLATIONS DETECTED", file=sys.stderr)
         sys.exit(1)
 

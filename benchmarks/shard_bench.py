@@ -1,0 +1,242 @@
+"""Multi-gateway sharding benchmark -> BENCH_shard.json.
+
+Scales the ``multi_tenant_rush`` scenario past one pipeline's Eq. 3
+budget by replicating its tenant set (distinct names, re-seeded
+traffic) and serves it on K = 1, 2, 4 `ShardedGateway` shards under
+each placement policy, with the per-tenant token buckets armed and
+disarmed, reporting per (K, placement, ratelimit):
+
+- **admit rate**  — admitted tenants / total tenants: the replicated
+  mix overcommits a single pipeline, so per-shard admission must turn
+  tenants away at small K and admits more as capacity is added;
+- **miss rate**   — deadline misses / completed jobs across shards;
+- **shed fraction** — shedding-policy drops / scheduled releases (the
+  scenario's MMPP camera and Poisson segmentation tenants are
+  overdriven 3x, so backlog-triggered shedding engages on the shards
+  that host them — unless the rate limiter trims them first);
+- **rate-limited fraction** — releases refused by the per-tenant token
+  buckets (value-weighted, armed in front of every shard's admission).
+  The armed rows show the tentpole division of labour: the bucket
+  absorbs the contract violation up front, shedding drops to ~0 and
+  the miss rate falls with it.
+
+Each shard runs deterministically (cost-model `PharosServer` on a
+`VirtualClock`), so every number here is bit-reproducible.
+
+Run: ``PYTHONPATH=src python benchmarks/shard_bench.py [--quick]``
+Writes ``experiments/benchmarks/BENCH_shard.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.core.perfmodel.hardware import paper_platform
+from repro.traffic import RateLimiter, ShardedGateway
+from repro.traffic.scenarios import (
+    BuiltScenario,
+    TrafficScenario,
+    build,
+    get_scenario,
+)
+from repro.traffic.shedding import get_policy
+
+RESULTS_DIR = os.path.join("experiments", "benchmarks")
+
+SCENARIO = "multi_tenant_rush"
+PLACEMENTS = ("hash_by_tenant", "least_loaded", "slack_aware")
+
+
+def replicate(built: BuiltScenario, copies: int) -> BuiltScenario:
+    """``copies`` independent copies of every tenant on the same
+    pipeline design: names suffixed ``#c<i>``, traffic re-seeded per
+    copy (same shapes, fresh randomness), per-task design splits
+    duplicated. The result deliberately overcommits one pipeline —
+    that is the population the sharded admission has to triage."""
+    from dataclasses import replace as dc_replace
+
+    from repro.core.dse.space import DesignPoint
+    from repro.core.rt.task import SegmentTable, Task, TaskSet
+
+    n = len(built.requests)
+    tenants, workloads, tasks, base, reqs, arrs = [], [], [], [], [], []
+    for c in range(copies):
+        for i in range(n):
+            spec = built.scenario.tenants[i]
+            name = spec.name if c == 0 else f"{spec.name}#c{c}"
+            tenants.append(dc_replace(spec, name=name))
+            workloads.append(built.workloads[i])
+            t = built.taskset.tasks[i]
+            tasks.append(
+                Task(
+                    workload=t.workload,
+                    period=t.period,
+                    deadline=t.deadline,
+                    sporadic=t.sporadic,
+                    name=name,
+                )
+            )
+            base.append(list(built.table.base[i]))
+            r = built.requests[i]
+            reqs.append(dc_replace(r, name=name))
+            proc = built.arrivals[i]
+            arrs.append(
+                dc_replace(proc, seed=proc.seed + 7919 * c)
+                if hasattr(proc, "seed")
+                else proc
+            )
+    return BuiltScenario(
+        scenario=TrafficScenario(
+            name=f"{built.scenario.name}x{copies}",
+            description=built.scenario.description,
+            tenants=tuple(tenants),
+            policy=built.scenario.policy,
+        ),
+        workloads=tuple(workloads),
+        taskset=TaskSet(tasks=tuple(tasks)),
+        design=DesignPoint(
+            accs=built.design.accs,
+            splits=tuple(
+                tuple(row[i % len(row)] for i in range(copies * n))
+                for row in built.design.splits
+            ),
+            max_util=built.design.max_util * copies,
+        ),
+        table=SegmentTable(base=base, overhead=list(built.table.overhead)),
+        requests=tuple(reqs),
+        arrivals=tuple(arrs),
+    )
+
+
+def run_point(
+    built: BuiltScenario,
+    shards: int,
+    placement: str,
+    horizon_periods: float,
+    ratelimit: bool,
+) -> dict:
+    gw = ShardedGateway.from_built(
+        built,
+        shards=shards,
+        placement=placement,
+        shedding=get_policy("reject_newest"),
+        make_ratelimit=(
+            (
+                lambda reqs: RateLimiter.for_requests(
+                    reqs, burst_periods=3.0, value_weighted=True
+                )
+            )
+            if ratelimit
+            else None
+        ),
+    )
+    horizon = horizon_periods * max(r.period for r in built.requests)
+    t0 = time.perf_counter()
+    report = gw.run(horizon)
+    elapsed = time.perf_counter() - t0
+    assert gw.verify(), "a shard's cached Eq. 3 verdict diverged"
+
+    tenants = report.tenants
+    admitted = report.admitted_count()
+    scheduled = sum(t.scheduled for t in tenants)
+    shed = report.total_shed()
+    rate_limited = report.total_rate_limited()
+    completed = 0
+    misses = 0
+    for rep in report.reports:
+        if rep is None:
+            continue
+        sr = rep.server_report
+        completed += sr.jobs_completed
+        misses += sum(sr.deadline_misses.values())
+    return {
+        "shards": shards,
+        "placement": placement,
+        "ratelimit": ratelimit,
+        "assignment": list(report.plan.assignment),
+        "tenants": len(tenants),
+        "admitted": admitted,
+        "admit_rate": admitted / len(tenants),
+        "scheduled_releases": scheduled,
+        "completed": completed,
+        "deadline_misses": misses,
+        "miss_rate": (misses / completed) if completed else None,
+        "shed": shed,
+        "shed_fraction": (shed / scheduled) if scheduled else None,
+        "rate_limited": rate_limited,
+        "rate_limited_fraction": (
+            rate_limited / scheduled if scheduled else None
+        ),
+        "wall_seconds": elapsed,
+    }
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    copies = 2
+    ks = (1, 2) if quick else (1, 2, 4)
+    # backlog needs ~25+ periods to trip the shedding monitor even at
+    # 3x overdrive, so quick mode keeps the full horizon and economizes
+    # on the K sweep instead
+    horizon_periods = 40.0
+
+    built = build(
+        get_scenario(SCENARIO), paper_platform(16), beam_width=4
+    )
+    population = replicate(built, copies)
+    points = []
+    for k in ks:
+        for placement in PLACEMENTS:
+            for ratelimit in (False, True):
+                pt = run_point(
+                    population, k, placement, horizon_periods, ratelimit
+                )
+                points.append(pt)
+                nan = float("nan")
+
+                def _f(x):
+                    return nan if x is None else x
+
+                print(
+                    f"K={pt['shards']} {pt['placement']:14s} "
+                    f"rl={'on ' if ratelimit else 'off'} "
+                    f"admit={pt['admit_rate']:.2f} "
+                    f"miss={_f(pt['miss_rate']):.3f} "
+                    f"shed={_f(pt['shed_fraction']):.3f} "
+                    f"ratelimited={_f(pt['rate_limited_fraction']):.3f}"
+                )
+
+    # scale sanity: adding shards must never admit fewer tenants under
+    # the load-aware placements (hash placement is load-blind and gets
+    # no monotonicity promise)
+    for placement in ("least_loaded", "slack_aware"):
+        for ratelimit in (False, True):
+            rates = [
+                p["admit_rate"]
+                for p in points
+                if p["placement"] == placement
+                and p["ratelimit"] == ratelimit
+            ]
+            assert all(
+                b >= a - 1e-12 for a, b in zip(rates, rates[1:])
+            ), f"admit rate regressed with K under {placement}: {rates}"
+
+    payload = {
+        "bench": "shard",
+        "quick": quick,
+        "scenario": SCENARIO,
+        "copies": copies,
+        "horizon_periods": horizon_periods,
+        "points": points,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_shard.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,8 +9,12 @@
   `core.rt` analysis vs the window-boundary `scheduler.des` vs a
   virtual-clock `PharosServer`, enforcing ``analytic bound >= DES >=
   runtime`` and verdict agreement, reporting every `Violation` with
-  its margin; plus `run_wallclock_case`, the calibrated real-clock leg
-  (gateway on `WallClock` vs the measured `CostModel`).
+  its margin; `run_sharded_case` (every shard of a placed tenant set
+  held to the full contract + bit-exact per-shard admission);
+  `run_shedding_case` (overdriven traffic with identical shedding
+  armed in DES and runtime, release-matched surviving jobs); plus
+  `run_wallclock_case`, the calibrated real-clock leg (gateway on
+  `WallClock` vs the measured `CostModel`).
 
 See ``docs/conformance.md`` for the full contract and tolerance model.
 """
@@ -20,9 +24,13 @@ from repro.conformance.harness import (
     POLICIES,
     PR2_QUANTUM_SLACK,
     PR2_TOL_REL,
+    PR3_QUANTUM_SLACK,
     CaseResult,
     ConformanceConfig,
     ConformanceReport,
+    ShardedCaseResult,
+    SheddingCaseResult,
+    SheddingTaskRow,
     TaskConformance,
     Violation,
     WallClockCase,
@@ -30,6 +38,8 @@ from repro.conformance.harness import (
     regulate_trace,
     run_case,
     run_conformance,
+    run_sharded_case,
+    run_shedding_case,
     run_virtual_server,
     run_wallclock_case,
 )
@@ -40,9 +50,13 @@ __all__ = [
     "POLICIES",
     "PR2_QUANTUM_SLACK",
     "PR2_TOL_REL",
+    "PR3_QUANTUM_SLACK",
     "CaseResult",
     "ConformanceConfig",
     "ConformanceReport",
+    "ShardedCaseResult",
+    "SheddingCaseResult",
+    "SheddingTaskRow",
     "TaskConformance",
     "Violation",
     "WallClockCase",
@@ -50,6 +64,8 @@ __all__ = [
     "regulate_trace",
     "run_case",
     "run_conformance",
+    "run_sharded_case",
+    "run_shedding_case",
     "run_virtual_server",
     "run_wallclock_case",
 ]

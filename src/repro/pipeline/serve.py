@@ -230,6 +230,10 @@ class StageRuntime:
 @dataclass
 class ServerReport:
     response_times: dict[str, list[float]]
+    #: release times of the completed jobs, aligned 1:1 with
+    #: ``response_times`` — the join key for matching "the same job"
+    #: across runs whose shed sets differ (conformance under overload)
+    completed_releases: dict[str, list[float]]
     deadline_misses: dict[str, int]
     preemptions: int
     jobs_completed: int
@@ -332,6 +336,7 @@ class PharosServer:
             )
         self.report = ServerReport(
             response_times={t.name: [] for t in tasks},
+            completed_releases={t.name: [] for t in tasks},
             deadline_misses={t.name: 0 for t in tasks},
             preemptions=0,
             jobs_completed=0,
@@ -379,6 +384,7 @@ class PharosServer:
             self.completed_per_task[job.task_id] += 1
             rt = now - job.release
             self.report.response_times[t.name].append(rt)
+            self.report.completed_releases[t.name].append(job.release)
             if (
                 now > job.abs_deadline
                 and job.uid not in self._missed_in_flight

@@ -35,6 +35,22 @@ Design notes
     not inflated per job.
 * Events are versioned per stage (``epoch``): a scheduled completion is
   ignored if the stage has been re-dispatched since it was scheduled.
+* Simultaneous-event ordering mirrors the serving runtime's control
+  flow exactly: at one instant, all due releases fire first (in task
+  order — the gateway submits its merged, ``(time, task)``-sorted
+  schedule before stepping), then stage completions are processed in
+  ascending stage index (``PharosServer.step`` iterates stages in
+  index order). FIFO pools break arrival-time ties by *pool insertion
+  order* (the runtime's deque order), so fan-in stages — two upstream
+  stages forwarding into one downstream stage at the same instant —
+  order jobs identically in both layers.
+* Release-time shedding (`SimConfig.shedding`): the DES can mirror the
+  gateway's backlog-triggered overload policies *inside* the
+  simulation — per-release verdicts (submit / drop / degrade to
+  best-effort) against the simulated backlog with the same hysteresis
+  the `BacklogMonitor` applies, so DES, runtime and analysis can be
+  conformance-checked under overload (see
+  `repro.traffic.shedding.des_release_shedding`).
 * Schedulability detection (paper §5.2): simulate ``horizon`` (default
   >100x max period); declare *non*-schedulable if unfinished jobs
   accumulate or response times grow between the first and second half.
@@ -44,6 +60,13 @@ from __future__ import annotations
 import heapq
 import math
 from dataclasses import dataclass, field
+from typing import Callable
+
+#: release-time shedding verdicts (string-identical to the gateway's
+#: `repro.traffic.shedding` constants so adapters need no translation)
+SHED_SUBMIT = "submit"
+SHED_DROP = "drop"
+SHED_BEST_EFFORT = "best_effort"
 
 
 @dataclass(frozen=True)
@@ -138,6 +161,41 @@ class StageOverhead:
 
 
 @dataclass
+class ReleaseShedding:
+    """Release-time overload shedding against *simulated* backlog.
+
+    Mirrors the gateway's `BacklogMonitor` + `SheddingPolicy` pair
+    inside the DES: at every release, each task's pending-job count is
+    checked against its ``limits[i]`` engage threshold with the same
+    hysteresis (engage above the limit, disengage at half), and while
+    any task is engaged ``classify(task_id, overloaded)`` decides the
+    releasing job's fate — `SHED_SUBMIT`, `SHED_DROP` (never enters the
+    system) or `SHED_BEST_EFFORT` (enters with an infinite absolute
+    deadline: EDF orders it after every guaranteed job).
+
+    The DES stays dependency-free: ``classify`` is an opaque callable;
+    `repro.traffic.shedding.des_release_shedding` builds one from a
+    real `SheddingPolicy` + `AdmissionController` + request contracts,
+    with ``limits`` derived from the analysis response bounds exactly
+    like `TrafficGateway.open` derives the gateway's.
+    """
+
+    limits: tuple[int, ...]
+    classify: Callable[[int, tuple[int, ...]], str]
+    engaged: dict[int, bool] = field(default_factory=dict)
+
+    def observe(self, task_idx: int, pending: int) -> bool:
+        limit = self.limits[task_idx]
+        on = self.engaged.get(task_idx, False)
+        if not on and pending > limit:
+            on = True
+        elif on and pending <= max(1, limit // 2):
+            on = False
+        self.engaged[task_idx] = on
+        return on
+
+
+@dataclass
 class SimConfig:
     policy: str = "edf"  # "fifo" | "fifo_no_polling" | "edf"
     horizon: float = 0.0  # 0 -> 120 x max period
@@ -157,6 +215,8 @@ class SimConfig:
     #: while true divergence (u > 1) grows the response linearly in the
     #: horizon (far past 2x between halves).
     growth_tol: float = 2.0
+    #: release-time overload shedding (None -> every release enters)
+    shedding: ReleaseShedding | None = None
 
 
 @dataclass
@@ -170,6 +230,15 @@ class SimResult:
     jobs_completed: int
     overload_detected: bool
     growth_detected: bool
+    #: release times of the completed jobs, aligned 1:1 with
+    #: ``response_times`` — the join key for matching "the same job"
+    #: across runs whose shed sets differ (conformance under overload)
+    completed_releases: list[list[float]] = field(default_factory=list)
+    #: release-time shedding accounting (all zero without
+    #: `SimConfig.shedding`)
+    jobs_shed: int = 0
+    shed_per_task: list[int] = field(default_factory=list)
+    degraded_per_task: list[int] = field(default_factory=list)
 
     def max_response_overall(self) -> float:
         vals = [m for m in self.max_response if m > 0.0]
@@ -185,6 +254,7 @@ class _Job:
         "seg_idx",
         "remaining",
         "arrive_stage_t",
+        "enter_seq",
         "stage_done",
         "chunk_i",
         "carry",
@@ -198,6 +268,7 @@ class _Job:
         self.seg_idx = 0  # next segment to execute
         self.remaining = 0.0  # remaining service of the segment in flight
         self.arrive_stage_t = release
+        self.enter_seq = 0  # pool-insertion order (FIFO tie-breaking)
         # per-segment completion flags, for the polling variants
         self.stage_done: list[bool] = []
         # window-boundary (limited-preemption) bookkeeping
@@ -218,7 +289,9 @@ class _Stage:
 
 
 def _job_key_fifo(j: _Job):
-    return (j.arrive_stage_t, j.release, j.task_id, j.idx)
+    # pool-insertion order breaks arrival-time ties — the runtime's
+    # FIFO deque order (fan-in forwards land in upstream-stage order)
+    return (j.arrive_stage_t, j.enter_seq)
 
 
 def _job_key_edf(j: _Job):
@@ -240,13 +313,20 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
     key = _job_key_edf if preemptive else _job_key_fifo
 
     stages = [_Stage(k) for k in range(n_stages)]
-    # Event heap: (time, seq, kind, data). kinds: 0=release, 1=complete.
-    evq: list[tuple[float, int, int, tuple]] = []
+    # Event heap: (time, kind, prio, seq, data). kinds: 0=release,
+    # 1=complete. Simultaneous events mirror the runtime's control
+    # flow: releases before completions (the serving loop submits due
+    # arrivals before stepping), releases in task order (the gateway's
+    # merged schedule), completions in ascending stage index
+    # (`PharosServer.step` iterates stages in index order). ``prio`` is
+    # the task id for releases and the stage index for completions —
+    # data[0] either way.
+    evq: list[tuple[float, int, int, int, tuple]] = []
     seq = 0
 
     def push(t: float, kind: int, data: tuple) -> None:
         nonlocal seq
-        heapq.heappush(evq, (t, seq, kind, data))
+        heapq.heappush(evq, (t, kind, data[0], seq, data))
         seq += 1
 
     # Per-task bookkeeping for the FIFO gating variants and metrics.
@@ -257,10 +337,15 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
     # per (task, job_idx) segment-completion map for "with polling" gating
     seg_complete: dict[tuple[int, int], list[bool]] = {}
     pending_count = [0] * n_tasks
+    completed_releases: list[list[float]] = [[] for _ in range(n_tasks)]
     preemptions = 0
     jobs_released = 0
     jobs_completed = 0
+    jobs_shed = 0
+    shed_per_task = [0] * n_tasks
+    degraded_per_task = [0] * n_tasks
     overload = False
+    enter_counter = 0
 
     # Queue of jobs waiting for their same-task gating condition, per task.
     gated: list[list[_Job]] = [[] for _ in range(n_tasks)]
@@ -282,16 +367,27 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
                     return False
             return True
         else:
-            # with polling (and EDF): only the *corresponding* segment of
-            # the previous job must be done
-            prev = seg_complete.get((t_id, j_idx - 1))
-            if prev is None:
-                return completed_upto[t_id] >= j_idx - 1
-            return prev[s_idx]
+            # With polling (and EDF) the same-task precedence —
+            # job j's segment must not *run* before job j-1's
+            # corresponding segment is done — is already enforced by
+            # the pool ordering itself: identical visit sequences mean
+            # j can never overtake j-1 at any stage (FIFO keeps j-1
+            # ahead in insertion order; EDF gives it the earlier
+            # deadline), so j reaches the server only after j-1's
+            # segment completed. Enqueue immediately — the serving
+            # runtime does exactly this, and holding j back to the
+            # gate-open instant would hand its queue position to
+            # third-party jobs arriving in between (the fan-in
+            # tie-breaking drift the conformance harness used to
+            # absorb in `quantum_slack`).
+            return True
 
     def enter_stage(job: _Job, now: float) -> None:
+        nonlocal enter_counter
         stage_k = tasks[job.task_id].segments[job.seg_idx][0]
         job.arrive_stage_t = now
+        enter_counter += 1
+        job.enter_seq = enter_counter
         job.remaining = tasks[job.task_id].segments[job.seg_idx][1]
         job.chunk_i = 0
         job.carry = 0.0
@@ -312,6 +408,15 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
             else:
                 still.append(job)
         gated[t_id] = still
+
+    def advance_completed(t_id: int) -> None:
+        """Advance the contiguous fully-completed job prefix."""
+        while True:
+            flags = seg_complete.get((t_id, completed_upto[t_id] + 1))
+            if flags is None or not all(flags):
+                break
+            completed_upto[t_id] += 1
+            seg_complete.pop((t_id, completed_upto[t_id] - 1), None)
 
     def start_chunk(st: _Stage, job: _Job, now: float) -> None:
         """Window mode: occupy the stage with ``job``'s next
@@ -409,15 +514,10 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
         if job.seg_idx >= len(tasks[t_id].segments):
             # job fully done
             response[t_id].append(now - job.release)
+            completed_releases[t_id].append(job.release)
             pending_count[t_id] -= 1
             jobs_completed += 1
-            # advance the contiguous fully-completed prefix
-            while True:
-                flags = seg_complete.get((t_id, completed_upto[t_id] + 1))
-                if flags is None or not all(flags):
-                    break
-                completed_upto[t_id] += 1
-                seg_complete.pop((t_id, completed_upto[t_id] - 1), None)
+            advance_completed(t_id)
         else:
             try_admit(job, now)
         recheck_gated(t_id, now)
@@ -434,7 +534,7 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
 
     growth = False
     while evq:
-        now, _s, kind, data = heapq.heappop(evq)
+        now, kind, _prio, _s, data = heapq.heappop(evq)
         if now > horizon or overload:
             break
         if kind == 0:
@@ -442,18 +542,48 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
             t = tasks[t_id]
             j_idx = release_counts[t_id]
             release_counts[t_id] += 1
-            jobs_released += 1
-            job = _Job(t_id, j_idx, now, now + t.deadline)
-            seg_complete[(t_id, j_idx)] = [False] * len(t.segments)
-            pending_count[t_id] += 1
-            if pending_count[t_id] > cfg.backlog_limit:
-                overload = True
-            try_admit(job, now)
+            # the arrival stream continues whatever this release's fate
             if t.arrivals is not None:
                 if j_idx + 1 < len(t.arrivals):
                     push(t.arrivals[j_idx + 1], 0, (t_id,))
             else:
                 push(now + t.period, 0, (t_id,))
+            verdict = SHED_SUBMIT
+            if cfg.shedding is not None:
+                # refresh hysteresis for every task (pending counts
+                # change between releases as jobs complete), exactly
+                # like the gateway's per-release monitor sweep
+                for i2 in range(n_tasks):
+                    cfg.shedding.observe(i2, pending_count[i2])
+                overloaded = tuple(
+                    i2
+                    for i2 in range(n_tasks)
+                    if cfg.shedding.engaged.get(i2)
+                )
+                if overloaded:
+                    verdict = cfg.shedding.classify(t_id, overloaded)
+            if verdict == SHED_DROP:
+                jobs_shed += 1
+                shed_per_task[t_id] += 1
+                # a shed job must not deadlock the same-task gating
+                # chain: mark its segments trivially complete so the
+                # next job's gate sees through it
+                seg_complete[(t_id, j_idx)] = [True] * len(t.segments)
+                advance_completed(t_id)
+                recheck_gated(t_id, now)
+                continue
+            jobs_released += 1
+            deadline = (
+                math.inf if verdict == SHED_BEST_EFFORT else t.deadline
+            )
+            if verdict == SHED_BEST_EFFORT:
+                degraded_per_task[t_id] += 1
+            job = _Job(t_id, j_idx, now, now + deadline)
+            seg_complete[(t_id, j_idx)] = [False] * len(t.segments)
+            pending_count[t_id] += 1
+            if pending_count[t_id] > cfg.backlog_limit:
+                overload = True
+            try_admit(job, now)
         else:
             st_idx, epoch = data
             st = stages[st_idx]
@@ -531,7 +661,7 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
                 and max2 > max1 * cfg.growth_tol + 1e-12
             ):
                 growth = True
-        elif release_counts[t_id] >= 8:
+        elif release_counts[t_id] - shed_per_task[t_id] >= 8:
             # Few completions despite many releases is only divergence
             # when completions actually *lag* the releases: a finite
             # trace whose last jobs are simply cut off by the horizon
@@ -541,8 +671,10 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
             # this heuristic deliberately errs schedulable there and
             # leaves those to the primary detectors (backlog_limit
             # overload and, on longer traces, the two-halves test).
-            lag = release_counts[t_id] - len(r)
-            if lag >= 8 and 2 * lag > release_counts[t_id]:
+            # Shed jobs never entered the system, so they are not lag.
+            entered = release_counts[t_id] - shed_per_task[t_id]
+            lag = entered - len(r)
+            if lag >= 8 and 2 * lag > entered:
                 growth = True  # most released jobs never finished
     if (
         growth
@@ -561,6 +693,10 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
         jobs_completed=jobs_completed,
         overload_detected=overload,
         growth_detected=growth,
+        completed_releases=completed_releases,
+        jobs_shed=jobs_shed,
+        shed_per_task=shed_per_task,
+        degraded_per_task=degraded_per_task,
     )
 
 
@@ -574,6 +710,7 @@ def simulate_taskset(
     arrivals: list[list[float] | None] | None = None,
     chunk_schedules: list[dict[int, tuple[float, ...]]] | None = None,
     preemption: str = "instant",
+    shedding: ReleaseShedding | None = None,
 ) -> SimResult:
     """Bridge from `SegmentTable`/`TaskSet` (core.rt) to the simulator.
 
@@ -635,5 +772,6 @@ def simulate_taskset(
         horizon=horizon,
         overheads=overheads,
         preemption=preemption,
+        shedding=shedding,
     )
     return simulate(tasks, cfg)

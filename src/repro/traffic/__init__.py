@@ -10,9 +10,15 @@ an *online* layer in front of the serving runtime:
   plus headroom/sensitivity reports;
 - `shedding`  — overload policies (reject-newest, shed-by-value,
   degrade-to-best-effort) + the `BacklogMonitor` that engages them when
-  observed backlog contradicts the analysis;
+  observed backlog contradicts the analysis, and the
+  `des_release_shedding` adapter pushing the same decisions into the
+  DES;
+- `ratelimit` — per-tenant token buckets (`RateLimiter`) trimming live
+  traffic back to the provisioned contract in front of admission;
 - `gateway`   — `TrafficGateway`: the admission-controlled front door
   releasing `ArrivalProcess` traffic into a `PharosServer`;
+- `shard`     — `ShardedGateway`: K gateway replicas of one pipeline
+  with pluggable tenant placement (hash / least-loaded / slack-aware);
 - `scenarios` — named traffic mixes (smart-transportation style) built
   from the paper workloads and the LM `configs/`;
 - `clock`     — `WallClock` / deterministic `VirtualClock` shared by
@@ -35,6 +41,7 @@ from repro.traffic.arrival import (
 )
 from repro.traffic.clock import VirtualClock, WallClock
 from repro.traffic.gateway import GatewayReport, TrafficGateway
+from repro.traffic.ratelimit import RateLimiter, TokenBucket
 from repro.traffic.scenarios import (
     ArrivalSpec,
     BuiltScenario,
@@ -45,11 +52,23 @@ from repro.traffic.scenarios import (
     list_scenarios,
     register,
 )
+from repro.traffic.shard import (
+    HashByTenant,
+    LeastLoaded,
+    ShardedGateway,
+    ShardedReport,
+    ShardPlan,
+    SlackAware,
+    built_gateway,
+    get_placement,
+    plan_shards,
+)
 from repro.traffic.shedding import (
     BacklogMonitor,
     DegradeToBestEffort,
     RejectNewest,
     ShedByValue,
+    des_release_shedding,
     get_policy,
 )
 
@@ -81,5 +100,17 @@ __all__ = [
     "RejectNewest",
     "ShedByValue",
     "DegradeToBestEffort",
+    "des_release_shedding",
     "get_policy",
+    "RateLimiter",
+    "TokenBucket",
+    "ShardedGateway",
+    "ShardedReport",
+    "ShardPlan",
+    "HashByTenant",
+    "LeastLoaded",
+    "SlackAware",
+    "built_gateway",
+    "get_placement",
+    "plan_shards",
 ]

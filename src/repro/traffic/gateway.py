@@ -8,7 +8,10 @@ contract) and an `ArrivalProcess` (its actual traffic). At ``run``:
 1. every tenant is submitted to the `AdmissionController` — rejected
    tenants release nothing (their traffic is refused up front);
 2. admitted tenants' arrival traces are merged into one release
-   schedule; each due release is checked against the `BacklogMonitor`
+   schedule; each due release first spends a token of its tenant's
+   `RateLimiter` bucket (if one is armed — a dry bucket refuses the
+   release as ``rate_limited``, trimming live traffic back to the
+   provisioned contract), is then checked against the `BacklogMonitor`
    and, while observed backlog contradicts the analysis, routed through
    the `SheddingPolicy` (submit / drop / degrade-to-best-effort);
 3. the server is stepped between releases. With a `VirtualClock` the
@@ -49,6 +52,7 @@ from repro.traffic.admission import (
 )
 from repro.traffic.arrival import ArrivalProcess, merge_arrivals
 from repro.traffic.clock import WallClock
+from repro.traffic.ratelimit import RateLimiter
 from repro.traffic.shedding import (
     BEST_EFFORT,
     DROP,
@@ -64,7 +68,8 @@ class TenantStats:
     scheduled: int = 0  # arrivals inside the horizon
     released: int = 0  # submitted with a guarantee
     degraded: int = 0  # submitted best-effort
-    shed: int = 0  # dropped
+    shed: int = 0  # dropped by the shedding policy
+    rate_limited: int = 0  # refused by a dry token bucket
     release_jitter: list[float] = field(default_factory=list)
 
     def max_jitter(self) -> float:
@@ -86,6 +91,9 @@ class GatewayReport:
     def total_shed(self) -> int:
         return sum(t.shed for t in self.tenants)
 
+    def total_rate_limited(self) -> int:
+        return sum(t.rate_limited for t in self.tenants)
+
     def total_released(self) -> int:
         return sum(t.released + t.degraded for t in self.tenants)
 
@@ -100,18 +108,22 @@ class TrafficGateway:
         *,
         shedding: SheddingPolicy | None = None,
         monitor: BacklogMonitor | None = None,
+        ratelimit: RateLimiter | None = None,
         clock=None,
     ):
         if not (len(server.tasks) == len(requests) == len(arrivals)):
             raise ValueError(
                 "server tasks / requests / arrivals must align 1:1"
             )
+        if ratelimit is not None and len(ratelimit) != len(requests):
+            raise ValueError("rate limiter buckets must align 1:1 with tenants")
         self.server = server
         self.admission = admission
         self.requests = list(requests)
         self.arrivals = list(arrivals)
         self.shedding = shedding
         self.monitor = monitor or BacklogMonitor()
+        self.ratelimit = ratelimit
         self.clock = clock or WallClock()
         self._admitted_idx: list[int] | None = None
         self._limits: list[int] = []
@@ -230,6 +242,15 @@ class TrafficGateway:
         jitter: float,
         stats: list[TenantStats],
     ) -> None:
+        # the token bucket polices the traffic contract before anything
+        # else sees the release: a dry bucket refuses it outright
+        # (lazily refilled from the nominal release timestamp, so
+        # virtual and wall runs decide identically)
+        if self.ratelimit is not None and not self.ratelimit.allow(
+            i, release_time
+        ):
+            stats[i].rate_limited += 1
+            return
         # refresh overload state for every admitted tenant (pending
         # counts change between releases as jobs complete)
         for j in self._admitted_idx:

@@ -1,0 +1,151 @@
+"""Per-tenant token/credit rate limiting in front of admission.
+
+Admission (`AdmissionController`) polices the *contract*: a tenant is
+admitted iff its provisioned rate fits Eq. 3. The rate limiter polices
+the *traffic*: even an admitted tenant only releases jobs while its
+token bucket has credit, so a tenant whose live traffic exceeds its
+provisioned rate is trimmed back to the contract at the front door —
+before the backlog monitor ever has to engage shedding. Shedding stays
+the safety net for modeled-vs-real WCET error; the bucket handles the
+much more common "client sends too fast" overload.
+
+Model: one `TokenBucket` per tenant — capacity ``burst`` tokens,
+refilled continuously at ``rate`` tokens/second, one token per release.
+Both knobs come from the tenant's `TaskRequest` via
+`RateLimiter.for_requests`: the sustained rate is the provisioned rate
+(``rate_scale / period``) and the burst is ``burst_periods`` worth of
+it. With ``value_weighted=True`` the tenant's shed-value relative to
+the mix mean shapes the bucket — the token-bucket analogue of
+`ShedByValue`'s ordering — but only ever *downward* on the sustained
+rate: a below-mean-value tenant refills slower than its contract,
+while an above-mean tenant keeps the contract rate (never more — the
+sustained rate is capped at the provisioned rate, so rate-limited
+traffic always satisfies the admission premise) and earns its
+advantage as extra burst capacity instead.
+
+Everything is deterministic: buckets are refilled lazily from the
+release timestamps themselves (no wall clock), so a virtual-time
+gateway run is bit-reproducible and a sharded gateway with one shard
+reproduces the unsharded decisions exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+from repro.traffic.admission import TaskRequest
+
+
+@dataclass
+class TokenBucket:
+    """Classic leaky/token bucket: ``burst`` capacity, ``rate``/s refill.
+
+    Starts full (a tenant may burst immediately after admission).
+    ``take`` is lazy-refill: credit accrued since the last call is added
+    first, then one token is consumed if available. Timestamps must be
+    non-decreasing per bucket (the gateway releases in time order);
+    a stale timestamp refills nothing rather than going negative.
+    """
+
+    rate: float
+    burst: float
+    tokens: float = -1.0  # sentinel: initialize to full burst
+    last: float = 0.0
+    granted: int = 0
+    denied: int = 0
+
+    def __post_init__(self) -> None:
+        if self.rate <= 0.0 or self.burst < 1.0:
+            raise ValueError("need rate > 0 and burst >= 1 token")
+        if self.tokens < 0.0:
+            self.tokens = float(self.burst)
+
+    def peek(self, now: float) -> float:
+        """Credit available at ``now`` (no state change)."""
+        return min(
+            self.burst, self.tokens + max(0.0, now - self.last) * self.rate
+        )
+
+    def take(self, now: float) -> bool:
+        self.tokens = self.peek(now)
+        self.last = max(self.last, now)
+        if self.tokens >= 1.0:
+            self.tokens -= 1.0
+            self.granted += 1
+            return True
+        self.denied += 1
+        return False
+
+
+class RateLimiter:
+    """Per-tenant bucket array the `TrafficGateway` consults per release.
+
+    Index ``i`` addresses the gateway's tenant ``i`` (the same 1:1
+    alignment the gateway keeps between requests, arrivals and server
+    tasks). ``allow(i, now)`` spends one token of tenant ``i``'s bucket;
+    a ``False`` verdict means the release is refused up front (counted
+    as ``rate_limited`` in `TenantStats`, never submitted, never shed).
+    """
+
+    def __init__(self, buckets: Sequence[TokenBucket]):
+        if not buckets:
+            raise ValueError("need at least one bucket")
+        self.buckets = list(buckets)
+
+    @classmethod
+    def for_requests(
+        cls,
+        requests: Sequence[TaskRequest],
+        *,
+        rate_scale: float = 1.0,
+        burst_periods: float = 2.0,
+        value_weighted: bool = False,
+    ) -> "RateLimiter":
+        """Provision one bucket per tenant from its analysis contract.
+
+        Tenant i sustains ``rate_scale * min(w_i, 1) / period_i``
+        jobs/s with a burst of ``max(1, burst_periods * w_i)`` jobs,
+        where ``w_i`` is 1 or, when ``value_weighted``, the tenant's
+        value over the mix mean value. The rate weight is capped at 1:
+        value can only *slow* a tenant below its contract (and grow its
+        burst), never sustain it above the provisioned rate the
+        admission analysis accounted for.
+        """
+        if rate_scale <= 0.0 or burst_periods <= 0.0:
+            raise ValueError("rate_scale and burst_periods must be positive")
+        if value_weighted:
+            mean_v = sum(r.value for r in requests) / len(requests)
+            # floor the weight: value 0 is a legal contract (ShedByValue
+            # treats it as shed-first), so it must yield a slow bucket,
+            # not a zero-rate one the TokenBucket constructor rejects
+            weights = [
+                max(r.value / mean_v, 0.01) if mean_v > 0 else 1.0
+                for r in requests
+            ]
+        else:
+            weights = [1.0] * len(requests)
+        return cls(
+            [
+                TokenBucket(
+                    rate=rate_scale * min(w, 1.0) / r.period,
+                    burst=max(1.0, burst_periods * w),
+                )
+                for r, w in zip(requests, weights)
+            ]
+        )
+
+    def __len__(self) -> int:
+        return len(self.buckets)
+
+    def allow(self, i: int, now: float) -> bool:
+        return self.buckets[i].take(now)
+
+    def tokens(self, i: int, now: float) -> float:
+        return self.buckets[i].peek(now)
+
+    def totals(self) -> tuple[int, int]:
+        """(granted, denied) across every tenant."""
+        return (
+            sum(b.granted for b in self.buckets),
+            sum(b.denied for b in self.buckets),
+        )

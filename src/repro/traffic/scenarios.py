@@ -175,6 +175,52 @@ class BuiltScenario:
         """Per-task explicit release times for `simulate_taskset`."""
         return [p.arrivals(horizon) for p in self.arrivals]
 
+    def subset(self, indices, *, name: str | None = None) -> "BuiltScenario":
+        """Restrict this built scenario to a tenant subset (in the given
+        order) on the *same* pipeline design — the per-shard view a
+        `ShardedGateway` places tenants into. Everything tenant-indexed
+        is subset together (tenants, workloads, taskset, table rows,
+        requests and the already-seeded arrival processes — traffic is
+        preserved verbatim, not re-seeded); the design keeps its
+        accelerators and stage count with its per-task layer splits
+        restricted, so `serve_bundle` and the conformance `CostModel`
+        work on the subset unchanged. The identity subset reproduces
+        this scenario bit-exactly — the K=1 sharding equivalence.
+        """
+        from repro.core.dse.space import DesignPoint
+        from repro.core.rt.schedulability import max_utilization
+
+        idx = list(indices)
+        if not idx:
+            raise ValueError("subset needs at least one tenant")
+        sub_table = SegmentTable(
+            base=[list(self.table.base[i]) for i in idx],
+            overhead=list(self.table.overhead),
+        )
+        sub_taskset = TaskSet(tasks=tuple(self.taskset.tasks[i] for i in idx))
+        design = DesignPoint(
+            accs=self.design.accs,
+            splits=tuple(
+                tuple(row[i] for i in idx) for row in self.design.splits
+            ),
+            max_util=max_utilization(sub_table, sub_taskset, False),
+        )
+        scen = TrafficScenario(
+            name=name or self.scenario.name,
+            description=self.scenario.description,
+            tenants=tuple(self.scenario.tenants[i] for i in idx),
+            policy=self.scenario.policy,
+        )
+        return BuiltScenario(
+            scenario=scen,
+            workloads=tuple(self.workloads[i] for i in idx),
+            taskset=sub_taskset,
+            design=design,
+            table=sub_table,
+            requests=tuple(self.requests[i] for i in idx),
+            arrivals=tuple(self.arrivals[i] for i in idx),
+        )
+
     def serve_bundle(
         self,
         *,
@@ -429,6 +475,92 @@ register(
                 batch=8,
                 seq=2048,
             ),
+        ),
+    )
+)
+
+register(
+    TrafficScenario(
+        name="multi_tenant_rush",
+        description=(
+            "Four-tenant peak mix for the multi-gateway scale layer: "
+            "sporadic LiDAR, an MMPP camera stream overdriven past its "
+            "burst provisioning, Poisson segmentation and a periodic "
+            "backbone — the shard/ratelimit/shedding benchmark scenario"
+        ),
+        tenants=(
+            TenantSpec(
+                "paper:pointnet",
+                ratio=0.4,
+                arrival=ArrivalSpec(kind="sporadic", jitter=0.25),
+                value=3.0,
+            ),
+            TenantSpec(
+                "paper:deit_t",
+                ratio=0.12,
+                arrival=ArrivalSpec(
+                    kind="mmpp",
+                    calm_factor=0.5,
+                    burst_factor=3.0,
+                    dwells=(30.0, 10.0),
+                ),
+                value=1.0,
+                overdrive=3.0,
+            ),
+            TenantSpec(
+                "paper:resmlp",
+                ratio=0.25,
+                arrival=ArrivalSpec(kind="poisson", provision_factor=1.5),
+                value=2.0,
+                overdrive=3.0,
+            ),
+            TenantSpec("paper:mlp_mixer", ratio=0.3, value=1.5),
+        ),
+    )
+)
+
+register(
+    TrafficScenario(
+        name="noisy_neighbor",
+        description=(
+            "Two well-behaved safety tenants sharing the pipeline with "
+            "a low-value Poisson tenant sending 5x its provisioned "
+            "rate — the per-tenant rate-limiting and DES-level "
+            "shedding stress scenario"
+        ),
+        tenants=(
+            TenantSpec("paper:pointnet", ratio=0.7, value=4.0),
+            TenantSpec(
+                "paper:resmlp",
+                ratio=0.5,
+                arrival=ArrivalSpec(kind="sporadic", jitter=0.2),
+                value=2.0,
+            ),
+            TenantSpec(
+                "paper:deit_t",
+                ratio=0.25,
+                arrival=ArrivalSpec(kind="poisson", provision_factor=1.3),
+                value=0.4,
+                overdrive=5.0,
+            ),
+        ),
+    )
+)
+
+register(
+    TrafficScenario(
+        name="sharded_city",
+        description=(
+            "Four periodic city tenants, comfortably provisioned and "
+            "contract-honouring — the sharded-gateway conformance "
+            "scenario (placement policies partition it across K "
+            "pipeline shards)"
+        ),
+        tenants=(
+            TenantSpec("paper:pointnet", ratio=0.45, value=3.0),
+            TenantSpec("paper:mlp_mixer", ratio=0.35, value=1.0),
+            TenantSpec("paper:resmlp", ratio=0.3, value=2.0),
+            TenantSpec("paper:deit_t", ratio=0.25, value=1.5),
         ),
     )
 )

@@ -1,0 +1,421 @@
+"""Multi-gateway sharding: one pipeline design, K gateway shards.
+
+One `TrafficGateway` fronts one `PharosServer` — one copy of the
+pipeline. To scale a deployment past a single pipeline's Eq. 3 budget,
+the `ShardedGateway` runs **K replicas of the same stage set**, each
+with its own server, admission controller, backlog monitor and
+(optional) rate limiter, and *places* every tenant onto exactly one
+shard with a pluggable `PlacementPolicy`:
+
+- `HashByTenant`   — stateless: ``crc32(name) % K``. No coordination,
+  stable under tenant churn, blind to load.
+- `LeastLoaded`    — greedy: each tenant (in request order) goes to the
+  shard whose post-placement **max stage utilization** is smallest —
+  the classic balls-into-bins balancer on the Eq. 2 vectors.
+- `SlackAware`     — greedy on `stage_slacks`: the tenant goes to the
+  shard that keeps the most slack on the stages the tenant *actually
+  uses* (its active segments), ignoring stages it never touches — the
+  placement analogue of the admission layer's headroom report.
+
+Each shard then re-runs the O(stages) Eq. 3 admission over its own
+tenant subset, so every shard's schedulability verdict is **bit-exact**
+against a full `srt_schedulable` re-analysis of that subset (the same
+`AdmissionController.verify` contract the unsharded gateway holds), and
+with ``K == 1`` the sharded run reproduces the unsharded
+`TrafficGateway` report bit-for-bit — placement degenerates to the
+identity and the single shard is built through the very same
+constructor path (`built_gateway`).
+
+Shards share no clock and no state: `run` drives each shard's gateway
+on its own `VirtualClock` to the same horizon, which is exactly the
+deployment semantics (independent replicas) and keeps every run
+deterministic.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from typing import Protocol, Sequence
+
+from repro.core.rt.schedulability import stage_slacks
+from repro.core.rt.task import LayerDesc, SegmentTable, Task, TaskSet, Workload
+from repro.traffic.admission import AdmissionController, TaskRequest
+from repro.traffic.gateway import GatewayReport, TenantStats, TrafficGateway
+from repro.traffic.ratelimit import RateLimiter
+from repro.traffic.shedding import BacklogMonitor, SheddingPolicy
+
+
+# ---------------------------------------------------------------------------
+# placement policies
+# ---------------------------------------------------------------------------
+class PlacementPolicy(Protocol):
+    name: str
+
+    def place(
+        self,
+        requests: Sequence[TaskRequest],
+        n_shards: int,
+        *,
+        overheads: Sequence[float],
+        preemptive: bool,
+    ) -> list[int]:
+        """Tenant index -> shard index assignment."""
+        ...
+
+
+def _util_vector(req, overheads, preemptive):
+    return req.utilization(tuple(overheads), preemptive)
+
+
+@dataclass(frozen=True)
+class HashByTenant:
+    """Stateless ``crc32(tenant name) % K`` placement."""
+
+    name: str = "hash_by_tenant"
+
+    def place(self, requests, n_shards, *, overheads, preemptive):
+        return [
+            zlib.crc32(r.name.encode()) % n_shards for r in requests
+        ]
+
+
+@dataclass(frozen=True)
+class LeastLoaded:
+    """Greedy min-max-utilization placement on the Eq. 2 vectors."""
+
+    name: str = "least_loaded"
+
+    def place(self, requests, n_shards, *, overheads, preemptive):
+        loads = [[0.0] * len(overheads) for _ in range(n_shards)]
+        out = []
+        for r in requests:
+            du = _util_vector(r, overheads, preemptive)
+            best = min(
+                range(n_shards),
+                key=lambda s: (
+                    max(u + d for u, d in zip(loads[s], du)),
+                    s,
+                ),
+            )
+            out.append(best)
+            loads[best] = [u + d for u, d in zip(loads[best], du)]
+        return out
+
+
+def _placement_analysis_view(reqs, overheads):
+    """(SegmentTable, TaskSet) of already-placed requests for
+    `stage_slacks` — the same materialization `AdmissionController.
+    to_analysis` builds."""
+    table = SegmentTable(
+        base=[list(r.base) for r in reqs], overhead=list(overheads)
+    )
+    w = Workload("placement", (LayerDesc("seg", 1, 1, 1),))
+    ts = TaskSet(
+        tasks=tuple(
+            Task(workload=w, period=r.period, deadline=r.deadline, name=r.name)
+            for r in reqs
+        )
+    )
+    return table, ts
+
+
+@dataclass(frozen=True)
+class SlackAware:
+    """Greedy placement maximizing the post-placement `stage_slacks`
+    minimum over the tenant's *active* stages (stages it never touches
+    do not vote)."""
+
+    name: str = "slack_aware"
+
+    def place(self, requests, n_shards, *, overheads, preemptive):
+        placed: list[list[TaskRequest]] = [[] for _ in range(n_shards)]
+        out = []
+        for r in requests:
+            active = [k for k, b in enumerate(r.base) if b > 0.0]
+
+            def score(s: int) -> tuple[float, int]:
+                table, ts = _placement_analysis_view(
+                    placed[s] + [r], overheads
+                )
+                slacks = stage_slacks(table, ts, preemptive)
+                return (min(slacks[k] for k in active), -s)
+
+            best = max(range(n_shards), key=score)
+            out.append(best)
+            placed[best].append(r)
+        return out
+
+
+PLACEMENTS = {
+    p.name: p for p in (HashByTenant(), LeastLoaded(), SlackAware())
+}
+
+
+def get_placement(name: str) -> PlacementPolicy:
+    try:
+        return PLACEMENTS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown placement policy {name!r}; have {sorted(PLACEMENTS)}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# the plan and the merged report
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShardPlan:
+    """Tenant -> shard assignment plus the per-shard member lists
+    (original tenant indices, ascending — order-preserving, which is
+    what makes the K=1 identity exact)."""
+
+    n_shards: int
+    assignment: tuple[int, ...]
+
+    @property
+    def members(self) -> tuple[tuple[int, ...], ...]:
+        return tuple(
+            tuple(i for i, s in enumerate(self.assignment) if s == k)
+            for k in range(self.n_shards)
+        )
+
+
+@dataclass(frozen=True)
+class ShardedReport:
+    """Per-shard `GatewayReport`s plus the plan that produced them.
+    Empty shards carry ``None``."""
+
+    plan: ShardPlan
+    reports: tuple[GatewayReport | None, ...]
+
+    def tenant(self, name: str) -> TenantStats:
+        for rep in self.reports:
+            if rep is None:
+                continue
+            for t in rep.tenants:
+                if t.name == name:
+                    return t
+        raise KeyError(name)
+
+    def shard_of(self, name: str) -> int:
+        for k, rep in enumerate(self.reports):
+            if rep is not None and any(t.name == name for t in rep.tenants):
+                return k
+        raise KeyError(name)
+
+    @property
+    def tenants(self) -> tuple[TenantStats, ...]:
+        return tuple(
+            t
+            for rep in self.reports
+            if rep is not None
+            for t in rep.tenants
+        )
+
+    def admitted_count(self) -> int:
+        return sum(1 for t in self.tenants if t.admitted)
+
+    def total_shed(self) -> int:
+        return sum(r.total_shed() for r in self.reports if r is not None)
+
+    def total_rate_limited(self) -> int:
+        return sum(
+            r.total_rate_limited() for r in self.reports if r is not None
+        )
+
+    def total_released(self) -> int:
+        return sum(
+            r.total_released() for r in self.reports if r is not None
+        )
+
+
+def plan_shards(
+    requests: Sequence[TaskRequest],
+    shards: int,
+    placement: "PlacementPolicy | str | None" = None,
+    *,
+    n_stages: int,
+    preemptive: bool,
+) -> tuple[PlacementPolicy, ShardPlan]:
+    """Resolve a placement policy (by name or instance; default
+    `HashByTenant`) and compute the tenant -> shard plan. This is the
+    single plan-construction path shared by `ShardedGateway.from_built`
+    and the conformance harness's ``run_sharded_case`` — what the
+    harness checks is, by construction, the plan the gateway runs."""
+    if shards < 1:
+        raise ValueError("need at least one shard")
+    if isinstance(placement, str):
+        placement = get_placement(placement)
+    placement = placement or HashByTenant()
+    assignment = placement.place(
+        requests,
+        shards,
+        overheads=[0.0] * n_stages,
+        preemptive=preemptive,
+    )
+    return placement, ShardPlan(
+        n_shards=shards, assignment=tuple(assignment)
+    )
+
+
+# ---------------------------------------------------------------------------
+# building one gateway (the shared constructor path)
+# ---------------------------------------------------------------------------
+def built_gateway(
+    built,
+    *,
+    policy: str | None = None,
+    seed: int = 0,
+    max_dim: int | None = 512,
+    shedding: SheddingPolicy | None = None,
+    monitor: BacklogMonitor | None = None,
+    ratelimit: RateLimiter | None = None,
+) -> TrafficGateway:
+    """One deterministic cost-model `TrafficGateway` over a
+    `BuiltScenario` (or a `BuiltScenario.subset`), on its own
+    `VirtualClock`: the server executes surrogate GEMM windows while
+    virtual time is charged per window from the conformance
+    `CostModel`'s exec-model WCETs. This is the single constructor path
+    both the unsharded gateway and every `ShardedGateway` shard go
+    through — K=1 equivalence is structural, not coincidental.
+    """
+    from repro.pipeline.serve import PharosServer
+    from repro.traffic.clock import VirtualClock
+
+    policy = policy or built.scenario.policy
+    serve_tasks, _reqs, _arr = built.serve_bundle(
+        period_scale=1.0, seed=seed, max_dim=max_dim
+    )
+    cost_model = built.conformance_cost_model(serve_tasks)
+    clk = VirtualClock()
+    server = PharosServer(
+        serve_tasks,
+        built.design.n_stages,
+        policy=policy,
+        cost_model=cost_model,
+        clock=clk.now,
+        sleep=clk.sleep,
+    )
+    admission = AdmissionController(
+        [0.0] * built.design.n_stages,
+        preemptive=(policy == "edf"),
+    )
+    return TrafficGateway(
+        server,
+        admission,
+        list(built.requests),
+        list(built.arrivals),
+        shedding=shedding,
+        monitor=monitor,
+        ratelimit=ratelimit,
+        clock=clk,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the sharded gateway
+# ---------------------------------------------------------------------------
+class ShardedGateway:
+    """K independent `TrafficGateway` shards over one pipeline design.
+
+    ``gateways[k]`` serves the tenants ``plan.members[k]`` (original
+    indices, order preserved); empty shards hold ``None``. Use
+    `from_built` for the batteries-included scenario path, or construct
+    directly from pre-built per-shard gateways for custom wiring.
+    """
+
+    def __init__(
+        self,
+        plan: ShardPlan,
+        gateways: Sequence[TrafficGateway | None],
+        names: Sequence[str],
+    ):
+        if len(gateways) != plan.n_shards:
+            raise ValueError("one gateway (or None) per shard required")
+        self.plan = plan
+        self.gateways = list(gateways)
+        self.names = list(names)
+
+    @classmethod
+    def from_built(
+        cls,
+        built,
+        *,
+        shards: int,
+        placement: PlacementPolicy | str | None = None,
+        policy: str | None = None,
+        seed: int = 0,
+        max_dim: int | None = 512,
+        shedding: SheddingPolicy | None = None,
+        make_monitor=None,
+        make_ratelimit=None,
+    ) -> "ShardedGateway":
+        """Place a `BuiltScenario`'s tenants across ``shards`` replicas.
+
+        ``make_monitor()`` / ``make_ratelimit(sub_requests)`` build one
+        fresh `BacklogMonitor` / `RateLimiter` per shard (monitors and
+        buckets are stateful — shards must not share them).
+        """
+        policy = policy or built.scenario.policy
+        _placement, plan = plan_shards(
+            built.requests,
+            shards,
+            placement,
+            n_stages=built.design.n_stages,
+            preemptive=(policy == "edf"),
+        )
+        gateways: list[TrafficGateway | None] = []
+        for members in plan.members:
+            if not members:
+                gateways.append(None)
+                continue
+            sub = built.subset(members)
+            gateways.append(
+                built_gateway(
+                    sub,
+                    policy=policy,
+                    seed=seed,
+                    max_dim=max_dim,
+                    shedding=shedding,
+                    monitor=make_monitor() if make_monitor else None,
+                    ratelimit=(
+                        make_ratelimit(sub.requests)
+                        if make_ratelimit
+                        else None
+                    ),
+                )
+            )
+        return cls(plan, gateways, [r.name for r in built.requests])
+
+    def open(self):
+        """Run tenancy admission on every shard; returns the flattened
+        decision list (shard-major, request order within each shard)."""
+        decisions = []
+        for gw in self.gateways:
+            if gw is not None:
+                decisions.extend(gw.open())
+        return decisions
+
+    def verify(self) -> bool:
+        """Every shard's cached Eq. 3 verdict equals a full
+        `srt_schedulable` re-analysis of its admitted subset."""
+        return all(
+            gw.admission.verify()
+            for gw in self.gateways
+            if gw is not None
+        )
+
+    def run(
+        self,
+        horizon_s: float,
+        *,
+        virtual_dt: float | None = None,
+        warmup: bool = True,
+    ) -> ShardedReport:
+        reports = tuple(
+            gw.run(horizon_s, virtual_dt=virtual_dt, warmup=warmup)
+            if gw is not None
+            else None
+            for gw in self.gateways
+        )
+        return ShardedReport(plan=self.plan, reports=reports)

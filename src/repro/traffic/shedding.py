@@ -71,6 +71,12 @@ class BacklogMonitor:
 
 class SheddingPolicy(Protocol):
     name: str
+    #: whether the policy actually *removes* work (drops releases).
+    #: Dropping policies can restore the analysis's boundedness promise
+    #: under sustained overdrive; demote-only policies cannot — the
+    #: overload conformance case (`run_shedding_case`) keys its verdict
+    #: claim on this.
+    drops: bool
 
     def classify(
         self,
@@ -99,6 +105,11 @@ class RejectNewest:
     """Shed jobs of the most recently admitted overloaded tenants."""
 
     name: str = "reject_newest"
+    #: a dropping policy actually removes work, so it can restore the
+    #: analysis's boundedness promise under sustained overdrive;
+    #: demote-only policies cannot (the work still runs) — overload
+    #: conformance (`run_shedding_case`) keys its verdict claim on this
+    drops: bool = True
 
     def classify(self, task_idx, overloaded, admission, requests):
         if task_idx not in overloaded:
@@ -123,6 +134,7 @@ class ShedByValue:
     """Shed the lowest value-density overloaded tenant's jobs."""
 
     name: str = "shed_by_value"
+    drops: bool = True
 
     def classify(self, task_idx, overloaded, admission, requests):
         if task_idx not in overloaded:
@@ -140,6 +152,7 @@ class DegradeToBestEffort:
     without a deadline guarantee."""
 
     name: str = "degrade_best_effort"
+    drops: bool = False
 
     def classify(self, task_idx, overloaded, admission, requests):
         if task_idx not in overloaded:
@@ -149,6 +162,41 @@ class DegradeToBestEffort:
             key=lambda i: _value_density(requests[i], admission),
         )
         return BEST_EFFORT if task_idx == cheapest else SUBMIT
+
+
+def des_release_shedding(
+    policy: SheddingPolicy,
+    admission: AdmissionController,
+    requests: Sequence[TaskRequest],
+    *,
+    monitor: BacklogMonitor | None = None,
+    bound_policy: str | None = None,
+):
+    """Mirror the gateway's backlog-triggered shedding *inside* the DES.
+
+    Builds a `repro.scheduler.des.ReleaseShedding` whose per-task engage
+    limits come from the admitted set's analysis response bounds exactly
+    like `TrafficGateway.open` derives the gateway's
+    (``monitor.limit_for(bound, period)``), and whose classify hook
+    calls this module's ``policy`` with the same arguments the gateway
+    passes. `scheduler.des.simulate(cfg.shedding=...)` then sheds at
+    release time against the *simulated* backlog — same hysteresis,
+    same policy, same limits — so DES, runtime and analysis can be
+    conformance-checked under overload.
+    """
+    from repro.scheduler.des import ReleaseShedding
+
+    monitor = monitor or BacklogMonitor()
+    bounds = admission.response_bounds(bound_policy)
+    limits = tuple(
+        monitor.limit_for(bounds.get(r.name, float("inf")), r.period)
+        for r in requests
+    )
+
+    def classify(task_idx: int, overloaded) -> str:
+        return policy.classify(task_idx, list(overloaded), admission, requests)
+
+    return ReleaseShedding(limits=limits, classify=classify)
 
 
 POLICIES = {

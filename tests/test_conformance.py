@@ -29,8 +29,11 @@ from repro.conformance import (
     CostModel,
     PR2_QUANTUM_SLACK,
     PR2_TOL_REL,
+    PR3_QUANTUM_SLACK,
     regulate_trace,
     run_case,
+    run_sharded_case,
+    run_shedding_case,
     run_wallclock_case,
 )
 from repro.core.rt.response_time import end_to_end_bounds
@@ -50,6 +53,7 @@ from repro.scheduler.des import (
     simulate_taskset,
 )
 from repro.traffic import AdmissionController, TaskRequest, VirtualClock
+from repro.traffic.scenarios import SCENARIOS
 from repro.pipeline.serve import PharosServer, ServeTask
 
 
@@ -422,6 +426,7 @@ def chained_system(draw, max_tasks=3, max_stages=3, u_cap=0.7):
     return table, TaskSet(tasks=tasks)
 
 
+@pytest.mark.property
 @settings(max_examples=30, deadline=None)
 @given(chained_system(), st.floats(0.0, 0.5))
 def test_property_des_response_below_analytic_bound(sys_, jitter):
@@ -505,6 +510,167 @@ def test_conformance_case_on_named_scenario(name):
 
 
 # ---------------------------------------------------------------------------
+# tightened DES-vs-runtime tolerance (tie-break alignment regression)
+# ---------------------------------------------------------------------------
+def test_quantum_slack_pinned_below_pre_alignment_value():
+    """The DES now mirrors the runtime's simultaneous-event ordering
+    (releases before completions, completions in stage-index order,
+    FIFO pools in insertion order), which removed the ~0.36
+    visit-quanta fan-in residual — the shipped slack must stay strictly
+    below the pre-alignment 0.75 (and transitively below PR-2's 2.0).
+    The named-scenario cases above run under this default, so the
+    tightened contract is continuously exercised, not just pinned."""
+    cfg = ConformanceConfig()
+    assert cfg.quantum_slack <= 0.25
+    assert cfg.quantum_slack < PR3_QUANTUM_SLACK < PR2_QUANTUM_SLACK
+    assert cfg.tol_rel <= 0.01 < PR2_TOL_REL
+
+
+# ---------------------------------------------------------------------------
+# differential fuzz: random small systems through all three layers
+# ---------------------------------------------------------------------------
+def _random_built(seed: int):
+    """A synthetic `BuiltScenario` (no DSE): random accelerator
+    configs, random contiguous layer splits, periods sized for ~0.7
+    max utilization — small enough for CI, random enough to probe
+    corners the registry never hits."""
+    from repro.core.dse.space import DesignPoint, evaluate_design
+    from repro.core.perfmodel.exec_model import AccDesign
+    from repro.core.workloads import PAPER_WORKLOADS
+    from repro.traffic.arrival import PeriodicArrivals, SporadicArrivals
+    from repro.traffic.admission import TaskRequest
+    from repro.traffic.scenarios import (
+        ArrivalSpec,
+        BuiltScenario,
+        TenantSpec,
+        TrafficScenario,
+    )
+
+    rng = random.Random(seed)
+    pool = ["pointnet", "deit_t", "resmlp", "mlp_mixer"]
+    names = rng.sample(pool, k=rng.choice([2, 3]))
+    workloads = [PAPER_WORKLOADS[n] for n in names]
+    n_stages = rng.choice([2, 3])
+    accs = tuple(
+        AccDesign(chips=rng.choice([2, 4])) for _ in range(n_stages)
+    )
+    # contiguous random split of each task's layer chain over stages
+    splits_by_task = []
+    for w in workloads:
+        L = len(w.layers)
+        cuts = sorted(rng.randint(0, L) for _ in range(n_stages - 1))
+        edges = [0] + cuts + [L]
+        splits_by_task.append(
+            [edges[k + 1] - edges[k] for k in range(n_stages)]
+        )
+    splits = tuple(
+        tuple(splits_by_task[i][k] for i in range(len(workloads)))
+        for k in range(n_stages)
+    )
+    # periods from the evaluated WCET rows: p_i sized so every stage
+    # stays under ~0.7 utilization
+    probe_ts = TaskSet(
+        tasks=tuple(
+            Task(workload=w, period=1.0, name=n)
+            for w, n in zip(workloads, names)
+        )
+    )
+    table = evaluate_design(accs, splits, workloads, probe_ts)
+    periods = [
+        len(workloads) / 0.7 * max(row) for row in table.base
+    ]
+    taskset = TaskSet(
+        tasks=tuple(
+            Task(workload=w, period=p, name=n)
+            for w, p, n in zip(workloads, periods, names)
+        )
+    )
+    design = DesignPoint(accs=accs, splits=splits, max_util=0.7)
+    specs, arrivals = [], []
+    for i, n in enumerate(names):
+        kind = rng.choice(["periodic", "sporadic"])
+        specs.append(
+            TenantSpec(
+                workload=f"paper:{n}",
+                ratio=1.0,
+                arrival=ArrivalSpec(kind=kind, jitter=0.3),
+                value=rng.uniform(0.5, 4.0),
+                name=n,
+            )
+        )
+        arrivals.append(
+            PeriodicArrivals(period=periods[i])
+            if kind == "periodic"
+            else SporadicArrivals(
+                min_gap=periods[i], jitter=0.3, seed=seed + 31 * i
+            )
+        )
+    return BuiltScenario(
+        scenario=TrafficScenario(
+            name=f"fuzz{seed}",
+            description="differential-fuzz synthetic",
+            tenants=tuple(specs),
+        ),
+        workloads=tuple(workloads),
+        taskset=taskset,
+        design=design,
+        table=table,
+        requests=tuple(
+            TaskRequest(
+                name=n,
+                base=tuple(table.base[i]),
+                period=periods[i],
+                value=specs[i].value,
+            )
+            for i, n in enumerate(names)
+        ),
+        arrivals=tuple(arrivals),
+    )
+
+
+def _overdrive_tenant(built, idx: int, factor: float):
+    """Clone a synthetic built scenario with tenant ``idx``'s traffic
+    sped up by ``factor`` (contract/analysis unchanged — the overload
+    contradicts the analysis, which is the shedding premise)."""
+    from dataclasses import replace as dc_replace
+
+    from repro.traffic.arrival import PoissonArrivals
+
+    p = built.taskset.tasks[idx].period
+    hot = PoissonArrivals(rate=factor / p, seed=1234 + idx)
+    arrivals = list(built.arrivals)
+    arrivals[idx] = hot
+    return dc_replace(built, arrivals=tuple(arrivals))
+
+
+@pytest.mark.property
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_differential_fuzz_ordering_under_sharding_and_shedding(seed):
+    """Fixed-seed differential fuzz: random small task sets through
+    analysis/DES/runtime via `run_case`, then the same systems placed
+    across 2 shards (`run_sharded_case`) and overdriven with shedding
+    armed (`run_shedding_case`) — the PR-3 ordering invariant
+    (analytic >= DES >= runtime, verdict chain monotone) must hold in
+    every configuration."""
+    built = _random_built(seed)
+    cfg = ConformanceConfig(horizon_periods=25.0)
+    for policy in ("fifo", "edf"):
+        case = run_case(built, policy, cfg=cfg)
+        assert case.ok, [str(v) for v in case.violations]
+        sharded = run_sharded_case(
+            built, policy, shards=2, placement="least_loaded", cfg=cfg
+        )
+        assert sharded.ok, [str(v) for v in sharded.violations]
+        assert len(sharded.cases) >= 1
+    hot = _overdrive_tenant(built, len(built.requests) - 1, 2.5)
+    shed = run_shedding_case(
+        hot, "edf", shed_policy="reject_newest", cfg=cfg
+    )
+    assert shed.ok, [str(v) for v in shed.violations]
+    assert shed.analysis_schedulable
+
+
+# ---------------------------------------------------------------------------
 # the wall-clock case: calibrated CostModel vs the real clock
 # ---------------------------------------------------------------------------
 def test_wallclock_case_on_steady_city():
@@ -535,3 +701,46 @@ def test_wallclock_case_on_steady_city():
         assert 0.0 < row.predicted_des_max <= row.predicted_bound
         assert math.isfinite(row.predicted_bound)
         assert row.in_flight <= cfg.backlog_limit
+
+
+#: the registry slice the wall-clock leg covers inside the CI time
+#: budget (each case calibrates + replays real GEMMs on the real
+#: clock); everything else is skip-marked until the budget grows.
+#: ``steady_city`` is covered by the dedicated mechanics test above.
+WALLCLOCK_CI_BUDGET = ("rush_hour", "sensor_fusion")
+WALLCLOCK_KINDS = {"wall_vs_model", "wall_no_jobs", "verdict_wall_backlog"}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_wallclock_case_verdicts_across_registry(name):
+    """Registry-wide wall-clock coverage: every in-budget scenario's
+    calibrated case must come back clean (after the standard host-noise
+    retry), and any violation it ever reports must carry one of the
+    documented wall verdict kinds — no anonymous failure modes."""
+    from repro.core.perfmodel.hardware import paper_platform
+    from repro.traffic.scenarios import build, get_scenario
+
+    if name == "steady_city":
+        pytest.skip("covered by test_wallclock_case_on_steady_city")
+    if name not in WALLCLOCK_CI_BUDGET:
+        pytest.skip(
+            "beyond the CI wall-clock time budget; in-budget: "
+            f"{WALLCLOCK_CI_BUDGET}"
+        )
+    built = build(
+        get_scenario(name), paper_platform(16), beam_width=4
+    )
+    cfg = ConformanceConfig(
+        wall_horizon_periods=8.0, wall_reps=2, wall_margin=8.0
+    )
+    case = run_wallclock_case(built, "edf", cfg=cfg)
+    for v in case.violations:
+        assert v.kind in WALLCLOCK_KINDS, str(v)
+    if not case.ok:  # one host-noise retry, like the bench
+        case = run_wallclock_case(built, "edf", cfg=cfg)
+        for v in case.violations:
+            assert v.kind in WALLCLOCK_KINDS, str(v)
+    assert case.ok, [str(v) for v in case.violations]
+    for row in case.tasks:
+        assert row.jobs > 0
+        assert math.isfinite(row.predicted_bound)

@@ -1,0 +1,234 @@
+"""Per-tenant token-bucket rate limiting (`traffic.ratelimit`).
+
+Unit semantics of `TokenBucket`/`RateLimiter`, the gateway integration
+(a dry bucket refuses the release up front, folded into `TenantStats`),
+and the layer's admission-safety property: putting a rate limiter in
+front of the `AdmissionController` never lets a tenant set through that
+a full `srt_schedulable` re-analysis would reject.
+"""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rt.schedulability import srt_schedulable
+from repro.traffic import (
+    AdmissionController,
+    PeriodicArrivals,
+    PoissonArrivals,
+    RateLimiter,
+    TaskRequest,
+    TokenBucket,
+)
+
+
+# ---------------------------------------------------------------------------
+# bucket semantics
+# ---------------------------------------------------------------------------
+def test_bucket_starts_full_and_caps_at_burst():
+    b = TokenBucket(rate=1.0, burst=3.0)
+    assert b.peek(0.0) == 3.0
+    # a long idle period refills to the cap, not beyond
+    assert b.peek(100.0) == 3.0
+    for _ in range(3):
+        assert b.take(0.0)
+    assert not b.take(0.0)  # burst spent, no time has passed
+    assert b.granted == 3 and b.denied == 1
+
+
+def test_bucket_refills_at_rate():
+    b = TokenBucket(rate=2.0, burst=1.0)
+    assert b.take(0.0)
+    assert not b.take(0.0)
+    assert not b.take(0.4)  # 0.8 tokens accrued: not enough
+    assert b.take(0.5)  # 1.0 token accrued
+    # stale timestamps refill nothing and never go negative
+    assert not b.take(0.5)
+    assert b.peek(0.5) < 1.0
+
+
+def test_bucket_validation():
+    with pytest.raises(ValueError, match="rate"):
+        TokenBucket(rate=0.0, burst=2.0)
+    with pytest.raises(ValueError, match="burst"):
+        TokenBucket(rate=1.0, burst=0.5)
+    with pytest.raises(ValueError):
+        RateLimiter([])
+    with pytest.raises(ValueError, match="positive"):
+        RateLimiter.for_requests(
+            [TaskRequest("a", (0.1,), period=1.0)], rate_scale=0.0
+        )
+
+
+def test_for_requests_value_weighting_never_exceeds_contract():
+    reqs = [
+        TaskRequest("hi", (0.1,), period=0.2, value=3.0),
+        TaskRequest("lo", (0.1,), period=1.0, value=1.0),
+    ]
+    plain = RateLimiter.for_requests(reqs)
+    weighted = RateLimiter.for_requests(reqs, value_weighted=True)
+    # unweighted: every bucket refills at exactly the provisioned rate
+    for b, r in zip(plain.buckets, reqs):
+        assert b.rate == pytest.approx(1.0 / r.period)
+    # weighted: value only ever slows a tenant below its contract —
+    # the sustained rate never exceeds the provisioned rate the
+    # admission analysis accounted for (the above-mean tenant keeps
+    # its contract rate and earns extra burst instead)
+    for wb, pb in zip(weighted.buckets, plain.buckets):
+        assert wb.rate <= pb.rate + 1e-12
+    assert weighted.buckets[0].rate == pytest.approx(1.0 / reqs[0].period)
+    assert weighted.buckets[1].rate < 1.0 / reqs[1].period
+    assert weighted.buckets[0].burst > weighted.buckets[1].burst
+
+
+def test_for_requests_value_weighting_tolerates_zero_value():
+    # value 0 is a legal contract (ShedByValue sheds it first); it must
+    # yield a slow-but-live bucket, not a constructor error
+    reqs = [
+        TaskRequest("zero", (0.1,), period=1.0, value=0.0),
+        TaskRequest("hi", (0.1,), period=1.0, value=2.0),
+    ]
+    limiter = RateLimiter.for_requests(reqs, value_weighted=True)
+    assert 0.0 < limiter.buckets[0].rate < limiter.buckets[1].rate
+    assert limiter.allow(0, 0.0)  # the initial burst still grants
+
+
+# ---------------------------------------------------------------------------
+# gateway integration
+# ---------------------------------------------------------------------------
+def _gateway(make_ratelimit=None):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.pipeline.serve import PharosServer, ServeTask
+    from repro.traffic import TrafficGateway, VirtualClock
+
+    k = jax.random.PRNGKey(0)
+    w = jax.random.normal(k, (128, 128), jnp.float32) / 11.3
+    DT = 1e-3
+    tasks = [
+        ServeTask("calm", (w,), stage_of_layer=(0,), period=0.01),
+        ServeTask("greedy", (w,), stage_of_layer=(0,), period=0.01),
+    ]
+    reqs = [
+        TaskRequest("calm", (DT,), period=0.01, value=2.0),
+        TaskRequest("greedy", (DT,), period=0.01, value=1.0),
+    ]
+    clk = VirtualClock()
+    srv = PharosServer(tasks, 1, clock=clk.now, sleep=clk.sleep)
+    gw = TrafficGateway(
+        srv,
+        AdmissionController([0.0]),
+        reqs,
+        # greedy actually sends ~5x its provisioned 100 jobs/s
+        [PeriodicArrivals(period=0.01), PoissonArrivals(rate=500.0, seed=3)],
+        ratelimit=make_ratelimit(reqs) if make_ratelimit else None,
+        clock=clk,
+    )
+    return gw, reqs
+
+
+def test_gateway_rate_limits_overdriven_tenant_only():
+    gw, reqs = _gateway(
+        lambda rs: RateLimiter.for_requests(rs, burst_periods=2.0)
+    )
+    rep = gw.run(0.5, virtual_dt=1e-3)
+    calm, greedy = rep.tenant("calm"), rep.tenant("greedy")
+    # the contract-honouring tenant is never refused
+    assert calm.rate_limited == 0 and calm.released == calm.scheduled
+    # the 5x tenant is trimmed to roughly its provisioned rate: ~50
+    # releases over the 0.5s horizon (plus the burst allowance)
+    assert greedy.rate_limited > 0
+    assert greedy.released + greedy.degraded <= 50 + 2 + 1
+    assert rep.total_rate_limited() == greedy.rate_limited
+    # refused releases never reach the server
+    assert gw.server.released_per_task[1] == greedy.released
+
+
+def test_gateway_rate_limiting_is_deterministic():
+    reps = []
+    for _ in range(2):
+        gw, _ = _gateway(
+            lambda rs: RateLimiter.for_requests(rs, burst_periods=2.0)
+        )
+        reps.append(gw.run(0.5, virtual_dt=1e-3))
+    assert [vars(t) for t in reps[0].tenants] == [
+        vars(t) for t in reps[1].tenants
+    ]
+
+
+def test_gateway_bucket_misalignment_rejected():
+    with pytest.raises(ValueError, match="align"):
+        _gateway(
+            lambda rs: RateLimiter.for_requests(rs[:1])
+        )
+
+
+# ---------------------------------------------------------------------------
+# property: the limiter never lets an unschedulable set through
+# ---------------------------------------------------------------------------
+@st.composite
+def tenant_mix(draw, max_tenants=8, n_stages=3):
+    n = draw(st.integers(1, max_tenants))
+    reqs = []
+    for i in range(n):
+        period = draw(st.floats(0.01, 1.0, allow_nan=False))
+        base = tuple(
+            draw(st.floats(0.0, 0.6 * period, allow_nan=False))
+            for _ in range(n_stages)
+        )
+        if not any(b > 0 for b in base):
+            base = (0.1 * period,) + base[1:]
+        reqs.append(
+            TaskRequest(
+                f"t{i}",
+                base,
+                period=period,
+                value=draw(st.floats(0.1, 5.0, allow_nan=False)),
+            )
+        )
+    return reqs
+
+
+@pytest.mark.property
+@settings(max_examples=40, deadline=None)
+@given(tenant_mix())
+def test_property_ratelimited_admission_never_admits_unschedulable(reqs):
+    """Random tenant mixes through rate-limited admission: the
+    committed set always passes a full `srt_schedulable` re-analysis
+    (never admits a set the analysis rejects), the incremental cache
+    stays bit-exact after every decision, and arming the limiter
+    changes no admission verdict (it polices traffic, not tenancy)."""
+    ctl = AdmissionController([0.0] * 3, preemptive=False)
+    limiter = RateLimiter.for_requests(reqs, value_weighted=True)
+    ctl_plain = AdmissionController([0.0] * 3, preemptive=False)
+    for i, r in enumerate(reqs):
+        dec = ctl.admit(r)
+        assert ctl.verify()  # cache == full Eq. 3 re-analysis, always
+        assert dec.admitted == ctl_plain.admit(r).admitted
+        # the bucket only ever gates traffic of tenants already past
+        # admission — draining it cannot widen the admitted set
+        limiter.allow(i, 0.0)
+    view = ctl.to_analysis()
+    if view is not None:
+        table, ts = view
+        assert srt_schedulable(table, ts, preemptive=False)
+
+
+@pytest.mark.property
+@settings(max_examples=20, deadline=None)
+@given(tenant_mix(), st.floats(1.0, 4.0, allow_nan=False))
+def test_property_bucket_grants_bounded_by_rate_times_time(reqs, span):
+    """Over any span, a bucket grants at most burst + rate * span
+    tokens — the contract that makes rate-limited traffic satisfy the
+    admission premise (bounded arrivals per interval)."""
+    limiter = RateLimiter.for_requests(reqs, burst_periods=2.0)
+    rng = random.Random(42)
+    for i, r in enumerate(reqs):
+        granted, t = 0, 0.0
+        while t < span:
+            if limiter.allow(i, t):
+                granted += 1
+            t += rng.uniform(0.0, r.period / 4)
+        cap = limiter.buckets[i].burst + span / r.period
+        assert granted <= cap + 1e-9

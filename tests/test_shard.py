@@ -1,0 +1,209 @@
+"""Multi-gateway sharding (`traffic.shard`).
+
+Placement-policy unit semantics, `ShardPlan`/`ShardedReport` plumbing,
+and the acceptance property of the scale layer: a `ShardedGateway` with
+K=1 reproduces the unsharded `TrafficGateway`'s verdicts and reports
+**bit-exactly on every registry scenario**, and per-shard admission
+verdicts stay bit-exact against a full re-analysis for any K.
+"""
+from functools import lru_cache
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.traffic import (
+    AdmissionController,
+    HashByTenant,
+    LeastLoaded,
+    ShardedGateway,
+    SlackAware,
+    TaskRequest,
+    built_gateway,
+    get_placement,
+)
+from repro.traffic.shard import ShardPlan
+from repro.traffic.scenarios import SCENARIOS, build, get_scenario
+
+
+# ---------------------------------------------------------------------------
+# placement policies
+# ---------------------------------------------------------------------------
+def _req(name, base, period=1.0, value=1.0):
+    return TaskRequest(name, base, period=period, value=value)
+
+
+def test_hash_placement_is_deterministic_and_name_keyed():
+    reqs = [_req(f"t{i}", (0.1, 0.1)) for i in range(6)]
+    p = HashByTenant()
+    a1 = p.place(reqs, 3, overheads=(0.0, 0.0), preemptive=False)
+    a2 = p.place(reqs, 3, overheads=(0.0, 0.0), preemptive=False)
+    assert a1 == a2
+    assert all(0 <= s < 3 for s in a1)
+    # keyed by name alone: the same name lands on the same shard
+    # regardless of position
+    solo = p.place([reqs[4]], 3, overheads=(0.0, 0.0), preemptive=False)
+    assert solo[0] == a1[4]
+
+
+def test_least_loaded_splits_two_heavy_tenants():
+    reqs = [_req("a", (0.8,)), _req("b", (0.8,)), _req("c", (0.1,))]
+    p = LeastLoaded()
+    a = p.place(reqs, 2, overheads=(0.0,), preemptive=False)
+    assert a[0] != a[1]  # the two heavies must not share a shard
+    # the light tenant joins whichever shard ended up lighter: both
+    # carry 0.8, so the tie resolves to the lowest index
+    assert a[2] == 0
+
+
+def test_slack_aware_ignores_stages_the_tenant_never_touches():
+    """The differentiator vs `LeastLoaded`: a tenant active only on
+    stage 1 prefers the shard with stage-1 slack even when that
+    shard's *other* stage is the globally busiest."""
+    seed0 = _req("hog0", (0.9, 0.0))  # shard 0: stage 0 busy, stage 1 free
+    seed1 = _req("hog1", (0.5, 0.5))  # shard 1: both half busy
+    cand = _req("cand", (0.0, 0.3))  # active on stage 1 only
+    overheads = (0.0, 0.0)
+    pre = False
+
+    slack = SlackAware().place([seed0, seed1, cand], 2, overheads=overheads, preemptive=pre)
+    assert slack[0] != slack[1]  # seeds split (greedy)
+    # candidate follows stage-1 slack onto hog0's shard (1.0 - 0.3 vs
+    # 1.0 - 0.5 - 0.3), even though that shard holds the busiest stage
+    assert slack[2] == slack[0]
+
+    least = LeastLoaded().place([seed0, seed1, cand], 2, overheads=overheads, preemptive=pre)
+    # least-loaded looks at the global max (0.9) and avoids that shard
+    assert least[2] == least[1]
+
+
+def test_get_placement_registry():
+    assert get_placement("least_loaded").name == "least_loaded"
+    with pytest.raises(KeyError, match="unknown placement"):
+        get_placement("round_robin")
+
+
+def test_shard_plan_members_preserve_order():
+    plan = ShardPlan(n_shards=3, assignment=(2, 0, 2, 1, 0))
+    assert plan.members == ((1, 4), (3,), (0, 2))
+
+
+# ---------------------------------------------------------------------------
+# property: K=1 sharded admission == whole-pipeline admission
+# ---------------------------------------------------------------------------
+@st.composite
+def request_set(draw, max_tenants=8, n_stages=3):
+    n = draw(st.integers(1, max_tenants))
+    reqs = []
+    for i in range(n):
+        period = draw(st.floats(0.05, 2.0, allow_nan=False))
+        base = tuple(
+            draw(st.floats(0.0, 0.5 * period, allow_nan=False))
+            for _ in range(n_stages)
+        )
+        if not any(b > 0 for b in base):
+            base = (0.05 * period,) + base[1:]
+        reqs.append(_req(f"t{i}", base, period=period))
+    return reqs
+
+
+@pytest.mark.property
+@settings(max_examples=40, deadline=None)
+@given(request_set(), st.sampled_from(sorted(n for n in ("hash_by_tenant", "least_loaded", "slack_aware"))))
+def test_property_single_shard_verdicts_equal_whole_pipeline(reqs, pname):
+    """Every placement policy maps everything to shard 0 when K=1 (in
+    request order), so the per-shard admission decision stream — and
+    therefore every verdict — equals the unsharded controller's."""
+    placement = get_placement(pname)
+    assignment = placement.place(
+        reqs, 1, overheads=(0.0,) * 3, preemptive=True
+    )
+    assert assignment == [0] * len(reqs)
+    whole = AdmissionController([0.0] * 3, preemptive=True)
+    shard = AdmissionController([0.0] * 3, preemptive=True)
+    for r in reqs:
+        assert whole.admit(r).admitted == shard.admit(r).admitted
+    assert shard.verify() and whole.verify()
+    assert shard.utilizations() == whole.utilizations()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: K=1 bit-exact on every registry scenario
+# ---------------------------------------------------------------------------
+@lru_cache(maxsize=None)
+def _built(name):
+    from repro.core.perfmodel.hardware import paper_platform
+
+    return build(get_scenario(name), paper_platform(16), beam_width=4)
+
+
+def _report_fields(rep):
+    """Everything a `GatewayReport` asserts about a run, as plain data."""
+    sr = rep.server_report
+    return (
+        [vars(t) for t in rep.tenants],
+        [
+            (d.request.name, d.admitted, d.reason, d.stage_utils, d.bottleneck)
+            for d in rep.decisions
+        ],
+        sr.response_times,
+        sr.completed_releases,
+        sr.deadline_misses,
+        sr.in_flight,
+        sr.jobs_released,
+        sr.jobs_completed,
+        sr.preemptions,
+    )
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_k1_sharded_gateway_bit_exact_on_registry_scenario(name):
+    built = _built(name)
+    horizon = 15.0 * max(t.period for t in built.taskset.tasks)
+    plain = built_gateway(built).run(horizon)
+    sharded = ShardedGateway.from_built(built, shards=1)
+    rep = sharded.run(horizon)
+    assert sharded.verify()
+    assert rep.plan.assignment == (0,) * len(built.requests)
+    assert _report_fields(plain) == _report_fields(rep.reports[0])
+
+
+# ---------------------------------------------------------------------------
+# K > 1 behaviour
+# ---------------------------------------------------------------------------
+def test_sharded_run_spreads_tenants_and_serves_all():
+    built = _built("sharded_city")
+    horizon = 15.0 * max(t.period for t in built.taskset.tasks)
+    gw = ShardedGateway.from_built(
+        built, shards=2, placement="least_loaded"
+    )
+    rep = gw.run(horizon)
+    assert gw.verify()
+    assert len(set(rep.plan.assignment)) == 2  # genuinely split
+    names = {t.name for t in rep.tenants}
+    assert names == {r.name for r in built.requests}
+    for t in rep.tenants:
+        assert t.admitted and t.released > 0
+        assert rep.shard_of(t.name) == rep.plan.assignment[
+            [r.name for r in built.requests].index(t.name)
+        ]
+    with pytest.raises(KeyError):
+        rep.tenant("nobody")
+
+
+def test_sharded_gateway_tolerates_empty_shards():
+    built = _built("steady_city")
+    horizon = 10.0 * max(t.period for t in built.taskset.tasks)
+    # more shards than tenants: some shards stay empty
+    gw = ShardedGateway.from_built(
+        built, shards=4, placement="least_loaded"
+    )
+    rep = gw.run(horizon)
+    assert sum(1 for r in rep.reports if r is None) == 4 - len(
+        set(rep.plan.assignment)
+    )
+    assert rep.total_released() > 0
+
+
+def test_sharded_gateway_rejects_bad_shard_count():
+    with pytest.raises(ValueError, match="shard"):
+        ShardedGateway.from_built(_built("steady_city"), shards=0)

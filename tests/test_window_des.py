@@ -206,6 +206,7 @@ def chunked_system(draw, max_tasks=3, max_stages=3, u_cap=0.7):
     return table, TaskSet(tasks=tasks), chunk_sched
 
 
+@pytest.mark.property
 @settings(max_examples=25, deadline=None)
 @given(chunked_system())
 def test_property_window_des_below_blocking_aware_bound(sys_):
@@ -242,6 +243,7 @@ def test_property_window_des_below_blocking_aware_bound(sys_):
                 )
 
 
+@pytest.mark.property
 @settings(max_examples=25, deadline=None)
 @given(
     st.floats(0.05, 0.2, allow_nan=False),  # urgent wcet
@@ -284,6 +286,67 @@ def test_property_window_des_dominates_instant_for_urgent_task(
     for a, b in zip(r_inst, r_win):
         assert b >= a - 1e-9
         assert b <= a + chunk + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# tie-breaking alignment: fan-in stages, DES == runtime exactly
+# ---------------------------------------------------------------------------
+def test_fan_in_simultaneous_forwarding_matches_runtime_exactly():
+    """Two upstream stages complete at the same instant and forward
+    into one fan-in stage. The DES orders simultaneous completions by
+    stage index and FIFO pools by insertion order — exactly the
+    runtime's `step` iteration + deque semantics — so the two layers
+    must agree on every job *bit-for-bit*, with zero slack. This is
+    the alignment that retired the ~0.36-visit-quanta residual the
+    old `quantum_slack` absorbed."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.conformance import CostModel
+    from repro.conformance.harness import run_virtual_server
+    from repro.pipeline.serve import ServeTask
+
+    k = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(k)
+    mk = lambda kk: jax.random.normal(kk, (128, 128), jnp.float32) / 11.3
+    # A: stage 0 -> 2, B: stage 1 -> 2; identical first-segment WCETs
+    # so both forwards hit stage 2 at the same instant, repeatedly
+    A = ServeTask("A", (mk(k1), mk(k1)), stage_of_layer=(0, 2), period=1.0)
+    B = ServeTask("B", (mk(k2), mk(k2)), stage_of_layer=(1, 2), period=1.0)
+    cm = CostModel(
+        layer_costs=((0.4, 0.3), (0.4, 0.3)),
+        layer_windows=((1, 1), (1, 1)),
+        stage_of_layer=((0, 2), (1, 2)),
+        n_stages=3,
+    )
+    horizon = 10.0
+    traces = [[float(i) for i in range(10)], [float(i) for i in range(10)]]
+    table = SegmentTable(
+        base=cm.segment_table().base, overhead=[0.0] * 3
+    )
+    ts = TaskSet(
+        tasks=(
+            Task(workload=_mk_workload(), period=1.0, name="A"),
+            Task(workload=_mk_workload(), period=1.0, name="B"),
+        )
+    )
+    for policy in ("fifo", "edf"):
+        des = simulate_taskset(
+            table,
+            ts,
+            policy,
+            horizon=horizon,
+            arrivals=traces,
+            chunk_schedules=cm.chunk_schedule(),
+            preemption="window",
+        )
+        srv = run_virtual_server([A, B], 3, policy, cm, traces, horizon)
+        for i, name in enumerate(("A", "B")):
+            r_des = des.response_times[i]
+            r_srv = srv.response_times[name]
+            assert len(r_des) == len(r_srv) > 0
+            for rd, rs in zip(r_des, r_srv):
+                assert rs == pytest.approx(rd, abs=1e-12), (policy, name)
 
 
 # ---------------------------------------------------------------------------
