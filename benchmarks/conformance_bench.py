@@ -9,7 +9,7 @@ analytic bound dominates the DES, the DES dominates the executing
 runtime (within the tie-breaking tolerance), and no layer's
 schedulability verdict inverts.
 
-Four CI-enforced invariants ride on top of the sweep:
+Five CI-enforced invariants ride on top of the sweep:
 
 - **tightened tolerance** — the window-boundary DES must hold a
   DES-vs-runtime tolerance *strictly below* the PR-2 values that
@@ -21,11 +21,15 @@ Four CI-enforced invariants ride on top of the sweep:
   across K pipeline shards (every placement policy) and holds every
   shard to the full three-layer contract plus a bit-exact per-shard
   admission verdict;
+- **DSE case** — `run_dse_case` pushes the search's claimed-feasible
+  designs through all three layers and serves the scenario on a
+  DSE-provisioned 2-shard `ShardedGateway` (zero violations required);
 - **shedding cases** — `run_shedding_case` drives overdriven
   scenarios with identical drop-shedding armed in DES and runtime and
   matches the surviving jobs by release time;
 - **wall-clock case** — `run_wallclock_case` drives the gateway on the
-  real clock against the calibrated `CostModel` (one retry absorbs a
+  real clock against the calibrated `CostModel` in calibrated-admission
+  mode (tenancy admitted against measured WCETs; one retry absorbs a
   host throttle landing mid-run; two consecutive failures fail CI).
 
 Also times a wall-clock WCET calibration pass (`CostModel.calibrate`)
@@ -54,6 +58,7 @@ from repro.conformance import (
     ConformanceConfig,
     CostModel,
     run_conformance,
+    run_dse_case,
     run_sharded_case,
     run_shedding_case,
     run_wallclock_case,
@@ -189,6 +194,51 @@ def bench_sharded(quick: bool, built) -> tuple[dict, bool]:
     return {"cases": cases}, ok
 
 
+def bench_dse(quick: bool) -> tuple[dict, bool]:
+    """The DSE conformance case: the search's claimed-feasible designs
+    pushed through analysis/DES/runtime, and the best design
+    provisioned into a 2-shard `ShardedGateway` that must serve the
+    scenario's traffic with zero violations — the acceptance gate of
+    the DSE -> serving bridge."""
+    cfg = ConformanceConfig(horizon_periods=16.0 if quick else 24.0)
+    res = run_dse_case(
+        "sharded_city",
+        "edf",
+        shards=2,
+        check_top=1 if quick else 2,
+        cfg=cfg,
+    )
+    print(
+        f"dse {res.scenario:12s} {res.policy:4s} claimed={res.n_claimed} "
+        f"checked={[round(u, 4) for u in res.checked_utils]} "
+        f"K={res.n_shards} {res.placement} admitted={res.admitted} "
+        f"released={res.released} viol={len(res.violations)}"
+    )
+    payload = {
+        "scenario": res.scenario,
+        "policy": res.policy,
+        "method": res.method,
+        "claimed_feasible": res.n_claimed,
+        "checked_utils": list(res.checked_utils),
+        "shards": res.n_shards,
+        "placement": res.placement,
+        "assignment": list(res.assignment),
+        "admitted": res.admitted,
+        "released": res.released,
+        "cases": [
+            {
+                "analysis_schedulable": c.analysis_schedulable,
+                "des_schedulable": c.des_schedulable,
+                "server_bounded": c.server_bounded,
+                "violations": [str(v) for v in c.violations],
+            }
+            for c in res.cases
+        ],
+        "violations": [str(v) for v in res.violations],
+    }
+    return payload, res.ok
+
+
 def bench_shedding(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
     """Overload conformance: overdriven scenarios with the same (drop)
     shedding machinery armed in DES and runtime — surviving jobs
@@ -303,6 +353,9 @@ def bench_wallclock(quick: bool, built) -> tuple[dict, bool]:
     cfg = ConformanceConfig(
         wall_horizon_periods=8.0 if quick else 12.0,
         wall_reps=2 if quick else 3,
+        # ROADMAP's calibrated-admission mode: tenancy admission runs
+        # against the measured WCET contracts on this host
+        calibrated_admission=True,
     )
     attempts = []
     ok = False
@@ -313,6 +366,7 @@ def bench_wallclock(quick: bool, built) -> tuple[dict, bool]:
             {
                 "attempt": attempt,
                 "policy": case.policy,
+                "admission_mode": case.admission_mode,
                 "period_scale": case.period_scale,
                 "horizon_s": case.horizon_s,
                 "margin": case.margin,
@@ -364,6 +418,7 @@ def main() -> None:
     )
     conf, ok = bench_conformance(quick, {"steady_city": steady})
     sharded, sharded_ok = bench_sharded(quick, sharded_city)
+    dse, dse_ok = bench_dse(quick)
     shedding, shedding_ok = bench_shedding(quick, {})
     wall, wall_ok = bench_wallclock(quick, steady)
     payload = {
@@ -371,6 +426,7 @@ def main() -> None:
         "quick": quick,
         "conformance": conf,
         "sharded": sharded,
+        "dse": dse,
         "shedding": shedding,
         "wallclock": wall,
         "calibration": bench_calibration(quick, steady),
@@ -380,7 +436,7 @@ def main() -> None:
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"\nwrote {path}")
-    if not ok or not sharded_ok or not shedding_ok or not wall_ok:
+    if not ok or not sharded_ok or not dse_ok or not shedding_ok or not wall_ok:
         print("CONFORMANCE VIOLATIONS DETECTED", file=sys.stderr)
         sys.exit(1)
 

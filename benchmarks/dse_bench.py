@@ -1,0 +1,245 @@
+"""Vectorized-DSE benchmark -> BENCH_dse.json.
+
+Three measurements, two CI-enforced assertions:
+
+1. **Evaluator core** — the same candidate batch priced by the scalar
+   per-candidate `create_acc` loop vs one `BatchedDesignEvaluator`
+   call, on warmed caches (both paths share the `LatencyCache`, so
+   this isolates evaluation throughput, not model pricing). CI asserts
+   the batched evaluator reaches **>= 5x** the scalar
+   candidates/sec — the acceptance bar of the vectorization refactor.
+2. **End-to-end search** — `beam_search` on the Fig. 9 problem with
+   ``evaluator="scalar"`` vs ``"batched"``: same winner (asserted
+   exactly), and the batched search must be wall-clock faster.
+3. **SRT vs TG feasible counts** — `explore` with its two
+   configurations over a ratio grid per task-set combo: the SRT beam's
+   feasible-design counts vs the TG design's Eq. 2 gate and DES
+   verdict (TG backtracks, so the DES stays its oracle) — the paper's
+   headline comparison, now driven through one entry point.
+
+Run: ``PYTHONPATH=src python benchmarks/dse_bench.py [--quick]``
+Writes ``experiments/benchmarks/BENCH_dse.json``; exits non-zero if a
+speedup assertion fails so CI enforces the refactor's perf claim.
+"""
+from __future__ import annotations
+
+import json
+import os
+import random
+import sys
+import time
+
+import numpy as np
+
+from repro.core.dse.batch_eval import BatchedDesignEvaluator
+from repro.core.dse.beam import beam_search
+from repro.core.dse.create_acc import LatencyCache, create_acc
+from repro.core.dse.explore import explore
+from repro.core.dse.throughput import tg_simtasks
+from repro.core.perfmodel.hardware import paper_platform
+from repro.core.workloads import PAPER_WORKLOADS, make_taskset
+from repro.scheduler.des import SimConfig, simulate
+
+RESULTS_DIR = os.path.join("experiments", "benchmarks")
+#: the paper regime (matches `benchmarks.common.MAX_M`; self-contained
+#: so CI can run this file directly)
+MAX_M = 4
+
+#: the Fig. 9 problem (search bench) and the feasibility-grid combos
+FIG9_COMBO = ("pointnet", "deit_t")
+GRID_COMBOS = (
+    ("pointnet", "deit_t"),
+    ("pointnet", "mlp_mixer"),
+    ("resmlp", "deit_t"),
+)
+#: the acceptance bar: batched evaluator >= 5x scalar candidates/sec
+MIN_EVAL_SPEEDUP = 5.0
+
+
+def _problem(chips: int, ratios=(0.8, 0.8)):
+    plat = paper_platform(chips)
+    wls = [PAPER_WORKLOADS[c] for c in FIG9_COMBO]
+    ts = make_taskset(FIG9_COMBO, ratios, plat)
+    return plat, wls, ts
+
+
+def bench_evaluator_core(quick: bool) -> dict:
+    """Same candidates, scalar loop vs one batched call."""
+    _plat, wls, ts = _problem(16)
+    n_cand = 4_000 if quick else 20_000
+    rng = random.Random(0)
+    spans, chips = [], []
+    for _ in range(n_cand):
+        row = []
+        for w in wls:
+            a = rng.randint(0, w.num_layers)
+            row.append((a, rng.randint(a, w.num_layers)))
+        spans.append(row)
+        chips.append(rng.randint(1, 16))
+    cache = LatencyCache(wls)
+    ev = BatchedDesignEvaluator(wls, ts, cache=cache)
+    # warm both paths' latency tables (pricing is shared; the bench
+    # measures evaluation throughput)
+    ev.evaluate(np.array(spans[:64]), np.array(chips[:64]))
+    for sp, ch in zip(spans[:64], chips[:64]):
+        create_acc(tuple(sp), ch, ts, cache)
+
+    t0 = time.perf_counter()
+    for sp, ch in zip(spans, chips):
+        create_acc(tuple(sp), ch, ts, cache)
+    scalar_s = time.perf_counter() - t0
+
+    sp_arr, ch_arr = np.array(spans), np.array(chips)
+    t0 = time.perf_counter()
+    ev.evaluate(sp_arr, ch_arr)
+    batched_s = time.perf_counter() - t0
+
+    out = {
+        "candidates": n_cand,
+        "scalar_seconds": scalar_s,
+        "batched_seconds": batched_s,
+        "scalar_cands_per_sec": n_cand / scalar_s,
+        "batched_cands_per_sec": n_cand / batched_s,
+        "speedup": scalar_s / batched_s,
+    }
+    print(
+        f"evaluator core: scalar {out['scalar_cands_per_sec']:,.0f}/s, "
+        f"batched {out['batched_cands_per_sec']:,.0f}/s "
+        f"({out['speedup']:.1f}x)"
+    )
+    return out
+
+
+def bench_search(quick: bool) -> dict:
+    """End-to-end beam/brute search, scalar vs batched evaluator."""
+    runs = []
+    cases = [("beam_B8", 8, 8, 4), ("beam_B16", 8, 16, 4)]
+    if not quick:
+        cases.append(("brute_6chip", 6, None, 3))
+    for label, n_chips, width, max_m in cases:
+        plat, wls, ts = _problem(n_chips)
+        row = {"search": label}
+        results = {}
+        for evk in ("scalar", "batched"):
+            res = beam_search(
+                wls, ts, plat, max_m=max_m, beam_width=width, evaluator=evk
+            )
+            results[evk] = res
+            row[evk] = {
+                "wall_s": res.stats.wall_time_s,
+                "eval_s": res.stats.eval_seconds,
+                "candidates": res.stats.create_acc_calls,
+                "cands_per_sec": res.stats.candidates_per_sec,
+                "feasible_found": res.stats.feasible_found,
+                "best_util": (
+                    res.best.max_util if res.best is not None else None
+                ),
+            }
+        sb, bb = results["scalar"].best, results["batched"].best
+        assert (sb is None) == (bb is None)
+        if sb is not None:
+            # the whole point of bit-compatibility: same winner
+            assert sb.max_util == bb.max_util and sb.splits == bb.splits, (
+                f"{label}: batched evaluator changed the winner"
+            )
+        row["speedup"] = (
+            row["scalar"]["wall_s"] / row["batched"]["wall_s"]
+        )
+        runs.append(row)
+        print(
+            f"{label:12s}: scalar {row['scalar']['wall_s']:.3f}s, "
+            f"batched {row['batched']['wall_s']:.3f}s "
+            f"({row['speedup']:.2f}x), same winner"
+        )
+    return {"runs": runs}
+
+
+def bench_srt_vs_tg(quick: bool) -> dict:
+    """Feasible-found counts per task set: the SRT beam configuration
+    vs the TG configuration of `explore`."""
+    plat = paper_platform(16)
+    grid_n = 2 if quick else 3
+    lo, hi = 0.4, 1.2
+    vals = [
+        lo + i * (hi - lo) / (grid_n - 1) if grid_n > 1 else lo
+        for i in range(grid_n)
+    ]
+    rows = []
+    combos = GRID_COMBOS[: 2 if quick else len(GRID_COMBOS)]
+    for combo in combos:
+        wls = [PAPER_WORKLOADS[c] for c in combo]
+        srt_found = tg_eq2 = tg_des = 0
+        points = 0
+        srt_rate = []
+        for ra in vals:
+            for rb in vals:
+                points += 1
+                ts = make_taskset(combo, (ra, rb), plat)
+                srt = explore(
+                    wls, ts, plat, method="beam", max_m=MAX_M, beam_width=8
+                )
+                srt_found += srt.best is not None
+                srt_rate.append(srt.stats.candidates_per_sec)
+                tg = explore(wls, ts, plat, method="tg", n_accs=MAX_M)
+                tg_eq2 += tg.tg_eq2_feasible
+                sims = tg_simtasks(tg.tg, ts)
+                des = simulate(sims, SimConfig(policy="edf"))
+                tg_des += des.schedulable
+        rows.append(
+            {
+                "combo": "+".join(combo),
+                "grid_points": points,
+                "srt_feasible": srt_found,
+                "tg_eq2_feasible": tg_eq2,
+                "tg_des_schedulable": tg_des,
+                "srt_cands_per_sec_mean": sum(srt_rate) / len(srt_rate),
+            }
+        )
+        print(
+            f"{'+'.join(combo):22s}: SRT {srt_found}/{points} feasible, "
+            f"TG eq2 {tg_eq2}/{points}, TG DES {tg_des}/{points}"
+        )
+    return {"grid": vals, "combos": rows}
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    core = bench_evaluator_core(quick)
+    search = bench_search(quick)
+    srt_tg = bench_srt_vs_tg(quick)
+    payload = {
+        "bench": "dse",
+        "quick": quick,
+        "min_eval_speedup": MIN_EVAL_SPEEDUP,
+        "evaluator_core": core,
+        "search": search,
+        "srt_vs_tg": srt_tg,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_dse.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {path}")
+
+    ok = True
+    if core["speedup"] < MIN_EVAL_SPEEDUP:
+        print(
+            f"FAIL: batched evaluator only {core['speedup']:.1f}x the "
+            f"scalar core (need >= {MIN_EVAL_SPEEDUP}x)",
+            file=sys.stderr,
+        )
+        ok = False
+    for row in search["runs"]:
+        if row["speedup"] <= 1.0:
+            print(
+                f"FAIL: batched search slower than scalar on "
+                f"{row['search']} ({row['speedup']:.2f}x)",
+                file=sys.stderr,
+            )
+            ok = False
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

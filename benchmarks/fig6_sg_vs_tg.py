@@ -22,9 +22,9 @@ from benchmarks.common import (
     taskset_for,
     write_csv,
 )
-from repro.core.dse.beam import beam_search
+from repro.core.dse.explore import explore
 from repro.core.dse.space import evaluate_design
-from repro.core.dse.throughput import throughput_guided_design, tg_simtasks
+from repro.core.dse.throughput import tg_simtasks
 from repro.core.workloads import PAPER_COMBOS
 from repro.scheduler.des import SimConfig, StageOverhead, simulate, simulate_taskset
 
@@ -40,14 +40,18 @@ def run(grid_n: int = 5):
         counts = {p: 0 for p in POLICIES}
         for ratios in period_grid(grid_n):
             ts = taskset_for(combo, ratios)
-            sg = beam_search(wls, ts, PLATFORM, max_m=MAX_M, beam_width=BEAM)
+            # SG and TG are the two configurations of the one driver
+            sg = explore(
+                wls, ts, PLATFORM, method="beam", max_m=MAX_M,
+                beam_width=BEAM,
+            )
             if sg.best is not None:
                 table = evaluate_design(sg.best.accs, sg.best.splits, wls, ts)
                 counts["sg_fifo"] += 1  # Eq.3 guarantee (FIFO, no overhead)
                 edf = simulate_taskset(table, ts, "edf")
                 counts["sg_edf"] += edf.schedulable
                 preempt["sg_edf"] += edf.preemptions
-            tg = throughput_guided_design(wls, ts, PLATFORM, MAX_M)
+            tg = explore(wls, ts, PLATFORM, method="tg", n_accs=MAX_M).tg
             sims = tg_simtasks(tg, ts)
             ovs = [
                 StageOverhead(o / 3, o / 3, o / 3) for o in tg.table.overhead

@@ -37,6 +37,7 @@ def run(chips: int = 8, ratios=(0.8, 0.8)):
                 else "-",
                 f"{r.best.max_util:.4f}" if r.best else "inf",
                 r.stats.create_acc_calls,
+                f"{r.stats.candidates_per_sec:.0f}",
                 len(r.succ_pts),
             ]
         )
@@ -51,12 +52,21 @@ def run(chips: int = 8, ratios=(0.8, 0.8)):
             else "-",
             f"{bf.best.max_util:.4f}" if bf.best else "inf",
             bf.stats.create_acc_calls,
+            f"{bf.stats.candidates_per_sec:.0f}",
             len(bf.succ_pts),
         ]
     )
     write_csv(
         "fig9_beam_quality.csv",
-        ["search", "wall_s", "first_feasible_s", "best_util", "create_acc", "feasible"],
+        [
+            "search",
+            "wall_s",
+            "first_feasible_s",
+            "best_util",
+            "create_acc",
+            "cands_per_sec",
+            "feasible",
+        ],
         rows,
     )
     b8, b16, brute = results["B8"], results["B16"], results["BF"]

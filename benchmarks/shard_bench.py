@@ -169,6 +169,24 @@ def run_point(
         "rate_limited_fraction": (
             rate_limited / scheduled if scheduled else None
         ),
+        # per-replica remaining capacity (the shard-aware headroom
+        # report): slacks + the worst admitted tenant's rate multiplier
+        "headroom": [
+            None
+            if hr is None
+            else {
+                "shard": hr.shard,
+                "tenants": list(hr.tenants),
+                "stage_slacks": list(hr.stage_slacks),
+                "bottleneck": hr.bottleneck,
+                "min_tenant_rate_multiplier": (
+                    min(hr.tenant_rate_multipliers.values())
+                    if hr.tenant_rate_multipliers
+                    else None
+                ),
+            }
+            for hr in report.headrooms
+        ],
         "wall_seconds": elapsed,
     }
 

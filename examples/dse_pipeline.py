@@ -2,9 +2,13 @@
 
 1. Extract minitron-4b's layer chain (the PHAROS task view of an LM),
 2. run the SRT-guided DSE for a 2-task serving mix (prefill task +
-   decode task with different periods) on a 16-chip slice,
+   decode task with different periods) on a 16-chip slice via the
+   unified `explore` driver (batched evaluator; the TG configuration
+   is shown alongside for contrast),
 3. show the chosen stage partition + per-stage utilizations,
-4. run the *equal-stage* variant on the SPMD pipeline executor
+4. provision a registry scenario straight from the DSE (`provision`:
+   design -> shard plan -> per-shard Eq. 3 contracts + headroom),
+5. run the *equal-stage* variant on the SPMD pipeline executor
    (4 fake CPU devices, ppermute streams) and validate it against the
    sequential backbone.
 
@@ -20,7 +24,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.dse.beam import beam_search
+from repro.core.dse import DSEConfig, explore, provision
 from repro.core.dse.space import evaluate_design
 from repro.core.perfmodel.hardware import paper_platform
 from repro.core.rt.schedulability import stage_utilizations
@@ -51,8 +55,11 @@ def main():
         Task(workload=wl_prefill, period=0.060, name="prefill"),
         Task(workload=wl_decode, period=0.015, name="decode"),
     ))
-    res = beam_search([wl_prefill, wl_decode], ts, platform,
-                      max_m=4, beam_width=8)
+    # two ~160-layer flattened chains: a layer-granular split grid has
+    # ~26k slice pairs per chip budget, so coarsen the boundaries to
+    # every 8 layers (the DSE still prices every layer exactly)
+    res = explore([wl_prefill, wl_decode], ts, platform,
+                  method="beam", max_m=4, beam_width=8, split_stride=8)
     if res.best is None:
         print("no feasible design at these periods; relax and retry")
         return
@@ -60,11 +67,28 @@ def main():
     table = evaluate_design(best.accs, best.splits,
                             [wl_prefill, wl_decode], ts)
     print(f"best: {best.n_stages} stages chips={[a.chips for a in best.accs]} "
-          f"max_util={best.max_util:.3f}")
+          f"max_util={best.max_util:.3f} "
+          f"({res.stats.candidates_per_sec:,.0f} candidates/s batched)")
     print("stage utilizations:",
           [f"{u:.3f}" for u in stage_utilizations(table, ts, False)])
     print("layer split (prefill):",
           [best.splits[k][0] for k in range(best.n_stages)])
+    tg = explore([wl_prefill, wl_decode], ts, platform, method="tg")
+    print(f"TG baseline (same driver, throughput objective): "
+          f"max_util={tg.tg.max_util:.3f} eq2_feasible={tg.tg_eq2_feasible}")
+
+    # -- DSE -> serving: provision a registry scenario ----------------
+    plan = provision("steady_city", platform,
+                     cfg=DSEConfig(method="beam", max_m=3, beam_width=4),
+                     shards=2, placement="least_loaded")
+    gw = plan.sharded_gateway()
+    gw.open()
+    print(f"\nprovisioned steady_city across K={plan.n_shards} shards "
+          f"({plan.placement}): assignment={plan.plan.assignment}, "
+          f"admission verified={gw.verify()}")
+    for hr in gw.headroom():
+        print(f"  shard {hr.shard}: tenants={list(hr.tenants)} "
+              f"slacks={[f'{s:.2f}' for s in hr.stage_slacks]}")
 
     # -- equal-stage SPMD executor ------------------------------------
     small = dataclasses.replace(

@@ -12,9 +12,13 @@
   its margin; `run_sharded_case` (every shard of a placed tenant set
   held to the full contract + bit-exact per-shard admission);
   `run_shedding_case` (overdriven traffic with identical shedding
-  armed in DES and runtime, release-matched surviving jobs); plus
+  armed in DES and runtime, release-matched surviving jobs);
+  `run_dse_case` (every DSE-claimed-feasible design held to the three
+  layers, and the best design provisioned into a `ShardedGateway`
+  that must serve the scenario's traffic violation-free); plus
   `run_wallclock_case`, the calibrated real-clock leg (gateway on
-  `WallClock` vs the measured `CostModel`).
+  `WallClock` vs the measured `CostModel`, optionally with
+  calibrated-admission mode: tenancy admitted against measured WCETs).
 
 See ``docs/conformance.md`` for the full contract and tolerance model.
 """
@@ -28,6 +32,7 @@ from repro.conformance.harness import (
     CaseResult,
     ConformanceConfig,
     ConformanceReport,
+    DSECaseResult,
     ShardedCaseResult,
     SheddingCaseResult,
     SheddingTaskRow,
@@ -38,6 +43,7 @@ from repro.conformance.harness import (
     regulate_trace,
     run_case,
     run_conformance,
+    run_dse_case,
     run_sharded_case,
     run_shedding_case,
     run_virtual_server,
@@ -54,6 +60,7 @@ __all__ = [
     "CaseResult",
     "ConformanceConfig",
     "ConformanceReport",
+    "DSECaseResult",
     "ShardedCaseResult",
     "SheddingCaseResult",
     "SheddingTaskRow",
@@ -64,6 +71,7 @@ __all__ = [
     "regulate_trace",
     "run_case",
     "run_conformance",
+    "run_dse_case",
     "run_sharded_case",
     "run_shedding_case",
     "run_virtual_server",

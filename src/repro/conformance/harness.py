@@ -173,6 +173,13 @@ class ConformanceConfig:
     #: ``measured <= margin * analytic bound`` rather than the model
     #: legs' near-equality
     wall_margin: float = 3.0
+    #: calibrated-admission mode (ROADMAP "conformance next steps"):
+    #: the wall gateway's tenancy admission runs against the *measured*
+    #: WCET contracts (`repro.traffic.admission.calibrated_requests`)
+    #: instead of the modeled ones — every tenant must still fit (the
+    #: wall timebase carries `wall_scale_headroom` of slack) and the
+    #: cached verdict must survive full re-analysis
+    calibrated_admission: bool = False
 
 
 @dataclass(frozen=True)
@@ -590,6 +597,202 @@ def run_sharded_case(
 
 
 # ---------------------------------------------------------------------------
+# the DSE case: every claimed-feasible design held to the serving stack
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DSECaseResult:
+    """`run_dse_case` result: the DSE's feasibility claims checked
+    against analysis, DES, runtime **and** a provisioned
+    `ShardedGateway` serving the scenario's traffic."""
+
+    scenario: str
+    policy: str
+    method: str
+    #: feasible designs the search claimed in total
+    n_claimed: int
+    #: max_util of each design actually pushed through the three layers
+    checked_utils: tuple[float, ...]
+    n_shards: int
+    placement: str
+    assignment: tuple[int, ...]
+    admitted: int
+    released: int
+    #: one full three-layer `run_case` per checked design
+    cases: tuple[CaseResult, ...]
+    dse_violations: tuple[Violation, ...]
+
+    @property
+    def violations(self) -> tuple[Violation, ...]:
+        return self.dse_violations + tuple(
+            v for c in self.cases for v in c.violations
+        )
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def run_dse_case(
+    scenario,
+    policy: str = "edf",
+    *,
+    platform=None,
+    shards: int = 2,
+    placement="least_loaded",
+    check_top: int = 2,
+    max_m: int = 3,
+    beam_width: int = 4,
+    cfg: ConformanceConfig | None = None,
+) -> DSECaseResult:
+    """Differentially verify the DSE's feasibility claims end to end.
+
+    The PHAROS pitch is that the SRT-guided DSE finds *feasible*
+    designs — so every design it claims feasible must actually be
+    feasible in the deployed stack, not just under Eq. 3 on the design
+    table. This case:
+
+    1. runs `explore` on the scenario's provisioning problem and takes
+       the best ``check_top`` claimed-feasible designs;
+    2. materializes each one (`traffic.scenarios.materialize`) and runs
+       the full three-layer `run_case` on it — the analysis leg must
+       agree the design is schedulable (``verdict_dse_claim``), and the
+       usual bound/ordering checks must hold;
+    3. provisions the best design into a `ShardedGateway`
+       (`repro.core.dse.provision`) and serves the scenario's traffic:
+       every tenant must be admitted on its shard
+       (``verdict_dse_admission``), each shard's cached Eq. 3 verdict
+       must survive full re-analysis (``verdict_dse_verify``), every
+       shard must complete work inside the horizon (``dse_no_jobs``),
+       and no shard may accumulate backlog (``verdict_dse_backlog``).
+    """
+    from repro.core.dse.explore import explore
+    from repro.core.dse.provision import provision
+    from repro.core.perfmodel.hardware import paper_platform
+    from repro.traffic.scenarios import (
+        get_scenario,
+        materialize,
+        resolve_problem,
+    )
+
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}")
+    cfg = cfg or ConformanceConfig()
+    platform = platform or paper_platform(16)
+    if isinstance(scenario, str):
+        scenario = get_scenario(scenario)
+    workloads, taskset = resolve_problem(scenario, platform)
+    res = explore(
+        workloads,
+        taskset,
+        platform,
+        method="beam",
+        max_m=max_m,
+        beam_width=beam_width,
+    )
+    if res.best is None:
+        raise ValueError(
+            f"scenario {scenario.name!r} has no feasible design to check"
+        )
+    claimed = [res.best] + [
+        dp for dp in res.succ_pts if dp is not res.best
+    ]
+    claimed = claimed[: max(1, check_top)]
+
+    violations: list[Violation] = []
+    cases: list[CaseResult] = []
+    for rank, dp in enumerate(claimed):
+        built = materialize(
+            scenario, workloads, taskset, dp, seed=cfg.seed
+        )
+        case = run_case(built, policy, cfg=cfg)
+        cases.append(case)
+        if not case.analysis_schedulable:
+            violations.append(
+                Violation(
+                    scenario.name, policy, "*", "verdict_dse_claim",
+                    dp.max_util, 1.0,
+                    f"DSE claimed design #{rank} feasible "
+                    f"(max_util={dp.max_util:.4f}) but the serve-path "
+                    "analysis disagrees",
+                )
+            )
+
+    # -- the provisioned gateway: DSE design -> shard plan -> traffic --
+    plan = provision(
+        scenario,
+        platform,
+        design=res.best,
+        shards=shards,
+        placement=placement,
+        policy=policy,
+        seed=cfg.seed,
+    )
+    gw = plan.sharded_gateway(max_dim=cfg.max_dim)
+    decisions = gw.open()
+    admitted = sum(1 for d in decisions if d.admitted)
+    for d in decisions:
+        if not d.admitted:
+            violations.append(
+                Violation(
+                    scenario.name, policy, d.request.name,
+                    "verdict_dse_admission",
+                    d.max_util, 1.0,
+                    "DSE-provisioned tenant rejected by its shard's "
+                    f"Eq. 3 admission: {d.reason}",
+                )
+            )
+    if not gw.verify():
+        violations.append(
+            Violation(
+                scenario.name, policy, "*", "verdict_dse_verify",
+                1.0, 0.0,
+                "a shard's cached Eq. 3 verdict disagrees with the "
+                "full re-analysis of its provisioned contract",
+            )
+        )
+    horizon = cfg.horizon_periods * max(t.period for t in taskset.tasks)
+    report = gw.run(horizon)
+    released = report.total_released()
+    for rep in report.reports:
+        if rep is None:
+            continue
+        sr = rep.server_report
+        worst = max(sr.in_flight.values(), default=0)
+        if sr.jobs_completed == 0:
+            violations.append(
+                Violation(
+                    scenario.name, policy, "*", "dse_no_jobs",
+                    0.0, 1.0,
+                    "a DSE-provisioned shard completed no jobs inside "
+                    "the horizon",
+                )
+            )
+        elif worst > cfg.backlog_limit:
+            violations.append(
+                Violation(
+                    scenario.name, policy, "*", "verdict_dse_backlog",
+                    float(worst), float(cfg.backlog_limit),
+                    "a DSE-provisioned shard accumulated backlog the "
+                    "claimed-feasible analysis says cannot happen",
+                )
+            )
+    return DSECaseResult(
+        scenario=scenario.name,
+        policy=policy,
+        method=res.method,
+        n_claimed=len(res.succ_pts),
+        checked_utils=tuple(dp.max_util for dp in claimed),
+        n_shards=plan.n_shards,
+        placement=plan.placement,
+        assignment=plan.plan.assignment,
+        admitted=admitted,
+        released=released,
+        cases=tuple(cases),
+        dse_violations=tuple(violations),
+    )
+
+
+# ---------------------------------------------------------------------------
 # the shedding case: overdriven traffic, shedding armed in DES & runtime
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
@@ -893,6 +1096,8 @@ class WallClockCase:
     horizon_s: float
     tasks: tuple[WallClockTask, ...]
     violations: tuple[Violation, ...]
+    #: which WCETs tenancy admission ran against ("model"/"calibrated")
+    admission_mode: str = "model"
 
     @property
     def ok(self) -> bool:
@@ -932,6 +1137,16 @@ def run_wallclock_case(
     above margin * bound), ``wall_no_jobs`` (a tenant finished nothing
     inside the horizon) and ``verdict_wall_backlog`` (runtime
     accumulated backlog the measured-WCET analysis says cannot happen).
+
+    With ``cfg.calibrated_admission`` the gateway's tenancy admission
+    runs against the **measured** WCET contracts
+    (`repro.traffic.admission.calibrated_requests` on the calibrated
+    `CostModel`) instead of the modeled ones — the ROADMAP's
+    calibrated-cost-model admission mode. Two extra violation kinds
+    guard it: ``calibrated_admission_reject`` (a tenant the measured
+    analysis must fit was rejected) and
+    ``verdict_calibrated_admission`` (cached verdict vs full measured
+    re-analysis disagree).
     """
     from repro.core.rt.task import Task, TaskSet
     from repro.pipeline.serve import PharosServer
@@ -1012,7 +1227,16 @@ def run_wallclock_case(
     # 4. the wall run: same regulated traces, replayed on the real
     # clock. Admission runs on raw WCETs (zero inserted overhead):
     # window-boundary deferral blocks, it does not inflate utilization
-    # — the same premise every other conformance leg uses.
+    # — the same premise every other conformance leg uses. In
+    # calibrated-admission mode the contracts are re-based onto the
+    # *measured* WCETs first, so tenancy admission answers against
+    # what this host actually does.
+    from repro.traffic.admission import calibrated_requests
+
+    if cfg.calibrated_admission:
+        gw_requests = list(calibrated_requests(measured, requests))
+    else:
+        gw_requests = list(requests)
     srv = PharosServer(serve_tasks, built.design.n_stages, policy=policy)
     admission = AdmissionController(
         [0.0] * built.design.n_stages,
@@ -1021,7 +1245,7 @@ def run_wallclock_case(
     gateway = TrafficGateway(
         srv,
         admission,
-        requests,
+        gw_requests,
         [TraceArrivals(times=tuple(tr)) for tr in traces],
         clock=WallClock(),
     )
@@ -1029,6 +1253,32 @@ def run_wallclock_case(
     sr = report.server_report
 
     violations: list[Violation] = []
+    if cfg.calibrated_admission:
+        # the measured analysis at `wall_scale_headroom` slack must
+        # admit every tenant, and the cached verdict must agree with a
+        # full re-analysis of the measured contracts
+        for d in report.decisions:
+            if not d.admitted:
+                violations.append(
+                    Violation(
+                        scenario, policy, d.request.name,
+                        "calibrated_admission_reject",
+                        d.max_util, 1.0,
+                        "measured-WCET contract rejected despite the "
+                        f"{cfg.wall_scale_headroom:g}x provisioning "
+                        f"headroom: {d.reason}",
+                    )
+                )
+        if not admission.verify():
+            violations.append(
+                Violation(
+                    scenario, policy, "*",
+                    "verdict_calibrated_admission",
+                    1.0, 0.0,
+                    "calibrated admission's cached Eq. 3 verdict "
+                    "disagrees with the full measured re-analysis",
+                )
+            )
     task_rows: list[WallClockTask] = []
     for i, t in enumerate(wall_taskset.tasks):
         rts = sorted(sr.response_times.get(t.name, []))
@@ -1082,6 +1332,9 @@ def run_wallclock_case(
         horizon_s=horizon,
         tasks=tuple(task_rows),
         violations=tuple(violations),
+        admission_mode=(
+            "calibrated" if cfg.calibrated_admission else "model"
+        ),
     )
 
 

@@ -1,4 +1,9 @@
-"""PHAROS design-space exploration (paper §4)."""
+"""PHAROS design-space exploration (paper §4).
+
+`explore` is the unified driver (SRT-guided beam/brute and the TG
+baseline as configurations of one entry point); `provision` bridges a
+search result into the serving stack (scenario + sharded gateway).
+"""
 from repro.core.dse.space import (
     DesignPoint,
     design_from_splits,
@@ -6,8 +11,18 @@ from repro.core.dse.space import (
     fixed_design,
 )
 from repro.core.dse.create_acc import LatencyCache, create_acc
+from repro.core.dse.batch_eval import BatchedDesignEvaluator, resolve_acc
+from repro.core.dse.objective import (
+    Constraint,
+    Eq3Constraint,
+    MinMaxUtil,
+    Objective,
+    TotalLatency,
+)
 from repro.core.dse.beam import BeamResult, BeamStats, beam_search
 from repro.core.dse.brute import brute_force_search
+from repro.core.dse.explore import DSEConfig, ExploreResult, explore
+from repro.core.dse.provision import ProvisionPlan, provision
 from repro.core.dse.throughput import (
     TGDesign,
     throughput_guided_design,
@@ -21,10 +36,22 @@ __all__ = [
     "fixed_design",
     "LatencyCache",
     "create_acc",
+    "BatchedDesignEvaluator",
+    "resolve_acc",
+    "Objective",
+    "Constraint",
+    "MinMaxUtil",
+    "TotalLatency",
+    "Eq3Constraint",
     "BeamResult",
     "BeamStats",
     "beam_search",
     "brute_force_search",
+    "DSEConfig",
+    "ExploreResult",
+    "explore",
+    "ProvisionPlan",
+    "provision",
     "TGDesign",
     "throughput_guided_design",
     "tg_simtasks",

@@ -13,6 +13,17 @@ each iteration.
 
 ``beam_width=None`` gives the brute-force BFS baseline (B = +inf,
 paper §5.4) used by `repro.core.dse.brute`.
+
+Evaluation is **batched**: each iteration enumerates every child of
+every parent, then prices all the new accelerators in one
+`BatchedDesignEvaluator.evaluate` call and all surviving remainders in
+a second (``evaluator="scalar"`` keeps the per-child `create_acc` loop
+for differential tests and the `benchmarks/dse_bench.py` baseline).
+Both paths are bit-identical — the batched evaluator reproduces the
+scalar floats exactly — so the search visits the same nodes, keeps the
+same frontier and returns the same winner either way. Pruning,
+feasibility and ranking are delegated to the `repro.core.dse.objective`
+layer; the defaults reproduce the paper's SRT-guided search.
 """
 from __future__ import annotations
 
@@ -20,11 +31,21 @@ import itertools
 import time
 from dataclasses import dataclass, field
 
-from repro.core.dse.create_acc import LatencyCache, Span, create_acc
-from repro.core.dse.space import DesignPoint, design_from_splits
+import numpy as np
+
+from repro.core.dse.batch_eval import BatchedDesignEvaluator
+from repro.core.dse.create_acc import (
+    _VALID_BLOCKS,
+    LatencyCache,
+    create_acc,
+)
+from repro.core.dse.objective import Constraint, Eq3Constraint, MinMaxUtil, Objective
+from repro.core.dse.space import DesignPoint, evaluate_design
 from repro.core.perfmodel.exec_model import AccDesign
 from repro.core.perfmodel.hardware import Platform
 from repro.core.rt.task import TaskSet, Workload
+
+_EVALUATORS = ("batched", "scalar")
 
 
 @dataclass
@@ -35,6 +56,24 @@ class BeamStats:
     wall_time_s: float = 0.0
     first_feasible_time_s: float | None = None
     feasible_found: int = 0
+    #: wall seconds spent inside the candidate evaluator (batched or
+    #: scalar) — the denominator of `candidates_per_sec`
+    eval_seconds: float = 0.0
+    evaluator: str = "batched"
+
+    @property
+    def candidates_evaluated(self) -> int:
+        """Accelerator candidates priced (alias of `create_acc_calls`:
+        the batched evaluator performs the same per-candidate work in
+        bulk)."""
+        return self.create_acc_calls
+
+    @property
+    def candidates_per_sec(self) -> float:
+        """Evaluated-candidates/sec throughput of the evaluator core."""
+        if self.eval_seconds <= 0.0:
+            return 0.0
+        return self.create_acc_calls / self.eval_seconds
 
 
 @dataclass
@@ -51,7 +90,32 @@ class _Node:
     accs: tuple[AccDesign, ...]
     splits: tuple[tuple[int, ...], ...]  # per stage: layer counts per task
     created_max_util: float  # max util among committed accelerators
-    guide: float  # ranking key: max(created, remain) util
+    guide: float  # ranking key: objective.guide(created, remain)
+
+
+class _ScalarEvaluator:
+    """Per-candidate `create_acc` loop with the batched call signature —
+    the pre-refactor inner loop, kept as the differential baseline."""
+
+    def __init__(self, workloads, taskset, cache: LatencyCache):
+        self.taskset = taskset
+        self.cache = cache
+        self._block_index = {b: i for i, b in enumerate(_VALID_BLOCKS)}
+
+    def evaluate(self, spans, chips):
+        C = len(chips)
+        util = np.empty(C)
+        block_idx = np.empty(C, dtype=np.int64)
+        for j in range(C):
+            acc, u, _lats = create_acc(
+                tuple((int(a), int(b)) for a, b in spans[j]),
+                int(chips[j]),
+                self.taskset,
+                self.cache,
+            )
+            util[j] = u
+            block_idx[j] = self._block_index.get(acc.block, 0)
+        return util, block_idx, None
 
 
 def beam_search(
@@ -61,32 +125,116 @@ def beam_search(
     max_m: int = 4,
     beam_width: int | None = 8,
     max_frontier: int = 200_000,
+    *,
+    objective: Objective | None = None,
+    constraint: Constraint | None = None,
+    evaluator: str = "batched",
+    split_stride: int = 1,
 ) -> BeamResult:
-    """Algorithm 1. Returns every feasible design found plus the best."""
+    """Algorithm 1. Returns every feasible design found plus the best.
+
+    ``split_stride`` coarsens the split grid for long layer chains:
+    slice boundaries are only allowed every ``split_stride`` layers
+    from each parent's frontier (a task's full remainder is always
+    takeable). ``1`` (default) is the paper's exact layer-granular
+    space; an LM chain of hundreds of flattened layers needs a coarser
+    grid to keep the child frontier tractable (`examples/dse_pipeline.py`).
+    """
     if len(workloads) != len(taskset):
         raise ValueError("workloads/taskset mismatch")
+    if split_stride < 1:
+        raise ValueError("split_stride must be >= 1")
+    if evaluator not in _EVALUATORS:
+        raise ValueError(
+            f"unknown evaluator {evaluator!r}; have {_EVALUATORS}"
+        )
+    objective = objective or MinMaxUtil()
+    constraint = constraint or Eq3Constraint()
     t0 = time.perf_counter()
     n = len(workloads)
     L = tuple(w.num_layers for w in workloads)
     R = platform.total_chips
     cache = LatencyCache(workloads)
-    stats = BeamStats()
+    ev = (
+        BatchedDesignEvaluator(workloads, taskset, cache=cache)
+        if evaluator == "batched"
+        else _ScalarEvaluator(workloads, taskset, cache)
+    )
+    stats = BeamStats(evaluator=evaluator)
     succ: list[DesignPoint] = []
     best: DesignPoint | None = None
 
-    def note_feasible(
-        accs: tuple[AccDesign, ...], splits: tuple[tuple[int, ...], ...]
-    ) -> None:
-        nonlocal best
-        dp = design_from_splits(accs, splits, workloads, taskset)
-        if dp.max_util > 1.0 + 1e-12:
+    def eval_batch(spans: np.ndarray, chips: np.ndarray):
+        te = time.perf_counter()
+        util, block_idx, _lats = ev.evaluate(spans, chips)
+        stats.eval_seconds += time.perf_counter() - te
+        stats.create_acc_calls += len(chips)
+        return util, block_idx
+
+    best_rank = float("inf")
+
+    def accept(dp: DesignPoint, rank_val: float) -> None:
+        """Feasibility gate + objective-ranked best tracking.
+        ``rank_val`` is `Objective.rank` over the design's two batched
+        metrics — max_util for the SRT objective, summed chain latency
+        for the throughput objective."""
+        nonlocal best, best_rank
+        if not constraint.accepts(dp.max_util):
             return
         succ.append(dp)
         stats.feasible_found += 1
         if stats.first_feasible_time_s is None:
             stats.first_feasible_time_s = time.perf_counter() - t0
-        if best is None or dp.max_util < best.max_util:
+        if best is None or rank_val < best_rank:
             best = dp
+            best_rank = rank_val
+
+    # feasible completions are collected during the walk and scored in
+    # one batched `design_metrics` call per iteration (bit-identical
+    # to the scalar `evaluate_design` path, which the scalar evaluator
+    # still runs inline as the differential baseline)
+    pending_feasible: list[tuple[tuple[AccDesign, ...], tuple]] = []
+
+    def note_feasible(
+        accs: tuple[AccDesign, ...], splits: tuple[tuple[int, ...], ...]
+    ) -> None:
+        if evaluator == "batched":
+            pending_feasible.append((accs, splits))
+            return
+        from repro.core.rt.schedulability import max_utilization
+
+        table = evaluate_design(accs, splits, workloads, taskset)
+        mu = max_utilization(table, taskset, preemptive=False)
+        total = sum(sum(row) for row in table.base)
+        accept(
+            DesignPoint(accs=accs, splits=splits, max_util=mu),
+            objective.rank(mu, total),
+        )
+
+    def flush_feasible() -> None:
+        if not pending_feasible:
+            return
+        te = time.perf_counter()
+        mus, totals = ev.design_metrics(pending_feasible)
+        stats.eval_seconds += time.perf_counter() - te
+        for (accs, splits), mu, total in zip(pending_feasible, mus, totals):
+            accept(
+                DesignPoint(accs=accs, splits=splits, max_util=float(mu)),
+                objective.rank(float(mu), float(total)),
+            )
+        pending_feasible.clear()
+
+    # AccDesign is frozen; share one instance per (chips, block) so the
+    # walk does not rebuild ~10^5 identical dataclasses on brute runs
+    acc_cache: dict[tuple[int, int], AccDesign] = {}
+
+    def make_acc(chips: int, block_idx: int) -> AccDesign:
+        key = (chips, block_idx)
+        acc = acc_cache.get(key)
+        if acc is None:
+            acc = AccDesign(chips=chips, block=_VALID_BLOCKS[block_idx])
+            acc_cache[key] = acc
+        return acc
 
     root = _Node(
         assigned=(0,) * n,
@@ -99,71 +247,127 @@ def beam_search(
     parents: list[_Node] = [root]
 
     for _m in range(2, max_m + 1):
-        children: dict[tuple, _Node] = {}
+        # -- enumerate every child of every parent (same nested order
+        # as the scalar seed loop: parent, then chip budget, then the
+        # per-task slice product) --------------------------------------
+        cands: list[tuple[_Node, int, int, tuple[int, ...], tuple[int, ...], tuple[int, ...], int]] = []
         for parent in parents:
             stats.parents_expanded += 1
             l, r = parent.assigned, parent.chips_used
             remaining = tuple(L[i] - l[i] for i in range(n))
             if sum(remaining) == 0:
                 continue
-            # enumerate the new accelerator's chip budget
+            # the consecutive-slice takes per task do not depend on the
+            # chip budget — enumerate them once per parent, then cross
+            # with every budget in the seed's (chips, nvec) order
+            if split_stride == 1:
+                ranges = [range(l[i], L[i] + 1) for i in range(n)]
+            else:
+                ranges = [
+                    list(range(l[i], L[i] + 1, split_stride))
+                    + ([L[i]] if (L[i] - l[i]) % split_stride else [])
+                    for i in range(n)
+                ]
+            slices = []
+            for nvec in itertools.product(*ranges):
+                take = tuple(nvec[i] - l[i] for i in range(n))
+                if sum(take) == 0:
+                    continue
+                left = tuple(L[i] - nvec[i] for i in range(n))
+                slices.append((nvec, take, left, sum(left)))
             for chips_new in range(1, R - r + 1):
                 chips_left = R - r - chips_new
-                # enumerate consecutive-slice takes per task
-                ranges = [range(l[i], L[i] + 1) for i in range(n)]
-                for nvec in itertools.product(*ranges):
-                    take = tuple(nvec[i] - l[i] for i in range(n))
-                    if sum(take) == 0:
-                        continue
-                    left = tuple(L[i] - nvec[i] for i in range(n))
-                    if sum(left) > 0 and chips_left < 1:
+                for nvec, take, left, left_sum in slices:
+                    if left_sum > 0 and chips_left < 1:
                         continue  # remainder would have no resources
-                    spans = tuple((l[i], nvec[i]) for i in range(n))
-                    new_acc, new_util, _ = create_acc(
-                        spans, chips_new, taskset, cache
+                    cands.append(
+                        (parent, chips_new, chips_left, nvec, take, left, left_sum)
                     )
-                    stats.create_acc_calls += 1
-                    if new_util > 1.0:  # line 11: prune
-                        continue
-                    accs = parent.accs + (new_acc,)
-                    splits = parent.splits + (take,)
-                    cmax = max(parent.created_max_util, new_util)
-                    if sum(left) == 0:
-                        # new accelerator consumed everything: complete
-                        note_feasible(accs, splits)
-                        continue
-                    rem_spans = tuple((nvec[i], L[i]) for i in range(n))
-                    rem_acc, rem_util, _ = create_acc(
-                        rem_spans, chips_left, taskset, cache
+
+        children: dict[tuple, _Node] = {}
+        if cands:
+            # -- batch 1: price every child's new accelerator ----------
+            spans_new = np.empty((len(cands), n, 2), dtype=np.int64)
+            chips_arr = np.empty(len(cands), dtype=np.int64)
+            for j, (parent, chips_new, _cl, nvec, _t, _l, _ls) in enumerate(
+                cands
+            ):
+                spans_new[j, :, 0] = parent.assigned
+                spans_new[j, :, 1] = nvec
+                chips_arr[j] = chips_new
+            utils_new, blocks_new = eval_batch(spans_new, chips_arr)
+            surv = ~constraint.prunes_batch(utils_new)  # line 11: prune
+
+            # -- batch 2: price the remainders of surviving children ---
+            rem_of = np.full(len(cands), -1, dtype=np.int64)
+            rem_idx = [
+                j
+                for j in np.flatnonzero(surv)
+                if cands[j][6] > 0  # remainder still has work
+            ]
+            if rem_idx:
+                spans_rem = np.empty((len(rem_idx), n, 2), dtype=np.int64)
+                chips_rem = np.empty(len(rem_idx), dtype=np.int64)
+                for t, j in enumerate(rem_idx):
+                    _p, _cn, chips_left, nvec, _t2, _l2, _ls2 = cands[j]
+                    spans_rem[t, :, 0] = nvec
+                    spans_rem[t, :, 1] = L
+                    chips_rem[t] = chips_left
+                    rem_of[j] = t
+                utils_rem, blocks_rem = eval_batch(spans_rem, chips_rem)
+
+            # -- walk candidates in enumeration order (identical
+            # feasibility / dedup / frontier bookkeeping to the seed) --
+            for j, (
+                parent,
+                chips_new,
+                chips_left,
+                nvec,
+                take,
+                left,
+                left_sum,
+            ) in enumerate(cands):
+                if not surv[j]:
+                    continue
+                new_acc = make_acc(chips_new, int(blocks_new[j]))
+                accs = parent.accs + (new_acc,)
+                splits = parent.splits + (take,)
+                cmax = max(parent.created_max_util, float(utils_new[j]))
+                if left_sum == 0:
+                    # new accelerator consumed everything: complete
+                    note_feasible(accs, splits)
+                    continue
+                t = int(rem_of[j])
+                rem_util = float(utils_rem[t])
+                if constraint.completes(rem_util):
+                    # lines 13-14: feasible completion
+                    rem_acc = make_acc(chips_left, int(blocks_rem[t]))
+                    note_feasible(accs + (rem_acc,), splits + (left,))
+                # line 12: retain for further partitioning. Guide =
+                # objective's admissible balance estimate over the
+                # stages still available (scoring the remainder as ONE
+                # accelerator systematically prunes children whose
+                # remainder is heavy but splittable).
+                stages_left = max(1, max_m - len(accs))
+                node = _Node(
+                    assigned=nvec,
+                    chips_used=parent.chips_used + chips_new,
+                    accs=accs,
+                    splits=splits,
+                    created_max_util=cmax,
+                    guide=objective.guide(cmax, rem_util, stages_left),
+                )
+                key = (nvec, parent.chips_used + chips_new, splits)
+                prev = children.get(key)
+                if prev is None or node.guide < prev.guide:
+                    children[key] = node
+                stats.children_generated += 1
+                if len(children) > max_frontier:
+                    raise RuntimeError(
+                        "frontier exceeded max_frontier; "
+                        "use a beam width for this problem size"
                     )
-                    stats.create_acc_calls += 1
-                    if rem_util <= 1.0:  # lines 13-14: feasible completion
-                        note_feasible(accs + (rem_acc,), splits + (left,))
-                    # line 12: retain for further partitioning. Guide =
-                    # utilization the completed design could reach if the
-                    # remainder split perfectly over the stages still
-                    # available (admissible balance estimate — scoring the
-                    # remainder as ONE accelerator systematically prunes
-                    # children whose remainder is heavy but splittable).
-                    stages_left = max(1, max_m - len(accs))
-                    node = _Node(
-                        assigned=nvec,
-                        chips_used=r + chips_new,
-                        accs=accs,
-                        splits=splits,
-                        created_max_util=cmax,
-                        guide=max(cmax, rem_util / stages_left),
-                    )
-                    key = (nvec, r + chips_new, splits)
-                    prev = children.get(key)
-                    if prev is None or node.guide < prev.guide:
-                        children[key] = node
-                    stats.children_generated += 1
-                    if len(children) > max_frontier:
-                        raise RuntimeError(
-                            "frontier exceeded max_frontier; "
-                            "use a beam width for this problem size"
-                        )
+        flush_feasible()
         ranked = sorted(children.values(), key=lambda c: c.guide)
         if beam_width is None:
             parents = ranked

@@ -17,7 +17,11 @@ def brute_force_search(
     platform: Platform,
     max_m: int = 4,
     max_frontier: int = 2_000_000,
+    **kwargs,
 ) -> BeamResult:
+    """Equivalent to ``explore(..., method="brute")``; extra keyword
+    arguments (``objective``, ``constraint``, ``evaluator``) pass
+    through to `beam_search`."""
     return beam_search(
         workloads,
         taskset,
@@ -25,4 +29,5 @@ def brute_force_search(
         max_m=max_m,
         beam_width=None,
         max_frontier=max_frontier,
+        **kwargs,
     )

@@ -32,12 +32,12 @@ class LatencyCache:
         self.workloads = workloads
         self._prefix: dict[tuple[int, int, tuple[int, int, int]], list[float]] = {}
 
-    def segment(
-        self, task_i: int, span: Span, chips: int, block: tuple[int, int, int]
-    ) -> float:
-        a, b = span
-        if a == b:
-            return 0.0
+    def prefix(
+        self, task_i: int, chips: int, block: tuple[int, int, int]
+    ) -> list[float]:
+        """The full prefix-sum row for (workload, chips, block) — the
+        accumulation the batched evaluator copies verbatim so its
+        latencies are bit-identical to the scalar path."""
         key = (task_i, chips, block)
         pre = self._prefix.get(key)
         if pre is None:
@@ -46,6 +46,15 @@ class LatencyCache:
             for layer in self.workloads[task_i].layers:
                 pre.append(pre[-1] + layer_latency(layer, acc))
             self._prefix[key] = pre
+        return pre
+
+    def segment(
+        self, task_i: int, span: Span, chips: int, block: tuple[int, int, int]
+    ) -> float:
+        a, b = span
+        if a == b:
+            return 0.0
+        pre = self.prefix(task_i, chips, block)
         return pre[b] - pre[a]
 
 

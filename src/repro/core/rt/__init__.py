@@ -29,6 +29,15 @@ from repro.core.rt.response_time import (
     edf_stage_bound,
     end_to_end_bounds,
 )
+from repro.core.rt.batch import (
+    batched_busy_period,
+    batched_end_to_end_bounds,
+    batched_max_utilization,
+    batched_srt_schedulable,
+    batched_stage_slacks,
+    batched_stage_utilizations,
+    batched_wcets,
+)
 
 __all__ = [
     "LayerDesc",
@@ -48,4 +57,11 @@ __all__ = [
     "fifo_stage_bound",
     "edf_stage_bound",
     "end_to_end_bounds",
+    "batched_busy_period",
+    "batched_end_to_end_bounds",
+    "batched_max_utilization",
+    "batched_srt_schedulable",
+    "batched_stage_slacks",
+    "batched_stage_utilizations",
+    "batched_wcets",
 ]

@@ -64,6 +64,10 @@ def busy_period(
     ]
     if not active:
         return blocking if blocking > 0.0 else 0.0
+    if any(math.isinf(j) for _, _, j in active):
+        # an active task with unbounded release jitter (its upstream
+        # stage saturated) makes this stage's busy period unbounded too
+        return math.inf
     u = sum(e / p for e, p, _ in active)
     if u >= 1.0 - 1e-12:
         return math.inf

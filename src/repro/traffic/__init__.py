@@ -29,6 +29,7 @@ from repro.traffic.admission import (
     AdmissionDecision,
     HeadroomReport,
     TaskRequest,
+    calibrated_requests,
 )
 from repro.traffic.arrival import (
     ArrivalProcess,
@@ -50,13 +51,16 @@ from repro.traffic.scenarios import (
     build,
     get_scenario,
     list_scenarios,
+    materialize,
     register,
+    resolve_problem,
 )
 from repro.traffic.shard import (
     HashByTenant,
     LeastLoaded,
     ShardedGateway,
     ShardedReport,
+    ShardHeadroom,
     ShardPlan,
     SlackAware,
     built_gateway,
@@ -77,6 +81,7 @@ __all__ = [
     "AdmissionDecision",
     "HeadroomReport",
     "TaskRequest",
+    "calibrated_requests",
     "ArrivalProcess",
     "PeriodicArrivals",
     "SporadicArrivals",
@@ -95,7 +100,9 @@ __all__ = [
     "build",
     "get_scenario",
     "list_scenarios",
+    "materialize",
     "register",
+    "resolve_problem",
     "BacklogMonitor",
     "RejectNewest",
     "ShedByValue",
@@ -106,6 +113,7 @@ __all__ = [
     "TokenBucket",
     "ShardedGateway",
     "ShardedReport",
+    "ShardHeadroom",
     "ShardPlan",
     "HashByTenant",
     "LeastLoaded",

@@ -23,6 +23,13 @@ Guaranteed vs best-effort: only *guaranteed* requests consume Eq. 2
 budget. A ``best_effort=True`` request is always admitted but carries no
 response-time guarantee (its jobs run at infinite deadline in the
 serving runtime) and contributes nothing to the cached utilization.
+
+Calibrated-admission mode: `calibrated_requests` /
+`AdmissionController.from_cost_model` swap every contract's modeled
+per-stage WCETs for a `repro.conformance.CostModel`'s — typically a
+`CostModel.calibrate` measurement of the serving host — so admission
+runs against what the host actually does instead of what the TPU exec
+model predicts (`run_wallclock_case` exercises the mode end to end).
 """
 from __future__ import annotations
 
@@ -117,6 +124,39 @@ class HeadroomReport:
         return max(self.stages, key=lambda s: s.utilization).stage
 
 
+def calibrated_requests(
+    cost_model, requests: Sequence[TaskRequest]
+) -> tuple[TaskRequest, ...]:
+    """The same tenant contracts with measured per-stage WCETs.
+
+    ``cost_model`` is a `repro.conformance.CostModel` whose task order
+    matches ``requests`` (both come from the scenario's serve bundle);
+    each request keeps its period/deadline/value — the traffic contract
+    — while ``base`` becomes the model's `segment_cost` row. With a
+    `CostModel.calibrate` model this is serving-host calibration; with
+    `CostModel.from_exec_model` it reproduces the modeled contracts.
+    """
+    if cost_model.n_tasks != len(requests):
+        raise ValueError(
+            f"cost model prices {cost_model.n_tasks} tasks, "
+            f"got {len(requests)} requests"
+        )
+    return tuple(
+        TaskRequest(
+            name=r.name,
+            base=tuple(
+                cost_model.segment_cost(i, k)
+                for k in range(cost_model.n_stages)
+            ),
+            period=r.period,
+            deadline=r.deadline,
+            value=r.value,
+            best_effort=r.best_effort,
+        )
+        for i, r in enumerate(requests)
+    )
+
+
 class AdmissionController:
     """Incremental Eq. 2/3 oracle for online admission.
 
@@ -170,6 +210,41 @@ class AdmissionController:
                 raise ValueError(
                     f"seed task {t.name!r} itself violates Eq. 3 "
                     f"(max util {dec.max_util:.3f})"
+                )
+        return ctl
+
+    @classmethod
+    def from_cost_model(
+        cls,
+        cost_model,
+        requests: Sequence[TaskRequest],
+        *,
+        preemptive: bool = True,
+        util_cap: float = 1.0,
+        strict: bool = True,
+    ) -> "AdmissionController":
+        """Calibrated-admission mode: a controller whose resident set
+        was admitted against a `CostModel`'s (typically *measured*)
+        WCETs instead of the requests' modeled ones.
+
+        Overheads are zero — the window-boundary runtime blocks, it
+        does not inflate utilization (the conformance premise) — and
+        every contract is re-based via `calibrated_requests` before
+        admission. ``strict`` raises if a measured contract does not
+        fit; ``strict=False`` records the rejection in ``decisions``
+        and continues (the conformance case turns it into a violation).
+        """
+        ctl = cls(
+            [0.0] * cost_model.n_stages,
+            preemptive=preemptive,
+            util_cap=util_cap,
+        )
+        for req in calibrated_requests(cost_model, requests):
+            dec = ctl.admit(req)
+            if strict and not dec.admitted:
+                raise ValueError(
+                    f"measured contract {req.name!r} violates Eq. 3 "
+                    f"on the calibrated host: {dec.reason}"
                 )
         return ctl
 

@@ -295,18 +295,11 @@ class BuiltScenario:
         )
 
 
-def build(
-    scenario: TrafficScenario,
-    platform,
-    *,
-    max_m: int = 3,
-    beam_width: int = 6,
-    seed: int = 0,
-) -> BuiltScenario:
-    """Resolve workloads, size periods, run the DSE, seed the traffic."""
-    from repro.core.dse.beam import beam_search
-    from repro.core.dse.space import evaluate_design
-
+def resolve_problem(
+    scenario: TrafficScenario, platform
+) -> tuple[list[Workload], TaskSet]:
+    """Resolve workloads and provisioned periods — the DSE problem a
+    scenario defines, before any design is chosen."""
     workloads, periods = [], []
     for spec in scenario.tenants:
         w = resolve_workload(spec)
@@ -320,17 +313,25 @@ def build(
             for w, p, spec in zip(workloads, periods, scenario.tenants)
         )
     )
-    res = beam_search(
-        workloads, taskset, platform, max_m=max_m, beam_width=beam_width
-    )
-    if res.best is None:
-        raise ValueError(
-            f"scenario {scenario.name!r} has no feasible design on "
-            f"{platform.name}: lower the ratios or the provisioning"
-        )
-    table = evaluate_design(
-        res.best.accs, res.best.splits, workloads, taskset
-    )
+    return workloads, taskset
+
+
+def materialize(
+    scenario: TrafficScenario,
+    workloads: list[Workload],
+    taskset: TaskSet,
+    design,
+    *,
+    seed: int = 0,
+) -> BuiltScenario:
+    """Turn a chosen `DesignPoint` into a full `BuiltScenario`: segment
+    table, admission contracts and seeded traffic. This is the
+    DSE -> serving half of `build`, split out so the provisioning
+    bridge (`repro.core.dse.provision`) can materialize *any* claimed-
+    feasible design — not just the one `build` would have searched."""
+    from repro.core.dse.space import evaluate_design
+
+    table = evaluate_design(design.accs, design.splits, workloads, taskset)
     requests = tuple(
         TaskRequest(
             name=spec.name,
@@ -352,11 +353,46 @@ def build(
         scenario=scenario,
         workloads=tuple(workloads),
         taskset=taskset,
-        design=res.best,
+        design=design,
         table=table,
         requests=requests,
         arrivals=arrivals,
     )
+
+
+def build(
+    scenario: TrafficScenario,
+    platform,
+    *,
+    max_m: int = 3,
+    beam_width: int = 6,
+    seed: int = 0,
+    design=None,
+) -> BuiltScenario:
+    """Resolve workloads, size periods, run the DSE, seed the traffic.
+
+    ``design`` (a `DesignPoint`) skips the search and materializes the
+    given design instead — the `repro.core.dse.provision` path.
+    """
+    from repro.core.dse.explore import explore
+
+    workloads, taskset = resolve_problem(scenario, platform)
+    if design is None:
+        res = explore(
+            workloads,
+            taskset,
+            platform,
+            method="beam",
+            max_m=max_m,
+            beam_width=beam_width,
+        )
+        design = res.best
+        if design is None:
+            raise ValueError(
+                f"scenario {scenario.name!r} has no feasible design on "
+                f"{platform.name}: lower the ratios or the provisioning"
+            )
+    return materialize(scenario, workloads, taskset, design, seed=seed)
 
 
 # ---------------------------------------------------------------------------

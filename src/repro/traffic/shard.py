@@ -181,12 +181,82 @@ class ShardPlan:
 
 
 @dataclass(frozen=True)
+class ShardHeadroom:
+    """Remaining capacity of one shard replica — the operator's
+    "how much more fits on this copy of the pipeline" answer.
+
+    ``stage_slacks`` follows `repro.core.rt.stage_slacks` semantics
+    (``1 - u^k`` with the tiny-negative clamp); `max_admissible_rate`
+    is the `repro.core.rt.max_admissible_rate` bound evaluated against
+    this shard's admitted set."""
+
+    shard: int
+    tenants: tuple[str, ...]
+    stage_utilizations: tuple[float, ...]
+    stage_slacks: tuple[float, ...]
+    #: per admitted tenant: max rate multiplier keeping Eq. 3
+    tenant_rate_multipliers: dict[str, float]
+    overheads: tuple[float, ...]
+    preemptive: bool
+
+    @property
+    def bottleneck(self) -> int:
+        return int(
+            max(
+                range(len(self.stage_utilizations)),
+                key=self.stage_utilizations.__getitem__,
+            )
+        )
+
+    def max_admissible_rate(self, base: Sequence[float]) -> float:
+        """Largest release rate (jobs/s) of a probe task with per-stage
+        WCETs ``base`` this shard can still absorb under Eq. 3."""
+        if len(base) != len(self.stage_slacks):
+            raise ValueError("probe WCET vector length != n_stages")
+        rate = float("inf")
+        for k, b in enumerate(base):
+            if b <= 0.0:
+                continue
+            e = b + (self.overheads[k] if self.preemptive else 0.0)
+            rate = min(rate, max(0.0, self.stage_slacks[k]) / e)
+        return rate
+
+
+def _shard_headroom(shard: int, gw: TrafficGateway) -> ShardHeadroom:
+    """Headroom snapshot of one shard from its admission controller."""
+    from repro.core.rt.schedulability import (
+        stage_slacks as rt_stage_slacks,
+    )
+
+    ctl = gw.admission
+    view = ctl.to_analysis()
+    if view is None:
+        slacks = tuple(1.0 for _ in range(ctl.n_stages))
+    else:
+        table, ts = view
+        slacks = tuple(rt_stage_slacks(table, ts, ctl.preemptive))
+    hr = ctl.headroom_report()
+    return ShardHeadroom(
+        shard=shard,
+        tenants=tuple(ctl.names()),
+        stage_utilizations=ctl.utilizations(),
+        stage_slacks=slacks,
+        tenant_rate_multipliers=dict(hr.tenant_rate_multipliers),
+        overheads=ctl.overheads,
+        preemptive=ctl.preemptive,
+    )
+
+
+@dataclass(frozen=True)
 class ShardedReport:
     """Per-shard `GatewayReport`s plus the plan that produced them.
     Empty shards carry ``None``."""
 
     plan: ShardPlan
     reports: tuple[GatewayReport | None, ...]
+    #: per-shard remaining capacity (`ShardHeadroom`; None for empty
+    #: shards) — the ROADMAP's shard-aware headroom report
+    headrooms: tuple[ShardHeadroom | None, ...] = ()
 
     def tenant(self, name: str) -> TenantStats:
         for rep in self.reports:
@@ -405,6 +475,14 @@ class ShardedGateway:
             if gw is not None
         )
 
+    def headroom(self) -> tuple[ShardHeadroom | None, ...]:
+        """Per-shard remaining-capacity snapshot (run `open` first —
+        before admission every shard trivially reports full slack)."""
+        return tuple(
+            _shard_headroom(k, gw) if gw is not None else None
+            for k, gw in enumerate(self.gateways)
+        )
+
     def run(
         self,
         horizon_s: float,
@@ -418,4 +496,6 @@ class ShardedGateway:
             else None
             for gw in self.gateways
         )
-        return ShardedReport(plan=self.plan, reports=reports)
+        return ShardedReport(
+            plan=self.plan, reports=reports, headrooms=self.headroom()
+        )

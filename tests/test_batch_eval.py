@@ -1,0 +1,295 @@
+"""Batched-vs-scalar bit-exactness, and the beam regression pins.
+
+The vectorized DSE rests on one contract: the batched evaluators
+(`repro.core.dse.batch_eval`, `repro.core.rt.batch`) return **the same
+float64 bits** as the scalar routines they replace, so swapping them
+into the search changes zero decisions. The property suite here
+asserts exact ``==`` (not approx) across randomized design points, and
+the regression pins hold the searched winners to the values the
+pre-refactor scalar code produced on the Fig. 9 problems.
+"""
+import math
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dse.batch_eval import BatchedDesignEvaluator, resolve_acc
+from repro.core.dse.beam import beam_search
+from repro.core.dse.brute import brute_force_search
+from repro.core.dse.create_acc import LatencyCache, create_acc
+from repro.core.dse.space import design_from_splits
+from repro.core.perfmodel.hardware import paper_platform
+from repro.core.rt.batch import (
+    batched_busy_period,
+    batched_end_to_end_bounds,
+    batched_max_utilization,
+    batched_srt_schedulable,
+    batched_stage_slacks,
+    batched_stage_utilizations,
+)
+from repro.core.rt.response_time import busy_period, end_to_end_bounds
+from repro.core.rt.schedulability import (
+    max_utilization,
+    srt_schedulable,
+    stage_slacks,
+    stage_utilizations,
+)
+from repro.core.rt.task import LayerDesc, SegmentTable, Task, TaskSet, Workload
+from repro.core.workloads import PAPER_WORKLOADS, make_taskset
+
+PLAT16 = paper_platform(16)
+COMBO = ("pointnet", "deit_t", "resmlp")
+WLS = [PAPER_WORKLOADS[c] for c in COMBO]
+TS = make_taskset(COMBO, (0.8, 0.6, 0.5), PLAT16)
+
+_W = Workload("w", (LayerDesc("l", 8, 8, 8),))
+
+
+def _same(a: float, b: float) -> bool:
+    """Exact equality, treating inf == inf as equal."""
+    return a == b or (math.isinf(a) and math.isinf(b))
+
+
+# ---------------------------------------------------------------------------
+# property: batched create_acc == scalar create_acc, bitwise
+# ---------------------------------------------------------------------------
+@pytest.mark.property
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_batched_create_acc_bit_identical(seed):
+    rng = random.Random(seed)
+    cache = LatencyCache(WLS)
+    ev = BatchedDesignEvaluator(WLS, TS, cache=cache)
+    spans, chips = [], []
+    for _ in range(64):
+        spans.append(
+            [
+                (a, rng.randint(a, w.num_layers))
+                for w in WLS
+                for a in (rng.randint(0, w.num_layers),)
+            ]
+        )
+        # includes the degenerate chips <= 0 branch
+        chips.append(rng.randint(-1, PLAT16.total_chips))
+    util, block_idx, lats = ev.evaluate(np.array(spans), np.array(chips))
+    for j, (sp, ch) in enumerate(zip(spans, chips)):
+        acc, s_util, s_lats = create_acc(tuple(sp), ch, TS, cache)
+        assert _same(s_util, float(util[j]))
+        assert acc == resolve_acc(ch, int(block_idx[j]))
+        assert all(_same(a, b) for a, b in zip(s_lats, lats[j]))
+
+
+# ---------------------------------------------------------------------------
+# property: batched Eq. 2/3 + slacks + bounds == scalar, bitwise
+# ---------------------------------------------------------------------------
+@st.composite
+def table_batch(draw):
+    n = draw(st.integers(1, 4))
+    K = draw(st.integers(1, 4))
+    periods = [draw(st.floats(0.01, 2.0, allow_nan=False)) for _ in range(n)]
+    C = draw(st.integers(1, 6))
+    base = [
+        [
+            [
+                draw(st.floats(0.0, 1.2, allow_nan=False)) * p
+                if draw(st.integers(0, 1))
+                else 0.0
+                for _ in range(K)
+            ]
+            for p in periods
+        ]
+        for _ in range(C)
+    ]
+    overhead = [draw(st.floats(0.0, 0.01, allow_nan=False)) for _ in range(K)]
+    blocking = [draw(st.floats(0.0, 0.02, allow_nan=False)) for _ in range(K)]
+    return periods, base, overhead, blocking
+
+
+@pytest.mark.property
+@settings(max_examples=40, deadline=None)
+@given(table_batch())
+def test_property_batched_rt_analysis_bit_identical(tb):
+    periods, base, overhead, blocking = tb
+    ts = TaskSet(tasks=tuple(Task(workload=_W, period=p) for p in periods))
+    for preemptive in (False, True):
+        b_util = batched_stage_utilizations(base, overhead, ts, preemptive)
+        b_max = batched_max_utilization(base, overhead, ts, preemptive)
+        b_ok = batched_srt_schedulable(base, overhead, ts, preemptive)
+        b_slack = batched_stage_slacks(base, overhead, ts, preemptive)
+        for c, rows in enumerate(base):
+            t = SegmentTable(
+                base=[list(r) for r in rows], overhead=list(overhead)
+            )
+            assert list(b_util[c]) == stage_utilizations(t, ts, preemptive)
+            assert b_max[c] == max_utilization(t, ts, preemptive)
+            assert bool(b_ok[c]) == srt_schedulable(t, ts, preemptive)
+            assert list(b_slack[c]) == stage_slacks(t, ts, preemptive)
+    for policy in ("fifo", "edf"):
+        bb = batched_end_to_end_bounds(
+            base, overhead, ts, policy, blocking=blocking
+        )
+        for c, rows in enumerate(base):
+            t = SegmentTable(
+                base=[list(r) for r in rows], overhead=list(overhead)
+            )
+            sb = end_to_end_bounds(t, ts, policy, blocking=blocking)
+            assert all(_same(x, y) for x, y in zip(bb[c], sb))
+
+
+@pytest.mark.property
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_batched_busy_period_bit_identical(seed):
+    rng = random.Random(seed)
+    n = rng.randint(1, 5)
+    periods = [rng.uniform(0.01, 2.0) for _ in range(n)]
+    C = 8
+    e = [
+        [rng.choice([0.0, rng.uniform(0.0, p)]) for p in periods]
+        for _ in range(C)
+    ]
+    j = [[rng.uniform(0.0, 0.5) for _ in periods] for _ in range(C)]
+    blk = rng.uniform(0.0, 0.1)
+    out = batched_busy_period(np.array(e), periods, np.array(j), blk)
+    for c in range(C):
+        assert _same(float(out[c]), busy_period(e[c], periods, j[c], blocking=blk))
+
+
+# ---------------------------------------------------------------------------
+# property: batched design_max_utils == design_from_splits, bitwise
+# ---------------------------------------------------------------------------
+@pytest.mark.property
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_property_design_max_utils_bit_identical(seed):
+    rng = random.Random(seed)
+    ev = BatchedDesignEvaluator(WLS, TS)
+    from repro.core.dse.create_acc import _VALID_BLOCKS
+    from repro.core.perfmodel.exec_model import AccDesign
+
+    designs = []
+    for _ in range(32):
+        n_stages = rng.randint(1, 4)
+        accs = tuple(
+            AccDesign(
+                chips=rng.randint(1, 6),
+                block=rng.choice(_VALID_BLOCKS),
+            )
+            for _ in range(n_stages)
+        )
+        splits = []
+        for w in WLS:
+            cuts = sorted(
+                rng.randint(0, w.num_layers) for _ in range(n_stages - 1)
+            )
+            edges = [0] + cuts + [w.num_layers]
+            splits.append(
+                [edges[k + 1] - edges[k] for k in range(n_stages)]
+            )
+        splits = tuple(
+            tuple(splits[i][k] for i in range(len(WLS)))
+            for k in range(n_stages)
+        )
+        designs.append((accs, splits))
+    mus = ev.design_max_utils(designs)
+    for (accs, splits), mu in zip(designs, mus):
+        dp = design_from_splits(accs, splits, WLS, TS)
+        assert dp.max_util == float(mu)
+
+
+# ---------------------------------------------------------------------------
+# whole-search equivalence: batched and scalar evaluators, same search
+# ---------------------------------------------------------------------------
+def test_beam_search_scalar_and_batched_evaluators_agree():
+    plat = paper_platform(8)
+    combo = ("pointnet", "deit_t")
+    wls = [PAPER_WORKLOADS[c] for c in combo]
+    ts = make_taskset(combo, (0.8, 0.8), plat)
+    rb = beam_search(wls, ts, plat, max_m=4, beam_width=8, evaluator="batched")
+    rs = beam_search(wls, ts, plat, max_m=4, beam_width=8, evaluator="scalar")
+    assert rb.stats.create_acc_calls == rs.stats.create_acc_calls
+    assert rb.best.max_util == rs.best.max_util
+    assert rb.best.splits == rs.best.splits
+    assert rb.best.accs == rs.best.accs
+    assert [
+        (d.max_util, d.splits, d.accs) for d in rb.succ_pts
+    ] == [(d.max_util, d.splits, d.accs) for d in rs.succ_pts]
+    with pytest.raises(ValueError, match="evaluator"):
+        beam_search(wls, ts, plat, evaluator="vectorized")
+
+
+# ---------------------------------------------------------------------------
+# fixed-seed regression pins: the Fig. 9 problems' exact winners,
+# recorded from the pre-refactor scalar implementation
+# ---------------------------------------------------------------------------
+#: (beam width -> (max_util, splits, chips)) on pointnet+deit_t,
+#: paper_platform(8), ratios (0.8, 0.8), max_m=4
+FIG9_PINS = {
+    1: (
+        0.6658158891586672,
+        ((4, 1), (2, 0), (0, 4), (2, 5)),
+        (1, 1, 2, 4),
+    ),
+    4: (
+        0.6522945815752179,
+        ((4, 1), (3, 0), (1, 3), (0, 6)),
+        (1, 1, 1, 5),
+    ),
+    8: (
+        0.6502023895711038,
+        ((4, 1), (4, 0), (0, 3), (0, 6)),
+        (1, 1, 1, 5),
+    ),
+    16: (
+        0.5727108411007862,
+        ((1, 2), (3, 3), (2, 1), (2, 4)),
+        (2, 1, 1, 4),
+    ),
+}
+
+
+@pytest.mark.parametrize("width", sorted(FIG9_PINS))
+def test_fig9_beam_winner_pinned(width):
+    """The refactor must not move a single winner: these exact floats,
+    splits and chip allocations came from the seed-era scalar search on
+    the Fig. 9 problem."""
+    plat = paper_platform(8)
+    combo = ("pointnet", "deit_t")
+    wls = [PAPER_WORKLOADS[c] for c in combo]
+    ts = make_taskset(combo, (0.8, 0.8), plat)
+    exp_util, exp_splits, exp_chips = FIG9_PINS[width]
+    res = beam_search(wls, ts, plat, max_m=4, beam_width=width)
+    assert res.best is not None
+    assert res.best.max_util == exp_util
+    assert res.best.splits == exp_splits
+    assert tuple(a.chips for a in res.best.accs) == exp_chips
+
+
+def test_small_brute_force_winner_pinned():
+    """Brute-force pin on the 6-chip slice (the test-suite-sized BFS
+    problem), recorded pre-refactor."""
+    plat = paper_platform(6)
+    combo = ("pointnet", "deit_t")
+    wls = [PAPER_WORKLOADS[c] for c in combo]
+    ts = make_taskset(combo, (0.8, 0.8), plat)
+    res = beam_search(wls, ts, plat, max_m=3, beam_width=2)
+    assert res.best.max_util == 0.8208713754508719
+    assert res.best.splits == ((2, 7), (6, 3))
+    assert tuple(a.chips for a in res.best.accs) == (5, 1)
+    brute = brute_force_search(wls, ts, plat, max_m=3)
+    assert brute.best.max_util <= res.best.max_util
+
+
+def test_beam_stats_report_eval_rate():
+    plat = paper_platform(8)
+    combo = ("pointnet", "deit_t")
+    wls = [PAPER_WORKLOADS[c] for c in combo]
+    ts = make_taskset(combo, (0.8, 0.8), plat)
+    res = beam_search(wls, ts, plat, max_m=3, beam_width=4)
+    st_ = res.stats
+    assert st_.evaluator == "batched"
+    assert st_.candidates_evaluated == st_.create_acc_calls > 0
+    assert 0.0 < st_.eval_seconds <= st_.wall_time_s
+    assert st_.candidates_per_sec > 0.0

@@ -706,8 +706,9 @@ def test_wallclock_case_on_steady_city():
 #: the registry slice the wall-clock leg covers inside the CI time
 #: budget (each case calibrates + replays real GEMMs on the real
 #: clock); everything else is skip-marked until the budget grows.
-#: ``steady_city`` is covered by the dedicated mechanics test above.
-WALLCLOCK_CI_BUDGET = ("rush_hour", "sensor_fusion")
+#: ``steady_city`` is covered by the dedicated mechanics test above;
+#: ``sharded_city`` joined once the PR-4 budget skips freed room.
+WALLCLOCK_CI_BUDGET = ("rush_hour", "sensor_fusion", "sharded_city")
 WALLCLOCK_KINDS = {"wall_vs_model", "wall_no_jobs", "verdict_wall_backlog"}
 
 
@@ -744,3 +745,103 @@ def test_wallclock_case_verdicts_across_registry(name):
     for row in case.tasks:
         assert row.jobs > 0
         assert math.isfinite(row.predicted_bound)
+
+
+# ---------------------------------------------------------------------------
+# calibrated-admission mode (ROADMAP "conformance next steps")
+# ---------------------------------------------------------------------------
+def test_calibrated_admission_wallclock_case():
+    """The satellite conformance case: the wall gateway's tenancy
+    admission runs against the *measured* WCET contracts. Every tenant
+    must fit (the wall timebase carries the provisioning headroom), the
+    cached verdict must survive the full measured re-analysis, and the
+    case itself must stay clean under the usual host-noise retry."""
+    from repro.core.perfmodel.hardware import paper_platform
+    from repro.traffic.scenarios import build, get_scenario
+
+    built = build(
+        get_scenario("steady_city"), paper_platform(16), beam_width=4
+    )
+    cfg = ConformanceConfig(
+        wall_horizon_periods=8.0,
+        wall_reps=2,
+        wall_margin=8.0,
+        calibrated_admission=True,
+    )
+    # two host-noise retries: this case calibrates AND replays real
+    # GEMMs, so a throttle landing between the probe and the run blows
+    # the wall margin without any model defect (tier-1 runs under heavy
+    # parallel load); the admission assertions are exact either way
+    case = run_wallclock_case(built, "edf", cfg=cfg)
+    for _ in range(2):
+        if case.ok:
+            break
+        case = run_wallclock_case(built, "edf", cfg=cfg)
+    assert case.admission_mode == "calibrated"
+    assert case.ok, [str(v) for v in case.violations]
+    for row in case.tasks:
+        assert row.jobs > 0
+
+
+def test_calibrated_requests_and_controller_from_cost_model():
+    """`calibrated_requests` swaps contract WCETs for the cost model's;
+    `AdmissionController.from_cost_model` admits the measured set with
+    a bit-exact cache, and `strict` raises on an oversubscribed host."""
+    from repro.core.perfmodel.hardware import paper_platform
+    from repro.traffic.admission import calibrated_requests
+    from repro.traffic.scenarios import build, get_scenario
+
+    built = build(
+        get_scenario("steady_city"), paper_platform(16), beam_width=4
+    )
+    serve_tasks, requests, _arr = built.serve_bundle(period_scale=1.0)
+    cm = built.conformance_cost_model(serve_tasks)
+    cal = calibrated_requests(cm, requests)
+    assert [r.name for r in cal] == [r.name for r in requests]
+    for i, (r, c) in enumerate(zip(requests, cal)):
+        assert c.period == r.period and c.value == r.value
+        assert c.base == tuple(
+            cm.segment_cost(i, k) for k in range(cm.n_stages)
+        )
+    ctl = AdmissionController.from_cost_model(
+        cm, requests, preemptive=True
+    )
+    assert len(ctl.admitted) == len(requests)
+    assert ctl.verify()
+    # an artificially slow host (scaled costs) must trip strict mode
+    slow = cm.scaled(1e6)
+    with pytest.raises(ValueError, match="calibrated host"):
+        AdmissionController.from_cost_model(slow, requests)
+    lax = AdmissionController.from_cost_model(
+        slow, requests, strict=False
+    )
+    assert any(not d.admitted for d in lax.decisions)
+    with pytest.raises(ValueError, match="cost model"):
+        calibrated_requests(cm, requests[:1])
+
+
+# ---------------------------------------------------------------------------
+# the DSE conformance case: claimed-feasible -> actually feasible
+# ---------------------------------------------------------------------------
+def test_run_dse_case_verifies_claims_and_provisioned_gateway():
+    """`run_dse_case` pushes the top claimed-feasible designs through
+    all three layers and serves the scenario on a DSE-provisioned
+    2-shard gateway — all with zero violations on a feasible scenario,
+    and with the claimed designs ordered best-first."""
+    from repro.conformance import run_dse_case
+
+    cfg = ConformanceConfig(horizon_periods=16.0)
+    res = run_dse_case(
+        "steady_city", "edf", shards=2, check_top=2, cfg=cfg
+    )
+    assert res.ok, [str(v) for v in res.violations]
+    assert res.method == "beam"
+    assert res.n_claimed >= len(res.checked_utils) >= 1
+    assert res.checked_utils[0] == min(res.checked_utils)
+    assert all(u <= 1.0 + EPS for u in res.checked_utils)
+    assert res.n_shards == 2
+    assert len(res.assignment) == 2  # steady_city has two tenants
+    assert res.admitted == 2 and res.released > 0
+    for case in res.cases:
+        assert case.analysis_schedulable
+        assert case.des_schedulable and case.server_bounded

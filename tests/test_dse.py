@@ -1,9 +1,17 @@
-"""DSE tests: beam search (Alg. 1), brute force, TG baseline, create_acc."""
+"""DSE tests: beam search (Alg. 1), brute force, TG baseline, create_acc,
+the unified `explore` driver and the `provision` bridge."""
 import pytest
 
 from repro.core.dse.beam import beam_search
 from repro.core.dse.brute import brute_force_search
 from repro.core.dse.create_acc import LatencyCache, create_acc
+from repro.core.dse.explore import DSEConfig, ExploreResult, explore
+from repro.core.dse.objective import (
+    Eq3Constraint,
+    MinMaxUtil,
+    TotalLatency,
+)
+from repro.core.dse.provision import provision
 from repro.core.dse.space import evaluate_design, fixed_design
 from repro.core.dse.throughput import throughput_guided_design, tg_simtasks
 from repro.core.perfmodel.hardware import paper_platform
@@ -88,6 +96,199 @@ def test_create_acc_edge_cases():
     _, u4, _ = create_acc(spans_all, 4, ts, cache)
     _, u16, _ = create_acc(spans_all, 16, ts, cache)
     assert u16 <= u4 + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# the unified explore() driver
+# ---------------------------------------------------------------------------
+def test_explore_beam_equals_beam_search(feasible_result):
+    ts, res = feasible_result
+    uni = explore(WLS, ts, PLAT, method="beam", max_m=4, beam_width=8)
+    assert uni.method == "beam" and uni.objective == "min_max_util"
+    assert uni.best.max_util == res.best.max_util
+    assert uni.best.splits == res.best.splits
+    assert uni.score == res.best.max_util
+    assert uni.feasible_found == res.stats.feasible_found
+    assert [d.max_util for d in uni.succ_pts] == [
+        d.max_util for d in res.succ_pts
+    ]
+    br = uni.as_beam_result()
+    assert br.best is uni.best and br.succ_pts is uni.succ_pts
+
+
+def test_explore_brute_is_infinite_beam():
+    small = [PAPER_WORKLOADS["pointnet"], PAPER_WORKLOADS["deit_t"]]
+    plat = paper_platform(6)
+    ts = make_taskset(("pointnet", "deit_t"), (0.8, 0.8), plat)
+    uni = explore(small, ts, plat, method="brute", max_m=3)
+    ref = brute_force_search(small, ts, plat, max_m=3)
+    assert uni.best.max_util == ref.best.max_util
+    assert uni.stats.create_acc_calls == ref.stats.create_acc_calls
+
+
+def test_explore_tg_configuration():
+    ts = make_taskset(COMBO, (1.0, 1.0), PLAT)
+    uni = explore(WLS, ts, PLAT, method="tg", n_accs=4)
+    ref = throughput_guided_design(WLS, ts, PLAT, n_accs=4)
+    assert uni.method == "tg" and uni.objective == "total_latency"
+    assert uni.best is None and not uni.succ_pts
+    assert uni.tg is not None and uni.tg.max_util == ref.max_util
+    assert uni.tg_eq2_feasible == (ref.max_util <= 1.0 + 1e-12)
+    # the throughput objective scores the summed chain latency
+    assert uni.score == pytest.approx(
+        sum(sum(row) for row in ref.table.base), rel=1e-12
+    )
+    assert uni.stats.create_acc_calls > 0
+    assert uni.stats.wall_time_s > 0.0
+
+
+def test_explore_rejects_unknown_method():
+    ts = make_taskset(COMBO, (1.0, 1.0), PLAT)
+    with pytest.raises(ValueError, match="method"):
+        explore(WLS, ts, PLAT, method="anneal")
+
+
+def test_objective_constraint_defaults_match_seed_literals():
+    obj, con = MinMaxUtil(), Eq3Constraint()
+    assert obj.guide(0.4, 1.5, 3) == max(0.4, 0.5)
+    assert obj.rank(0.7, 123.0) == 0.7
+    assert TotalLatency().rank(0.7, 123.0) == 123.0
+    assert con.prunes(1.0 + 1e-9) and not con.prunes(1.0)
+    assert con.completes(1.0) and not con.completes(1.0 + 1e-9)
+    assert con.accepts(1.0 + 1e-13) and not con.accepts(1.0 + 1e-11)
+
+
+def test_beam_under_latency_objective_ranks_by_latency():
+    """`explore(objective=TotalLatency())` on the beam must pick the
+    feasible design minimizing summed chain latency — not max_util —
+    and report `score` in latency units for every method."""
+    from repro.core.dse.space import evaluate_design as _ed
+
+    ts = make_taskset(COMBO, (0.7, 0.7), PLAT)
+
+    def latency_of(dp):
+        t = _ed(dp.accs, dp.splits, WLS, ts)
+        return sum(sum(row) for row in t.base)
+
+    srt = explore(WLS, ts, PLAT, method="beam", max_m=3, beam_width=4)
+    lat = explore(
+        WLS,
+        ts,
+        PLAT,
+        cfg=DSEConfig(
+            method="beam",
+            max_m=3,
+            beam_width=4,
+            objective=TotalLatency(),
+        ),
+    )
+    assert lat.objective == "total_latency"
+    # same feasible set (the constraint, not the objective, gates it)
+    assert len(lat.succ_pts) == len(srt.succ_pts)
+    # the winner is latency-minimal over every claimed-feasible design
+    best_lat = latency_of(lat.best)
+    assert all(best_lat <= latency_of(dp) + 1e-15 for dp in lat.succ_pts)
+    # and the reported score is that latency, in latency units
+    assert lat.score == pytest.approx(best_lat, rel=1e-12)
+    assert srt.score == srt.best.max_util
+
+
+def test_tightened_constraint_caps_claimed_designs():
+    ts = make_taskset(COMBO, (0.7, 0.7), PLAT)
+    free = explore(WLS, ts, PLAT, method="beam", max_m=4, beam_width=8)
+    capped = explore(
+        WLS,
+        ts,
+        PLAT,
+        cfg=DSEConfig(
+            method="beam",
+            max_m=4,
+            beam_width=8,
+            constraint=Eq3Constraint(cap=0.8),
+        ),
+    )
+    assert capped.best is not None
+    assert capped.best.max_util <= 0.8 + 1e-12
+    assert all(d.max_util <= 0.8 + 1e-12 for d in capped.succ_pts)
+    # a margin search can only shrink the feasible set
+    assert 0 < len(capped.succ_pts) < len(free.succ_pts)
+
+
+def test_split_stride_coarsens_the_grid_and_stays_valid():
+    """``split_stride`` bounds the child frontier on long chains: the
+    searched space is a subset of the stride-1 space, splits land on
+    the stride grid (full remainders excepted), and every claimed
+    design still covers all layers and passes Eq. 3."""
+    ts = make_taskset(COMBO, (0.7, 0.7), PLAT)
+    fine = beam_search(WLS, ts, PLAT, max_m=3, beam_width=4)
+    coarse = beam_search(
+        WLS, ts, PLAT, max_m=3, beam_width=4, split_stride=2
+    )
+    assert coarse.best is not None
+    # a subset of the space can only do as well or worse
+    assert coarse.best.max_util >= fine.best.max_util - 1e-12
+    assert coarse.stats.create_acc_calls < fine.stats.create_acc_calls
+    for dp in coarse.succ_pts[:20]:
+        assert dp.max_util <= 1.0 + 1e-9
+        for i, w in enumerate(WLS):
+            counts = [dp.splits[k][i] for k in range(dp.n_stages)]
+            assert sum(counts) == w.num_layers
+            # boundaries sit on the stride grid except a final remainder
+            edge = 0
+            for c in counts[:-1]:
+                edge += c
+                assert edge % 2 == 0 or edge == w.num_layers
+    with pytest.raises(ValueError, match="split_stride"):
+        beam_search(WLS, ts, PLAT, split_stride=0)
+
+
+# ---------------------------------------------------------------------------
+# the provision bridge
+# ---------------------------------------------------------------------------
+def test_provision_binds_design_to_sharded_plan():
+    from repro.traffic.scenarios import get_scenario, resolve_problem
+
+    scen = get_scenario("steady_city")
+    workloads, taskset = resolve_problem(scen, PLAT)
+    res = explore(workloads, taskset, PLAT, method="beam", max_m=3,
+                  beam_width=4)
+    plan = provision(
+        "steady_city", PLAT, result=res, shards=2, placement="least_loaded"
+    )
+    assert plan.design is res.best
+    assert plan.built.design is res.best
+    assert plan.n_shards == 2
+    assert plan.policy == scen.policy
+    # contracts partition the tenants per the plan
+    names = [r.name for shard in plan.contracts for r in shard]
+    assert sorted(names) == sorted(r.name for r in plan.built.requests)
+    # every shard's contract admits (Eq. 3 per replica)
+    ctls = plan.admission_controllers()
+    assert all(c.verify() for c in ctls)
+    utils = plan.shard_utilizations()
+    for ctl, u in zip(ctls, utils):
+        assert ctl.utilizations() == u
+    # and the gateway built from the plan reuses the same placement
+    gw = plan.sharded_gateway()
+    assert gw.plan.assignment == plan.plan.assignment
+    gw.open()
+    assert gw.verify()
+
+
+def test_provision_requires_a_feasible_design():
+    # an unmeetable margin cap: steady_city's best sits near 0.95
+    with pytest.raises(ValueError, match="no feasible"):
+        provision(
+            "steady_city",
+            PLAT,
+            cfg=DSEConfig(
+                method="beam",
+                max_m=3,
+                beam_width=4,
+                constraint=Eq3Constraint(cap=0.2),
+            ),
+            shards=1,
+        )
 
 
 def test_throughput_guided_design_structure():

@@ -207,3 +207,75 @@ def test_sharded_gateway_tolerates_empty_shards():
 def test_sharded_gateway_rejects_bad_shard_count():
     with pytest.raises(ValueError, match="shard"):
         ShardedGateway.from_built(_built("steady_city"), shards=0)
+
+
+# ---------------------------------------------------------------------------
+# shard-aware headroom reports
+# ---------------------------------------------------------------------------
+def test_shard_headroom_matches_per_shard_admission_state():
+    from repro.core.rt.schedulability import (
+        max_admissible_rate,
+        stage_slacks,
+        task_rate_sensitivity,
+    )
+
+    built = _built("sharded_city")
+    gw = ShardedGateway.from_built(built, shards=2, placement="least_loaded")
+    gw.open()
+    headrooms = gw.headroom()
+    assert len(headrooms) == 2
+    probe = built.requests[0].base
+    for k, hr in enumerate(headrooms):
+        assert hr.shard == k
+        members = gw.plan.members[k]
+        assert hr.tenants == tuple(built.requests[i].name for i in members)
+        ctl = gw.gateways[k].admission
+        # utilizations mirror the shard controller's cache exactly
+        assert hr.stage_utilizations == ctl.utilizations()
+        # slacks / rate sensitivity equal the core.rt analysis of the
+        # shard's admitted subset
+        table, ts = ctl.to_analysis()
+        assert hr.stage_slacks == tuple(
+            stage_slacks(table, ts, ctl.preemptive)
+        )
+        assert hr.max_admissible_rate(probe) == max_admissible_rate(
+            table, ts, probe, ctl.preemptive
+        )
+        sens = task_rate_sensitivity(table, ts, ctl.preemptive)
+        assert hr.tenant_rate_multipliers == {
+            name: s for name, s in zip(hr.tenants, sens)
+        }
+        assert 0 <= hr.bottleneck < len(hr.stage_utilizations)
+        # sharding leaves real capacity on the table per replica
+        assert all(s > 0.0 for s in hr.stage_slacks)
+    with pytest.raises(ValueError, match="probe"):
+        headrooms[0].max_admissible_rate((0.1,))
+
+
+def test_sharded_report_carries_headrooms():
+    built = _built("steady_city")
+    horizon = 10.0 * max(t.period for t in built.taskset.tasks)
+    gw = ShardedGateway.from_built(built, shards=4, placement="least_loaded")
+    rep = gw.run(horizon)
+    assert len(rep.headrooms) == 4
+    for k, hr in enumerate(rep.headrooms):
+        if rep.reports[k] is None:
+            assert hr is None
+        else:
+            assert hr is not None and hr.shard == k
+            # empty probe stage contributes inf; any active stage caps it
+            assert hr.max_admissible_rate(
+                built.requests[0].base
+            ) < float("inf")
+
+
+def test_k1_headroom_equals_unsharded_controller():
+    built = _built("steady_city")
+    plain = built_gateway(built)
+    plain.open()
+    gw = ShardedGateway.from_built(built, shards=1)
+    gw.open()
+    (hr,) = gw.headroom()
+    assert hr.stage_utilizations == plain.admission.utilizations()
+    probe = built.requests[0].base
+    assert hr.max_admissible_rate(probe) == plain.admission.max_rate(probe)
