@@ -9,6 +9,11 @@ analytic bound dominates the DES, the DES dominates the executing
 runtime (within the tie-breaking tolerance), and no layer's
 schedulability verdict inverts.
 
+The sweep runs with ``record_traces`` on: every case row carries its
+host ``wall_seconds`` and a ``trace_diff`` verdict (``identical`` or
+the first divergent event) from the `repro.obs` schedule traces — the
+bench asserts the verdict exists for every registry case.
+
 Five CI-enforced invariants ride on top of the sweep:
 
 - **tightened tolerance** — the window-boundary DES must hold a
@@ -74,7 +79,13 @@ def _num(x: float):
 
 
 def bench_conformance(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
-    cfg = ConformanceConfig(horizon_periods=24.0 if quick else 60.0)
+    # record_traces: every case carries a DES-vs-runtime trace_diff —
+    # the bench asserts a verdict (identical or first-divergence) is
+    # present for every registry case, so a tripped tolerance always
+    # arrives with its pinpointed divergent event
+    cfg = ConformanceConfig(
+        horizon_periods=24.0 if quick else 60.0, record_traces=True
+    )
     # CI invariant: the window-boundary DES must run under a strictly
     # tighter DES-vs-runtime tolerance than the idealized-preemption
     # DES of PR 2 needed — loosening it back is a regression
@@ -102,6 +113,10 @@ def bench_conformance(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
     elapsed = time.perf_counter() - t0
     cases = []
     for c in report.cases:
+        assert c.trace_diff is not None, (
+            f"{c.scenario}/{c.policy}: record_traces produced no "
+            "trace_diff verdict"
+        )
         cases.append(
             {
                 "scenario": c.scenario,
@@ -109,6 +124,8 @@ def bench_conformance(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
                 "analysis_schedulable": c.analysis_schedulable,
                 "des_schedulable": c.des_schedulable,
                 "server_bounded": c.server_bounded,
+                "wall_seconds": c.wall_seconds,
+                "trace_diff": c.trace_diff.summary(),
                 "tasks": [
                     {
                         "task": t.task,
@@ -349,7 +366,14 @@ def bench_wallclock(quick: bool, built) -> tuple[dict, bool]:
     """The calibrated wall-clock case (gateway on the real clock vs the
     measured `CostModel`), with one retry: a CPU-quota throttle or load
     spike landing mid-run inflates every wall number at once, which is
-    host noise, not a model defect. Two failures in a row count."""
+    host noise, not a model defect. Two failures in a row count.
+
+    One `TraceRecorder` is shared across both attempts with
+    ``annotate(attempt=n)``, so a throttle-discarded first attempt's
+    schedule events stay in the trace (per-attempt event counts land in
+    the payload) instead of vanishing with the retry."""
+    from repro.obs import TraceRecorder
+
     cfg = ConformanceConfig(
         wall_horizon_periods=8.0 if quick else 12.0,
         wall_reps=2 if quick else 3,
@@ -357,14 +381,18 @@ def bench_wallclock(quick: bool, built) -> tuple[dict, bool]:
         # against the measured WCET contracts on this host
         calibrated_admission=True,
     )
+    recorder = TraceRecorder()
     attempts = []
     ok = False
     for attempt in range(2):
+        recorder.annotate(attempt=attempt)
+        events_before = len(recorder.events)
         t0 = time.perf_counter()
-        case = run_wallclock_case(built, "edf", cfg=cfg)
+        case = run_wallclock_case(built, "edf", cfg=cfg, trace=recorder)
         attempts.append(
             {
                 "attempt": attempt,
+                "trace_events": len(recorder.events) - events_before,
                 "policy": case.policy,
                 "admission_mode": case.admission_mode,
                 "period_scale": case.period_scale,

@@ -14,6 +14,8 @@ disarmed, reporting per (K, placement, ratelimit):
   scenario's MMPP camera and Poisson segmentation tenants are
   overdriven 3x, so backlog-triggered shedding engages on the shards
   that host them — unless the rate limiter trims them first);
+- **response percentiles** — per-tenant p50/p95/p99 response times via
+  the shared `ServerReport.response_percentiles` helper;
 - **rate-limited fraction** — releases refused by the per-tenant token
   buckets (value-weighted, armed in front of every shard's admission).
   The armed rows show the tentpole division of labour: the bucket
@@ -145,12 +147,19 @@ def run_point(
     rate_limited = report.total_rate_limited()
     completed = 0
     misses = 0
+    # per-tenant response-time percentiles via the shared
+    # `ServerReport.response_percentiles` helper (nearest-rank, the
+    # same summary `repro.obs.MetricsRegistry` reports)
+    response_pctl: dict[str, dict[str, float]] = {}
     for rep in report.reports:
         if rep is None:
             continue
         sr = rep.server_report
         completed += sr.jobs_completed
         misses += sum(sr.deadline_misses.values())
+        for name, times in sr.response_times.items():
+            if times:
+                response_pctl[name] = sr.response_percentiles(name)
     return {
         "shards": shards,
         "placement": placement,
@@ -163,6 +172,7 @@ def run_point(
         "completed": completed,
         "deadline_misses": misses,
         "miss_rate": (misses / completed) if completed else None,
+        "response_percentiles_s": response_pctl,
         "shed": shed,
         "shed_fraction": (shed / scheduled) if scheduled else None,
         "rate_limited": rate_limited,

@@ -69,9 +69,12 @@ Modeling notes that make the comparison apples-to-apples:
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, replace
 
 from repro.conformance.costmodel import CostModel
+from repro.obs.diff import TraceDiff, trace_diff
+from repro.obs.trace import TraceRecorder
 from repro.core.rt.response_time import end_to_end_bounds
 from repro.core.rt.schedulability import srt_schedulable
 from repro.core.rt.task import SegmentTable
@@ -157,6 +160,12 @@ class ConformanceConfig:
     #: window/stage structure (keeps LM-tenant chains host-runnable)
     max_dim: int = 512
     seed: int = 0
+    #: record DES and runtime schedule traces (`repro.obs`) during
+    #: `run_case` and attach a first-divergence `trace_diff` to the
+    #: `CaseResult` — a tripped tolerance then names the exact event
+    #: where the layers parted ways instead of just the worst job.
+    #: Off by default: tracing is opt-in everywhere
+    record_traces: bool = False
     # -- wall-clock case (`run_wallclock_case`) -----------------------
     #: horizon of the wall run, in multiples of the longest wall period
     wall_horizon_periods: float = 12.0
@@ -227,6 +236,13 @@ class CaseResult:
     server_bounded: bool
     tasks: tuple[TaskConformance, ...]
     violations: tuple[Violation, ...]
+    #: DES-vs-runtime first-divergence diagnosis, aligned under the
+    #: case's own per-task conformance allowance (None unless
+    #: `ConformanceConfig.record_traces`)
+    trace_diff: TraceDiff | None = None
+    #: host wall-clock seconds this case took (all three layers) —
+    #: trend-tracked by ``benchmarks/conformance_bench.py``
+    wall_seconds: float = 0.0
 
     @property
     def ok(self) -> bool:
@@ -299,10 +315,13 @@ def run_virtual_server(
     cost_model: CostModel,
     traces,
     horizon: float,
+    *,
+    trace=None,
 ):
     """Drive a cost-model `PharosServer` with explicit release traces on
     a `VirtualClock`, event-to-event (no quantization, no shedding — the
-    conformance leg must see the raw runtime)."""
+    conformance leg must see the raw runtime). ``trace`` (a
+    `repro.obs.TraceRecorder`) captures the runtime's schedule events."""
     from repro.pipeline.serve import PharosServer
     from repro.traffic.clock import VirtualClock
 
@@ -314,6 +333,7 @@ def run_virtual_server(
         cost_model=cost_model,
         clock=clk.now,
         sleep=clk.sleep,
+        trace=trace,
     )
     sched = sorted(
         (t, i) for i, trace in enumerate(traces) for t in trace
@@ -351,6 +371,7 @@ def run_case(
     if policy not in POLICIES:
         raise ValueError(f"unknown policy {policy!r}")
     cfg = cfg or ConformanceConfig()
+    t_start = time.perf_counter()
     scenario = built.scenario.name
     taskset = built.taskset
     preemptive = policy == "edf"
@@ -392,6 +413,8 @@ def run_case(
     # limited-preemption semantics — jobs execute the CostModel's
     # window chunks and preemption defers to chunk boundaries, so the
     # DES-vs-runtime gap is tie-breaking noise, not a quantum
+    des_tr = TraceRecorder() if cfg.record_traces else None
+    srv_tr = TraceRecorder() if cfg.record_traces else None
     des: SimResult = simulate_taskset(
         table,
         taskset,
@@ -401,11 +424,13 @@ def run_case(
         arrivals=traces,
         chunk_schedules=cm.chunk_schedule(),
         preemption="window",
+        trace=des_tr,
     )
 
     # layer 3: the executing runtime in model-driven virtual time
     srv = run_virtual_server(
-        serve_tasks, built.design.n_stages, policy, cm, traces, horizon
+        serve_tasks, built.design.n_stages, policy, cm, traces, horizon,
+        trace=srv_tr,
     )
 
     # ---- compare ----
@@ -419,6 +444,7 @@ def run_case(
     ]
     violations: list[Violation] = []
     task_rows: list[TaskConformance] = []
+    allow_by_task: dict[str, float] = {}
     for i, t in enumerate(taskset.tasks):
         r_des = des.response_times[i]
         r_srv = srv.response_times.get(t.name, [])
@@ -441,6 +467,7 @@ def run_case(
         # slower one on exactly that job (the runtime-slower direction
         # is still caught through in_flight/backlog below).
         allow = des_max * cfg.tol_rel + cfg.quantum_slack * visit_quanta[i]
+        allow_by_task[t.name] = allow
         worst = None  # (excess, job index)
         for j, (rd, rs) in enumerate(zip(r_des, r_srv)):
             if rs > rd + allow and (worst is None or rs - rd > worst[0]):
@@ -490,6 +517,24 @@ def run_case(
                 "backlog",
             )
         )
+    # ---- trace-level differential diagnosis ----
+    # Align the two event streams under the same per-task allowance the
+    # job-wise compare used: a tripped des_vs_server tolerance then
+    # carries the *first* event where the layers parted ways, turning a
+    # failed number into a pinpointed schedule divergence.
+    diff = None
+    if cfg.record_traces:
+        diff = trace_diff(
+            des_tr, srv_tr, time_tol=allow_by_task,
+            names=("des", "runtime"),
+        )
+        if diff.divergence is not None:
+            violations = [
+                replace(v, detail=f"{v.detail}; first divergence: "
+                        f"{diff.divergence}")
+                if v.kind == "des_vs_server" else v
+                for v in violations
+            ]
     return CaseResult(
         scenario=scenario,
         policy=policy,
@@ -498,6 +543,8 @@ def run_case(
         server_bounded=server_bounded,
         tasks=tuple(task_rows),
         violations=tuple(violations),
+        trace_diff=diff,
+        wall_seconds=time.perf_counter() - t_start,
     )
 
 
@@ -1109,6 +1156,7 @@ def run_wallclock_case(
     policy: str = "edf",
     *,
     cfg: ConformanceConfig | None = None,
+    trace=None,
 ) -> WallClockCase:
     """ROADMAP's calibrated wall-clock conformance case: run the
     `TrafficGateway` on a **real** `WallClock` and check the observed
@@ -1147,6 +1195,12 @@ def run_wallclock_case(
     analysis must fit was rejected) and
     ``verdict_calibrated_admission`` (cached verdict vs full measured
     re-analysis disagree).
+
+    ``trace`` (a `repro.obs.TraceRecorder`) captures the wall run's
+    gateway and server schedule events. Callers that retry on host
+    throttle should pass one shared recorder across attempts (tagging
+    each via `repro.obs.TraceRecorder.annotate`), so a discarded first
+    attempt's measurements stay visible instead of being lost.
     """
     from repro.core.rt.task import Task, TaskSet
     from repro.pipeline.serve import PharosServer
@@ -1237,7 +1291,9 @@ def run_wallclock_case(
         gw_requests = list(calibrated_requests(measured, requests))
     else:
         gw_requests = list(requests)
-    srv = PharosServer(serve_tasks, built.design.n_stages, policy=policy)
+    srv = PharosServer(
+        serve_tasks, built.design.n_stages, policy=policy, trace=trace
+    )
     admission = AdmissionController(
         [0.0] * built.design.n_stages,
         preemptive=(policy == "edf"),
@@ -1248,6 +1304,7 @@ def run_wallclock_case(
         gw_requests,
         [TraceArrivals(times=tuple(tr)) for tr in traces],
         clock=WallClock(),
+        trace=trace,
     )
     report = gateway.run(horizon, warmup=True)
     sr = report.server_report

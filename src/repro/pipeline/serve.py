@@ -252,6 +252,31 @@ class ServerReport:
     def total_in_flight(self) -> int:
         return sum(self.in_flight.values())
 
+    def response_percentiles(
+        self, name: str, qs=(50, 95, 99)
+    ) -> dict[str, float]:
+        """Nearest-rank response-time percentiles of one tenant
+        (`repro.obs.metrics.percentile` — the one shared
+        implementation)."""
+        from repro.obs.metrics import percentile_summary
+
+        return percentile_summary(self.response_times.get(name, []), qs)
+
+    def tardiness_percentiles(
+        self, name: str, deadline: float, qs=(50, 95, 99)
+    ) -> dict[str, float]:
+        """Per-tenant tardiness (``max(0, response - deadline)``)
+        percentiles against the given relative deadline."""
+        from repro.obs.metrics import percentile_summary
+
+        return percentile_summary(
+            [
+                max(0.0, r - deadline)
+                for r in self.response_times.get(name, [])
+            ],
+            qs,
+        )
+
 
 class PharosServer:
     """Decentralized pipelined serving with FIFO/EDF + preemption.
@@ -268,6 +293,14 @@ class PharosServer:
     window boundary, and completions are stamped at the modeled finish
     time. Requires an injected (virtual) clock — advancing a wall clock
     by modeled WCETs would be meaningless.
+
+    ``trace`` (a `repro.obs.TraceRecorder`) captures the runtime's
+    schedule as structured events — release / dispatch /
+    preempt_store / preempt_load (xi = 0: the virtual executor keeps
+    accumulators resident, nothing spills) / segment_end / complete /
+    deadline_miss — stamped on the injected clock; ``trace_shard`` tags
+    every event with the shard index when the server backs one
+    `ShardedGateway` replica. None (the default) emits nothing.
     """
 
     def __init__(
@@ -283,6 +316,8 @@ class PharosServer:
         clock=None,
         sleep=None,
         cost_model=None,
+        trace=None,
+        trace_shard: int = -1,
     ):
         if policy not in ("fifo", "edf"):
             raise ValueError(policy)
@@ -322,6 +357,14 @@ class PharosServer:
         self.cost_model = cost_model
         self.clock = clock if clock is not None else time.perf_counter
         self.sleep = sleep if sleep is not None else time.sleep
+        # schedule-trace handle (repro.obs.TraceRecorder), resolved
+        # once: disabled tracing emits nothing and costs nothing
+        self._tr = (
+            trace
+            if trace is not None and getattr(trace, "enabled", False)
+            else None
+        )
+        self._tr_shard = trace_shard
         self._missed_in_flight: set[int] = set()
         self.released_per_task = [0] * len(tasks)
         self.completed_per_task = [0] * len(tasks)
@@ -385,12 +428,23 @@ class PharosServer:
             rt = now - job.release
             self.report.response_times[t.name].append(rt)
             self.report.completed_releases[t.name].append(job.release)
-            if (
+            missed = (
                 now > job.abs_deadline
                 and job.uid not in self._missed_in_flight
-            ):
+            )
+            if missed:
                 # not already counted by a mid-run finalize_report
                 self.report.deadline_misses[t.name] += 1
+            if self._tr is not None:
+                # response/tardiness/missed derive from (t, release,
+                # deadline) at read time — same complete-event schema
+                # as the DES; completed-job misses are not separately
+                # emitted (only in-flight ones at finalize are)
+                self._tr.emit(
+                    "complete", now, "runtime", t.name,
+                    prev_stage, self._tr_shard, release=job.release,
+                    attrs={"deadline": job.abs_deadline},
+                )
             return
         nxt = t.stage_of_layer[job.layer]
         self._start_layer(job)
@@ -399,9 +453,14 @@ class PharosServer:
             self.stages[nxt].running = job
         else:
             # release to successor via the inter-stage FIFO (paper §3.2)
+            if self._tr is not None:
+                self._tr.emit(
+                    "segment_end", now, "runtime", t.name,
+                    prev_stage, self._tr_shard, release=job.release,
+                )
             self.stages[nxt].push(job)
 
-    def _preempt_if_due(self, st: StageRuntime) -> None:
+    def _preempt_if_due(self, st: StageRuntime, now: float) -> None:
         """EDF preemption check between windows (tile boundary)."""
         if (
             self.policy == "edf"
@@ -411,8 +470,36 @@ class PharosServer:
             preempted = st.running
             preempted.preemptions += 1
             self.report.preemptions += 1
+            if self._tr is not None:
+                name = self.tasks[preempted.task_id].name
+                # xi = 0: the virtual executor's accumulator stays
+                # resident, so the boundary preemption spills nothing
+                # (the conformance premise — raw-WCET comparison)
+                self._tr.emit(
+                    "preempt_store", now, "runtime", name,
+                    st.idx, self._tr_shard, release=preempted.release,
+                    attrs={"xi": 0.0},
+                )
+                self._tr.emit(
+                    "preempt_load", now, "runtime", name,
+                    st.idx, self._tr_shard, release=preempted.release,
+                    attrs={"xi": 0.0},
+                )
             st.push(preempted)  # progress table keeps (layer, next_tile)
             st.running = None
+
+    def _emit_dispatch(self, st: StageRuntime, now: float) -> None:
+        """Trace a stage server picking a job (fresh or resumed)."""
+        if self._tr is None:
+            return
+        job = st.running
+        self._tr.emit(
+            "dispatch", now, "runtime",
+            self.tasks[job.task_id].name,
+            st.idx, self._tr_shard, release=job.release,
+            # c_acc still set => mid-layer resume after a preemption
+            attrs={"resumed": True} if job.c_acc is not None else None,
+        )
 
     def _exec_window(self, job: Job) -> int:
         """Execute one tile window of ``job``'s current layer; returns
@@ -435,11 +522,12 @@ class PharosServer:
 
     def _step_stage(self, st: StageRuntime, now: float) -> bool:
         """Run one tile window on stage ``st``. Returns True if it ran."""
-        self._preempt_if_due(st)
+        self._preempt_if_due(st, now)
         if st.running is None:
             st.running = st.pop()
             if st.running is None:
                 return False
+            self._emit_dispatch(st, now)
             if st.running.c_acc is None:
                 self._start_layer(st.running)
         job = st.running
@@ -465,11 +553,12 @@ class PharosServer:
                 self._finish_layer_or_forward(job, st.busy_until)
                 # a same-stage next layer re-occupies `running`; a
                 # forwarded/finished job frees the stage for the pool
-        self._preempt_if_due(st)
+        self._preempt_if_due(st, now)
         if st.running is None:
             st.running = st.pop()
             if st.running is None:
                 return False
+            self._emit_dispatch(st, now)
             if st.running.c_acc is None:
                 self._start_layer(st.running)
         job = st.running
@@ -502,6 +591,16 @@ class PharosServer:
         self.stages[t.stage_of_layer[0]].push(job)
         self.report.jobs_released += 1
         self.released_per_task[task_id] += 1
+        if self._tr is not None:
+            # stamped at the *clock* instant of submission (monotone
+            # within the stream); `release` carries the nominal stamp —
+            # the cross-layer join key
+            self._tr.emit(
+                "release", self.clock(), "runtime", t.name,
+                t.stage_of_layer[0], self._tr_shard,
+                release=job.release,
+                attrs={"best_effort": True} if best_effort else None,
+            )
         return job
 
     def step(self) -> bool:
@@ -585,6 +684,13 @@ class PharosServer:
                     self._missed_in_flight.add(job.uid)
                     name = self.tasks[job.task_id].name
                     self.report.deadline_misses[name] += 1
+                    if self._tr is not None:
+                        self._tr.emit(
+                            "deadline_miss", now, "runtime", name,
+                            st.idx, self._tr_shard,
+                            release=job.release,
+                            attrs={"in_flight": True},
+                        )
         return self.report
 
     def run(self, horizon_s: float) -> ServerReport:

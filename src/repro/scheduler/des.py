@@ -217,6 +217,13 @@ class SimConfig:
     growth_tol: float = 2.0
     #: release-time overload shedding (None -> every release enters)
     shedding: ReleaseShedding | None = None
+    #: schedule-trace sink (duck-typed `repro.obs.TraceRecorder` — the
+    #: DES stays dependency-free). Resolved once per `simulate` call:
+    #: None or a disabled recorder means zero per-event work and zero
+    #: events emitted; an enabled recorder receives release / dispatch /
+    #: preempt_store / preempt_load / segment_end / complete /
+    #: deadline_miss / shed events on the DES's virtual timebase
+    trace: object | None = None
 
 
 @dataclass
@@ -244,6 +251,31 @@ class SimResult:
         vals = [m for m in self.max_response if m > 0.0]
         return max(vals) if vals else 0.0
 
+    def response_percentiles(
+        self, task_idx: int, qs=(50, 95, 99)
+    ) -> dict[str, float]:
+        """Nearest-rank response-time percentiles of one task
+        (`repro.obs.metrics.percentile` — the one shared
+        implementation)."""
+        from repro.obs.metrics import percentile_summary
+
+        return percentile_summary(self.response_times[task_idx], qs)
+
+    def tardiness_percentiles(
+        self, task_idx: int, deadline: float, qs=(50, 95, 99)
+    ) -> dict[str, float]:
+        """Per-task tardiness (``max(0, response - deadline)``)
+        percentiles against the given relative deadline."""
+        from repro.obs.metrics import percentile_summary
+
+        return percentile_summary(
+            [
+                max(0.0, r - deadline)
+                for r in self.response_times[task_idx]
+            ],
+            qs,
+        )
+
 
 class _Job:
     __slots__ = (
@@ -251,6 +283,7 @@ class _Job:
         "idx",
         "release",
         "abs_deadline",
+        "name",
         "seg_idx",
         "remaining",
         "arrive_stage_t",
@@ -265,6 +298,9 @@ class _Job:
         self.idx = idx
         self.release = release
         self.abs_deadline = abs_deadline
+        # task name cached per job when tracing (one lookup per release
+        # instead of one per emitted event); "" untraced
+        self.name = ""
         self.seg_idx = 0  # next segment to execute
         self.remaining = 0.0  # remaining service of the segment in flight
         self.arrive_stage_t = release
@@ -311,6 +347,20 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
     preemptive = cfg.policy == "edf"
     window_mode = cfg.preemption == "window"
     key = _job_key_edf if preemptive else _job_key_fifo
+    # trace sink resolved once (`repro.obs.TraceRecorder.sink`):
+    # disabled tracing costs one `is not None` test per emission site
+    # and emits nothing at all; enabled tracing pays one call + one
+    # row tuple per event — the <5% DES budget obs_bench enforces
+    tr = (
+        cfg.trace.sink()
+        if cfg.trace is not None and getattr(cfg.trace, "enabled", False)
+        else None
+    )
+    names = (
+        [t.name or f"task{i}" for i, t in enumerate(tasks)]
+        if tr is not None
+        else []
+    )
 
     stages = [_Stage(k) for k in range(n_stages)]
     # Event heap: (time, kind, prio, seq, data). kinds: 0=release,
@@ -456,6 +506,12 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
             st.pool.append(run)  # back to the pool, resumes later
             st.pool.remove(best)
             preemptions += 1
+            if tr is not None:
+                tr((now, "preempt_store", run.name,
+                    st.idx, run.release, ov.pre))
+                tr((now, "preempt_load", run.name,
+                    st.idx, run.release, ov.post))
+                tr((now, "dispatch", best.name, st.idx, best.release))
             st.running = best
             st.epoch += 1
             st.block_until = now + ov.pre
@@ -465,6 +521,8 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
         # idle server: pick next
         nxt = min(st.pool, key=key)
         st.pool.remove(nxt)
+        if tr is not None:
+            tr((now, "dispatch", nxt.name, st.idx, nxt.release))
         if window_mode:
             start_chunk(st, nxt, now)
             return
@@ -498,6 +556,13 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
                 st.pool.remove(best)
                 preemptions += 1
                 best.carry += ov.e_store  # spill of the preempted job
+                if tr is not None:
+                    tr((now, "preempt_store", job.name,
+                        st.idx, job.release, ov.e_store))
+                    tr((now, "preempt_load", job.name,
+                        st.idx, job.release, ov.post))
+                    tr((now, "dispatch", best.name,
+                        st.idx, best.release))
                 start_chunk(st, best, now)
                 return
         start_chunk(st, job, now)  # keep running: next chunk
@@ -518,7 +583,21 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
             pending_count[t_id] -= 1
             jobs_completed += 1
             advance_completed(t_id)
+            if tr is not None:
+                # the bare-float payload is the absolute deadline:
+                # response/tardiness/missed derive at read time (t -
+                # release, t - deadline) — a dict plus the arithmetic
+                # here would triple this site's cost, and a separate
+                # deadline_miss event would double it for late jobs
+                tr((now, "complete", job.name, st.idx, job.release,
+                    job.abs_deadline))
         else:
+            if tr is not None and not st.pool:
+                # only the idle edge needs an explicit boundary: when
+                # the pool is non-empty the same-instant dispatch of
+                # the successor marks it (and closes the Chrome span)
+                tr((now, "segment_end", job.name,
+                    st.idx, job.release))
             try_admit(job, now)
         recheck_gated(t_id, now)
         dispatch(st, now)
@@ -565,6 +644,9 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
             if verdict == SHED_DROP:
                 jobs_shed += 1
                 shed_per_task[t_id] += 1
+                if tr is not None:
+                    tr((now, "shed", names[t_id],
+                        t.segments[0][0], now))
                 # a shed job must not deadlock the same-task gating
                 # chain: mark its segments trivially complete so the
                 # next job's gate sees through it
@@ -573,12 +655,21 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
                 recheck_gated(t_id, now)
                 continue
             jobs_released += 1
+            if tr is not None:
+                if verdict == SHED_BEST_EFFORT:
+                    tr((now, "release", names[t_id],
+                        t.segments[0][0], now, {"best_effort": True}))
+                else:
+                    tr((now, "release", names[t_id],
+                        t.segments[0][0], now))
             deadline = (
                 math.inf if verdict == SHED_BEST_EFFORT else t.deadline
             )
             if verdict == SHED_BEST_EFFORT:
                 degraded_per_task[t_id] += 1
             job = _Job(t_id, j_idx, now, now + deadline)
+            if tr is not None:
+                job.name = names[t_id]
             seg_complete[(t_id, j_idx)] = [False] * len(t.segments)
             pending_count[t_id] += 1
             if pending_count[t_id] > cfg.backlog_limit:
@@ -711,6 +802,7 @@ def simulate_taskset(
     chunk_schedules: list[dict[int, tuple[float, ...]]] | None = None,
     preemption: str = "instant",
     shedding: ReleaseShedding | None = None,
+    trace: object | None = None,
 ) -> SimResult:
     """Bridge from `SegmentTable`/`TaskSet` (core.rt) to the simulator.
 
@@ -727,6 +819,9 @@ def simulate_taskset(
     entry run their whole segment as one chunk. Tasks that revisit a
     stage (non-chained mapping orders) cannot carry per-stage chunk
     schedules — the map would be ambiguous per visit.
+
+    ``trace`` optionally forwards a `repro.obs.TraceRecorder` to
+    `SimConfig.trace` (None: tracing off, zero events).
     """
     if arrivals is not None and len(arrivals) != len(taskset):
         raise ValueError("arrivals length != taskset size")
@@ -773,5 +868,6 @@ def simulate_taskset(
         overheads=overheads,
         preemption=preemption,
         shedding=shedding,
+        trace=trace,
     )
     return simulate(tasks, cfg)

@@ -110,6 +110,8 @@ class TrafficGateway:
         monitor: BacklogMonitor | None = None,
         ratelimit: RateLimiter | None = None,
         clock=None,
+        trace=None,
+        shard: int = -1,
     ):
         if not (len(server.tasks) == len(requests) == len(arrivals)):
             raise ValueError(
@@ -125,6 +127,16 @@ class TrafficGateway:
         self.monitor = monitor or BacklogMonitor()
         self.ratelimit = ratelimit
         self.clock = clock or WallClock()
+        # schedule-trace handle (repro.obs.TraceRecorder), resolved
+        # once: disabled tracing emits nothing and costs nothing.
+        # ``shard`` tags every event when this gateway is one
+        # `ShardedGateway` replica.
+        self._tr = (
+            trace
+            if trace is not None and getattr(trace, "enabled", False)
+            else None
+        )
+        self._tr_shard = shard
         self._admitted_idx: list[int] | None = None
         self._limits: list[int] = []
 
@@ -138,6 +150,13 @@ class TrafficGateway:
             dec = self.admission.admit(req)
             if dec.admitted:
                 self._admitted_idx.append(i)
+            if self._tr is not None:
+                self._tr.emit(
+                    "admit" if dec.admitted else "reject",
+                    self.clock.now(), "gateway", req.name,
+                    -1, self._tr_shard,
+                    attrs={"max_util": dec.max_util, "reason": dec.reason},
+                )
         # backlog limits from the post-admission response bounds
         bounds = self.admission.response_bounds()
         self._limits = [
@@ -250,6 +269,12 @@ class TrafficGateway:
             i, release_time
         ):
             stats[i].rate_limited += 1
+            if self._tr is not None:
+                self._tr.emit(
+                    "rate_limited", self.clock.now(), "gateway",
+                    self.requests[i].name, -1, self._tr_shard,
+                    release=release_time,
+                )
             return
         # refresh overload state for every admitted tenant (pending
         # counts change between releases as jobs complete)
@@ -267,8 +292,21 @@ class TrafficGateway:
             )
         if verdict == DROP:
             stats[i].shed += 1
+            if self._tr is not None:
+                self._tr.emit(
+                    "shed", self.clock.now(), "gateway",
+                    self.requests[i].name, -1, self._tr_shard,
+                    release=release_time,
+                )
             return
         best_effort = verdict == BEST_EFFORT
+        if self._tr is not None:
+            self._tr.emit(
+                "release", self.clock.now(), "gateway",
+                self.requests[i].name, -1, self._tr_shard,
+                release=release_time,
+                attrs={"best_effort": True} if best_effort else None,
+            )
         self.server.submit(i, release_time, best_effort=best_effort)
         if best_effort:
             stats[i].degraded += 1

@@ -340,6 +340,8 @@ def built_gateway(
     shedding: SheddingPolicy | None = None,
     monitor: BacklogMonitor | None = None,
     ratelimit: RateLimiter | None = None,
+    trace=None,
+    shard: int = -1,
 ) -> TrafficGateway:
     """One deterministic cost-model `TrafficGateway` over a
     `BuiltScenario` (or a `BuiltScenario.subset`), on its own
@@ -348,6 +350,10 @@ def built_gateway(
     `CostModel`'s exec-model WCETs. This is the single constructor path
     both the unsharded gateway and every `ShardedGateway` shard go
     through — K=1 equivalence is structural, not coincidental.
+
+    ``trace`` (a `repro.obs.TraceRecorder`) is handed to both the
+    gateway and its server; ``shard`` tags every emitted event with the
+    replica index (-1: unsharded).
     """
     from repro.pipeline.serve import PharosServer
     from repro.traffic.clock import VirtualClock
@@ -365,6 +371,8 @@ def built_gateway(
         cost_model=cost_model,
         clock=clk.now,
         sleep=clk.sleep,
+        trace=trace,
+        trace_shard=shard,
     )
     admission = AdmissionController(
         [0.0] * built.design.n_stages,
@@ -379,6 +387,8 @@ def built_gateway(
         monitor=monitor,
         ratelimit=ratelimit,
         clock=clk,
+        trace=trace,
+        shard=shard,
     )
 
 
@@ -419,12 +429,18 @@ class ShardedGateway:
         shedding: SheddingPolicy | None = None,
         make_monitor=None,
         make_ratelimit=None,
+        trace=None,
     ) -> "ShardedGateway":
         """Place a `BuiltScenario`'s tenants across ``shards`` replicas.
 
         ``make_monitor()`` / ``make_ratelimit(sub_requests)`` build one
         fresh `BacklogMonitor` / `RateLimiter` per shard (monitors and
         buckets are stateful — shards must not share them).
+
+        ``trace`` (a `repro.obs.TraceRecorder`) is shared by every
+        shard's gateway and server — events carry the shard index —
+        and receives one ``place`` event per tenant recording the
+        placement decision.
         """
         policy = policy or built.scenario.policy
         _placement, plan = plan_shards(
@@ -434,8 +450,14 @@ class ShardedGateway:
             n_stages=built.design.n_stages,
             preemptive=(policy == "edf"),
         )
+        if trace is not None and getattr(trace, "enabled", False):
+            for r, k in zip(built.requests, plan.assignment):
+                trace.emit(
+                    "place", 0.0, "gateway", r.name, -1, k,
+                    attrs={"placement": _placement.name},
+                )
         gateways: list[TrafficGateway | None] = []
-        for members in plan.members:
+        for k, members in enumerate(plan.members):
             if not members:
                 gateways.append(None)
                 continue
@@ -453,6 +475,8 @@ class ShardedGateway:
                         if make_ratelimit
                         else None
                     ),
+                    trace=trace,
+                    shard=k,
                 )
             )
         return cls(plan, gateways, [r.name for r in built.requests])

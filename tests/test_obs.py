@@ -1,0 +1,478 @@
+"""Cross-layer schedule tracing (`repro.obs`).
+
+Unit semantics of the tentpole surface — `TraceRecorder` (emit/sink,
+sticky annotations, lazy materialization, zero emission when
+disabled), the deadline-compliance `MetricsRegistry`, the Chrome-trace
+exporter and the first-divergence `trace_diff` — plus the shared
+percentile helpers on `SimResult`/`ServerReport`, a DES accounting
+cross-check, and the two property legs the module docstring promises:
+
+- per-``(layer, shard)`` stream timestamps are non-decreasing, and in
+  the DES stream same-instant releases precede completions (the heap's
+  ``(t, kind, prio, seq)`` tie-break made observable);
+- event conservation: every scheduled arrival ends up released, shed
+  or rate-limited, and every release completes or is still in flight —
+  on random DES task sets and on the sharded gateway with shedding and
+  token buckets armed.
+"""
+import json
+import math
+from functools import lru_cache
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perfmodel.hardware import paper_platform
+from repro.obs import (
+    EVENT_KINDS,
+    MetricsRegistry,
+    TraceDiff,
+    TraceEvent,
+    TraceRecorder,
+    percentile,
+    percentile_summary,
+    to_chrome_trace,
+    trace_diff,
+    write_chrome_trace,
+)
+from repro.scheduler.des import SimConfig, SimTask, simulate
+from repro.traffic import RateLimiter, ShardedGateway
+from repro.traffic.scenarios import build, get_scenario
+from repro.traffic.shedding import get_policy
+
+
+# ---------------------------------------------------------------------------
+# TraceRecorder
+# ---------------------------------------------------------------------------
+def test_recorder_emit_materializes_events_in_order():
+    rec = TraceRecorder()
+    rec.emit("release", 1.0, "gateway", "cam", release=1.0)
+    rec.emit(
+        "complete", 2.5, "runtime", "cam", stage=1, shard=3,
+        release=1.0, attrs={"deadline": 2.0},
+    )
+    ev = rec.events
+    assert [e.seq for e in ev] == [0, 1]
+    assert ev[0].kind == "release" and ev[0].layer == "gateway"
+    assert ev[0].stage == -1 and ev[0].shard == -1
+    assert ev[1].shard == 3 and ev[1].get("deadline") == 2.0
+    assert ev[1].get("missing", 7) == 7
+    assert rec.counts() == {"release": 1, "complete": 1}
+    # the materialized view is cached, then extended incrementally
+    assert rec.events is ev
+    rec.emit("shed", 3.0, "gateway", "cam", release=3.0)
+    assert rec.events[2].seq == 2
+
+
+def test_disabled_recorder_emits_nothing_and_has_no_sink():
+    rec = TraceRecorder(enabled=False)
+    rec.emit("release", 1.0, "des", "cam")
+    assert rec.sink() is None
+    assert rec.events == []
+    assert rec.counts() == {}
+
+
+def test_sink_compact_rows_expand_with_curried_layer_and_shard():
+    rec = TraceRecorder()
+    tr = rec.sink()  # defaults: layer="des", shard=-1
+    tr((0.5, "dispatch", "cam", 2, 0.25))  # 5-tuple: no payload
+    tr((0.75, "complete", "cam", 2, 0.25, 1.0))  # scalar -> deadline
+    tr((0.8, "preempt_store", "lidar", 0, 0.7, 0.01))  # scalar -> xi
+    tr((0.9, "release", "cam", 0, 0.9, {"best_effort": True}))
+    ev = rec.events
+    assert all(e.layer == "des" and e.shard == -1 for e in ev)
+    assert ev[0].attrs is None and ev[0].stage == 2
+    assert ev[1].get("deadline") == 1.0
+    assert ev[2].get("xi") == 0.01
+    assert ev[3].get("best_effort") is True
+    assert rec.counts()["dispatch"] == 1
+
+
+def test_sink_rejects_a_second_tag_but_not_the_same_one():
+    rec = TraceRecorder()
+    assert rec.sink(layer="des", shard=0) == rec.sink(layer="des", shard=0)
+    with pytest.raises(ValueError, match="sink tag"):
+        rec.sink(layer="runtime", shard=0)
+
+
+def test_annotations_are_sticky_for_emit_and_resolved_at_sink_time():
+    rec = TraceRecorder()
+    rec.annotate(attempt=1)
+    rec.emit("release", 0.0, "gateway", "cam", attrs={"x": 2})
+    tr = rec.sink()
+    tr((0.5, "complete", "cam", 0, 0.0, 3.0))
+    rec.clear_annotations()
+    # sink resolved while sticky was armed: its closure keeps merging
+    tr((0.6, "dispatch", "cam", 0, 0.6))
+    rec.emit("shed", 0.7, "gateway", "cam")
+    ev = rec.events
+    assert ev[0].attrs == {"attempt": 1, "x": 2}
+    assert ev[1].attrs == {"attempt": 1, "deadline": 3.0}
+    assert ev[2].attrs == {"attempt": 1}
+    assert ev[3].attrs is None  # emit reads the live (cleared) set
+
+
+def test_stream_filters_by_layer_kind_task_and_shard():
+    rec = TraceRecorder()
+    rec.emit("release", 0.0, "gateway", "a", shard=0)
+    rec.emit("release", 0.0, "gateway", "b", shard=1)
+    rec.emit("complete", 1.0, "runtime", "a", shard=0)
+    assert len(rec.stream(layer="gateway")) == 2
+    assert len(rec.stream(task="a")) == 2
+    assert len(rec.stream(shard=1)) == 1
+    assert rec.stream(kind="complete")[0].t == 1.0
+
+
+def test_event_kinds_vocabulary_is_closed():
+    assert set(EVENT_KINDS) == {
+        "release", "dispatch", "preempt_store", "preempt_load",
+        "segment_end", "complete", "deadline_miss", "shed",
+        "rate_limited", "admit", "reject", "place",
+    }
+
+
+# ---------------------------------------------------------------------------
+# percentiles and the metrics registry
+# ---------------------------------------------------------------------------
+def test_percentile_nearest_rank():
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(vals, 50) == 2.0
+    assert percentile(vals, 95) == 4.0
+    assert percentile(vals, 0) == 1.0  # rank floor is 1
+    assert math.isnan(percentile([], 50))
+    with pytest.raises(ValueError):
+        percentile(vals, 101)
+    s = percentile_summary([5.0])
+    assert s == {"p50": 5.0, "p95": 5.0, "p99": 5.0}
+
+
+def _mk(kind, t, task="cam", layer="des", release=None, attrs=None,
+        stage=0):
+    return TraceEvent(0, t, layer, kind, task, stage, -1, release, attrs)
+
+
+def test_from_trace_rolls_up_the_catalog():
+    events = [
+        _mk("release", 0.0, release=0.0),
+        _mk("release", 1.0, release=1.0),
+        _mk("release", 2.0, release=2.0),
+        # on time (t <= deadline) and late (t > deadline): the late one
+        # must produce a *derived* deadline miss
+        _mk("complete", 0.5, release=0.0, attrs={"deadline": 1.0}),
+        _mk("complete", 2.6, release=1.0, attrs={"deadline": 2.0}),
+        # in-flight horizon-end miss: the only explicitly emitted kind
+        _mk("deadline_miss", 3.0, release=2.0,
+            attrs={"in_flight": True}),
+        _mk("preempt_store", 0.2, task="lidar", attrs={"xi": 0.1},
+            stage=1),
+        _mk("preempt_load", 0.2, task="lidar", attrs={"xi": 0.05},
+            stage=1),
+        _mk("shed", 2.9, task="lidar", layer="gateway"),
+        _mk("rate_limited", 2.95, task="lidar", layer="gateway"),
+    ]
+    reg = MetricsRegistry.from_trace(events)
+    snap = reg.snapshot()
+    c = snap["counters"]
+    assert c["releases/cam"] == 3
+    assert c["completions/cam"] == 2
+    assert c["deadline_misses/cam"] == 2  # 1 derived + 1 in-flight
+    assert c["shed/lidar"] == 1 and c["rate_limited/lidar"] == 1
+    assert c["preemptions/stage1"] == 1
+    assert c["xi_charged/stage1"] == pytest.approx(0.15)
+    h = snap["histograms"]
+    assert h["response/cam"]["count"] == 2
+    assert h["response/cam"]["p50"] == pytest.approx(0.5)
+    assert h["tardiness/cam"]["max"] == pytest.approx(0.6)
+    g = snap["gauges"]
+    assert g["backlog/cam"] == 1.0  # 3 released, 2 completed
+    # xi over the [0.0, 3.0] makespan
+    assert g["xi_overhead_fraction"] == pytest.approx(0.15 / 3.0)
+    reg.set_eq3_slacks([0.25, 0.5])
+    assert reg.gauge("eq3_slack/stage1").value == 0.5
+
+
+def test_from_trace_skips_best_effort_infinite_deadlines():
+    events = [
+        _mk("complete", 5.0, release=0.0,
+            attrs={"deadline": math.inf}),
+    ]
+    reg = MetricsRegistry.from_trace(events)
+    assert "tardiness/cam" not in reg.histograms
+    assert "deadline_misses/cam" not in reg.counters
+    assert reg.histogram("response/cam").count == 1
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export
+# ---------------------------------------------------------------------------
+def test_chrome_trace_spans_and_derived_miss(tmp_path):
+    rec = TraceRecorder()
+    tr = rec.sink()
+    tr((0.0, "release", "cam", 0, 0.0))
+    tr((0.0, "dispatch", "cam", 0, 0.0))
+    tr((1.5, "complete", "cam", 0, 0.0, 1.0))  # late: miss derives
+    path = tmp_path / "trace.json"
+    doc = write_chrome_trace(rec.events, path)
+    assert json.loads(path.read_text()) == doc
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(spans) == 1
+    assert spans[0]["name"] == "cam" and spans[0]["dur"] == 1.5e6
+    cats = [e["cat"] for e in doc["traceEvents"] if e["ph"] == "i"]
+    # the synthesized miss instant for the late completion
+    assert "deadline_miss" in cats
+    procs = [
+        e for e in doc["traceEvents"]
+        if e["ph"] == "M" and e["name"] == "process_name"
+    ]
+    assert [p["args"]["name"] for p in procs] == ["des"]
+
+
+def test_chrome_trace_closes_still_open_spans_at_trace_end():
+    events = [
+        _mk("dispatch", 1.0, release=1.0),
+        _mk("release", 2.0, task="lidar", release=2.0),
+    ]
+    doc = to_chrome_trace(events)
+    spans = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(spans) == 1 and spans[0]["dur"] == pytest.approx(1e6)
+
+
+# ---------------------------------------------------------------------------
+# trace_diff
+# ---------------------------------------------------------------------------
+def _pair(t_a, t_b, release, task="cam"):
+    a = _mk("complete", t_a, task=task, release=release)
+    b = _mk("complete", t_b, task=task, layer="runtime",
+            release=release)
+    return a, b
+
+
+def test_trace_diff_identical_and_skew_within_tolerance():
+    a0, b0 = _pair(1.0, 1.0, 0.0)
+    a1, b1 = _pair(2.0, 2.4, 1.0)
+    d = trace_diff([a0, a1], [b0, b1], time_tol=0.5)
+    assert isinstance(d, TraceDiff) and d.identical
+    assert d.compared == 2 and d.max_skew == pytest.approx(0.4)
+    assert "identical" in d.summary()
+
+
+def test_trace_diff_reports_first_divergence_in_stream_order():
+    a0, b0 = _pair(1.0, 1.9, 0.0)  # diverges (|dt| = 0.9)
+    a1, b1 = _pair(2.0, 9.0, 1.0)  # also diverges, but later
+    d = trace_diff([a0, a1], [b0, b1], time_tol=0.5)
+    assert not d.identical
+    assert d.divergence is not None
+    assert d.divergence.release == 0.0
+    assert "complete" in d.summary()
+
+
+def test_trace_diff_per_task_tolerance_and_missing_peer():
+    a0, b0 = _pair(1.0, 1.4, 0.0, task="cam")
+    a1, _ = _pair(2.0, 2.0, 1.0, task="lidar")
+    # cam gets a generous allowance; lidar's completion is missing
+    # entirely on the runtime side
+    d = trace_diff([a0, a1], [b0], time_tol={"cam": 1.0})
+    assert not d.identical
+    assert d.divergence.task == "lidar"
+    # recorders (anything with .events) are accepted directly
+    rec = TraceRecorder()
+    rec.emit("complete", 1.0, "des", "cam", release=0.0)
+    assert trace_diff(rec, rec).identical
+
+
+# ---------------------------------------------------------------------------
+# shared percentile helpers + DES accounting cross-check
+# ---------------------------------------------------------------------------
+def _two_task_system():
+    return [
+        SimTask(segments=((0, 1.0), (1, 0.5)), period=4.0, name="hi"),
+        SimTask(segments=((0, 0.5),), period=2.0, name="lo"),
+    ]
+
+
+def test_simresult_percentile_helpers_match_shared_impl():
+    res = simulate(
+        _two_task_system(), SimConfig(policy="edf", horizon=20.0)
+    )
+    p = res.response_percentiles(0)
+    assert p == percentile_summary(res.response_times[0])
+    tp = res.tardiness_percentiles(1, 0.1)
+    assert tp["p99"] == pytest.approx(
+        percentile(
+            [max(0.0, r - 0.1) for r in res.response_times[1]], 99
+        )
+    )
+
+
+def test_des_trace_counts_agree_with_simresult():
+    rec = TraceRecorder()
+    res = simulate(
+        _two_task_system(),
+        SimConfig(policy="edf", horizon=20.0, trace=rec),
+    )
+    counts = rec.counts()
+    assert counts["release"] == res.jobs_released
+    assert counts["complete"] == res.jobs_completed
+    # completed-job misses are derived, never emitted
+    assert "deadline_miss" not in counts
+    # every segment served starts with a dispatch
+    assert counts["dispatch"] >= res.jobs_completed
+    # responses recomputed from the trace match the DES's own
+    by_task = {t: [] for t in ("hi", "lo")}
+    for e in rec.stream(kind="complete"):
+        by_task[e.task].append(e.t - e.release)
+    assert by_task["hi"] == pytest.approx(res.response_times[0])
+    assert by_task["lo"] == pytest.approx(res.response_times[1])
+
+
+def test_untraced_run_passes_no_recorder_cost():
+    # smoke: trace=None must run identically (bitwise responses)
+    a = simulate(_two_task_system(), SimConfig(policy="edf", horizon=20.0))
+    rec = TraceRecorder()
+    b = simulate(
+        _two_task_system(),
+        SimConfig(policy="edf", horizon=20.0, trace=rec),
+    )
+    assert a.response_times == b.response_times
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+@st.composite
+def traced_system(draw, max_tasks=3, max_stages=3):
+    n_tasks = draw(st.integers(1, max_tasks))
+    n_stages = draw(st.integers(1, max_stages))
+    tasks = []
+    for i in range(n_tasks):
+        period = draw(st.floats(0.5, 3.0, allow_nan=False))
+        segs = tuple(
+            (k, draw(st.floats(0.01, 0.9 * period / n_stages,
+                               allow_nan=False)))
+            for k in range(n_stages)
+        )
+        tasks.append(
+            SimTask(segments=segs, period=period, name=f"t{i}")
+        )
+    return tasks
+
+
+@pytest.mark.property
+@settings(max_examples=25, deadline=None)
+@given(traced_system(), st.sampled_from(["fifo", "edf"]))
+def test_property_stream_monotone_and_release_before_complete(
+    tasks, policy
+):
+    """Per-(layer, shard) timestamps never go backwards, and within
+    one DES instant every release is emitted before any completion —
+    the documented mirror of the heap's (t, kind, prio, seq) order."""
+    rec = TraceRecorder()
+    simulate(
+        tasks,
+        SimConfig(policy=policy, horizon=30.0, trace=rec),
+    )
+    streams = {}
+    for e in rec.events:
+        streams.setdefault((e.layer, e.shard), []).append(e)
+    for stream in streams.values():
+        assert all(
+            a.t <= b.t + 1e-15 for a, b in zip(stream, stream[1:])
+        )
+    des = streams.get(("des", -1), [])
+    for a, b in zip(des, des[1:]):
+        if a.t == b.t:
+            assert not (a.kind == "complete" and b.kind == "release")
+
+
+@pytest.mark.property
+@settings(max_examples=25, deadline=None)
+@given(traced_system())
+def test_property_des_event_conservation(tasks):
+    """releases == completes + in-flight (+ shed when armed): no event
+    is lost and none is invented, on random task sets."""
+    rec = TraceRecorder()
+    res = simulate(
+        tasks, SimConfig(policy="edf", horizon=30.0, trace=rec)
+    )
+    c = rec.counts()
+    in_flight = res.jobs_released - res.jobs_completed - res.jobs_shed
+    assert c.get("release", 0) == res.jobs_released
+    assert c.get("complete", 0) + in_flight + c.get("shed", 0) == (
+        res.jobs_released
+    )
+    # per task too: the trace's view equals the DES's own accounting
+    for i, t in enumerate(tasks):
+        assert len(rec.stream(kind="complete", task=t.name)) == len(
+            res.response_times[i]
+        )
+
+
+@lru_cache(maxsize=1)
+def _built_rush():
+    return build(
+        get_scenario("multi_tenant_rush"), paper_platform(16),
+        beam_width=4,
+    )
+
+
+@pytest.mark.property
+@settings(max_examples=3, deadline=None)
+@given(st.sampled_from([1, 2]))
+def test_property_sharded_gateway_event_conservation(shards):
+    """Under sharding with shedding + token buckets armed, every
+    scheduled arrival is accounted: gateway releases + shed +
+    rate_limited == scheduled, runtime completes + in-flight ==
+    runtime releases, and every tenant's events sit on its placed
+    shard."""
+    built = _built_rush()
+    rec = TraceRecorder()
+    gw = ShardedGateway.from_built(
+        built,
+        shards=shards,
+        placement="least_loaded",
+        shedding=get_policy("reject_newest"),
+        make_ratelimit=lambda reqs: RateLimiter.for_requests(
+            reqs, burst_periods=3.0
+        ),
+        trace=rec,
+    )
+    horizon = 15.0 * max(r.period for r in built.requests)
+    report = gw.run(horizon)
+
+    placed = {
+        e.task: e.shard for e in rec.stream(kind="place")
+    }
+    assert set(placed) == {r.name for r in built.requests}
+    for e in rec.events:
+        if e.kind != "place" and e.task in placed:
+            assert e.shard == placed[e.task], (e.kind, e.task)
+
+    stats = {t.name: t for t in report.tenants}
+    for name, t in stats.items():
+        gw_rel = len(rec.stream(layer="gateway", kind="release",
+                                task=name))
+        shed = len(rec.stream(layer="gateway", kind="shed", task=name))
+        rl = len(rec.stream(layer="gateway", kind="rate_limited",
+                            task=name))
+        assert gw_rel + shed + rl == t.scheduled, name
+        assert shed == t.shed and rl == t.rate_limited
+        # gateway release events pair 1:1 with runtime ones
+        rt_rel = len(rec.stream(layer="runtime", kind="release",
+                                task=name))
+        assert rt_rel == gw_rel, name
+    # across all shards: completes + still-in-flight == releases
+    rt_rel = len(rec.stream(layer="runtime", kind="release"))
+    rt_done = len(rec.stream(layer="runtime", kind="complete"))
+    in_flight = sum(
+        rep.server_report.total_in_flight()
+        for rep in report.reports
+        if rep is not None
+    )
+    assert rt_done + in_flight == rt_rel
+    # admission decisions traced for every tenant on its shard
+    decided = {
+        e.task
+        for e in rec.events
+        if e.kind in ("admit", "reject")
+    }
+    assert decided == set(placed)
