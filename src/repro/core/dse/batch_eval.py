@@ -162,6 +162,8 @@ class BatchedDesignEvaluator:
                     pos[i] += row[i]
                 g[3].extend(pos)
         ar = np.arange(n)
+        # rtlint: disable=determinism -- insertion order is pinned by the
+        # candidate list; results scatter back by index, order-free
         for (chips, block), (cs, ks, flat_lo, flat_hi) in groups.items():
             T = self.segment_sums(chips, block)
             a = np.array(flat_lo, dtype=np.int64).reshape(len(cs), n)

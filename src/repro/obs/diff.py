@@ -121,6 +121,8 @@ def trace_diff(
             )
             break
         peer = peers.pop(0)
+        # rtlint: disable=determinism -- pure identity membership (which
+        # exact event objects were matched); never ordered or persisted
         matched_b.add(id(peer))
         compared += 1
         skew = abs(e.t - peer.t)
@@ -134,6 +136,8 @@ def trace_diff(
             break
     if first is None:
         for e in b:
+            # rtlint: disable=determinism -- identity membership test
+            # against matched_b above; see rationale there
             if id(e) not in matched_b:
                 first = Divergence(
                     "missing_in_a", e.task, e.kind, e.release,

@@ -184,7 +184,7 @@ class MetricsRegistry:
                 xi_total += e.get("xi", 0.0)
             elif e.kind == "preempt_load":
                 xi_total += e.get("xi", 0.0)
-        for name, c in list(reg.counters.items()):
+        for name, c in sorted(reg.counters.items()):
             if name.startswith("releases/"):
                 task = name.split("/", 1)[1]
                 done = reg.counters.get(f"completions/{task}")

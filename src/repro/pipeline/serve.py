@@ -355,7 +355,10 @@ class PharosServer:
         self.window_tiles = window_tiles
         self.backend = backend
         self.cost_model = cost_model
+        # rtlint: disable=clock-domain -- injectable wall-clock defaults
+        # for live serving; the DES and tests inject virtual clocks
         self.clock = clock if clock is not None else time.perf_counter
+        # rtlint: disable=clock-domain -- same: live-serving default
         self.sleep = sleep if sleep is not None else time.sleep
         # schedule-trace handle (repro.obs.TraceRecorder), resolved
         # once: disabled tracing emits nothing and costs nothing

@@ -42,7 +42,10 @@ class HeartbeatMonitor:
     """Coordinator-side liveness view over injected heartbeats."""
 
     def __init__(self, workers: list[str], *, suspect_after: float = 5.0,
-                 dead_after: float = 15.0, clock: Callable[[], float] = time.monotonic):
+                 dead_after: float = 15.0,
+                 # rtlint: disable=clock-domain -- injectable host-liveness
+                 # clock default; tests inject a virtual clock
+                 clock: Callable[[], float] = time.monotonic):
         self.clock = clock
         self.suspect_after = suspect_after
         self.dead_after = dead_after

@@ -418,7 +418,7 @@ def get_scenario(name: str) -> TrafficScenario:
 
 
 def list_scenarios() -> list[tuple[str, str]]:
-    return [(s.name, s.description) for s in SCENARIOS.values()]
+    return [(s.name, s.description) for _, s in sorted(SCENARIOS.items())]
 
 
 register(

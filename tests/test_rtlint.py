@@ -1,0 +1,472 @@
+"""Tests for `tools/rtlint` — the real-time-invariant lint gate.
+
+Three layers:
+
+1. a per-rule corpus: for each registered rule, a snippet that must
+   fire (true positive), a snippet that must not (true negative), and
+   a suppressed variant;
+2. framework mechanics: inline-suppression scanning (same-line,
+   comment-above, stacking, unused reporting), path scoping, severity
+   overrides, the mini-TOML config reader, and the output formats;
+3. the self-check: ``python -m tools.rtlint`` over this very repo must
+   exit 0 — the tree stays lint-clean, and the gate stays runnable
+   with a bare stdlib interpreter.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+from tools.rtlint import (  # noqa: E402
+    RULES,
+    Finding,
+    lint_paths,
+    lint_source,
+    match_any,
+)
+from tools.rtlint.config import load_config, parse_toml_subset  # noqa: E402
+import tools.rtlint.rules  # noqa: E402,F401  (populate the registry)
+
+#: a vocabulary override so corpus snippets don't depend on the real
+#: trace module being parsed from disk
+VOCAB_CFG = {"rules": {"trace-vocab": {"vocab": ["release", "complete"]}}}
+
+
+def findings_for(rule_name, source, rel, config=None, **kw):
+    return lint_source(
+        source, rel, rules=[RULES[rule_name]], config=config, **kw
+    )
+
+
+def test_registry_has_the_advertised_rules():
+    assert len(RULES) >= 5
+    assert {
+        "clock-domain",
+        "determinism",
+        "time-eps",
+        "trace-vocab",
+        "obs-contract",
+    } <= set(RULES)
+    for rule in RULES.values():
+        assert rule.description, f"rule {rule.name} has no description"
+
+
+# ---------------------------------------------------------------------------
+# per-rule corpus
+# ---------------------------------------------------------------------------
+class TestClockDomain:
+    REL = "src/repro/pipeline/x.py"
+
+    def test_flags_wall_clock_call(self):
+        src = "import time\n\ndef f():\n    return time.perf_counter()\n"
+        (f,) = findings_for("clock-domain", src, self.REL)
+        assert f.rule == "clock-domain" and f.line == 4
+
+    def test_flags_bare_reference_used_as_default(self):
+        src = "import time\n\ndef f(clock=time.monotonic):\n    return clock()\n"
+        (f,) = findings_for("clock-domain", src, self.REL)
+        assert f.line == 3
+
+    def test_flags_datetime_now(self):
+        src = "import datetime\nstamp = datetime.datetime.now()\n"
+        assert findings_for("clock-domain", src, self.REL)
+
+    def test_injected_clock_is_clean(self):
+        src = "def f(clock):\n    return clock()\n"
+        assert findings_for("clock-domain", src, self.REL) == []
+
+    def test_clock_module_is_out_of_scope(self):
+        src = "import time\nnow = time.time()\n"
+        rel = "src/repro/traffic/clock.py"
+        assert findings_for("clock-domain", src, rel) == []
+
+    def test_suppression_absorbs_the_finding(self):
+        src = (
+            "import time\n"
+            "# rtlint: disable=clock-domain -- live-serving default\n"
+            "now = time.time()\n"
+        )
+        assert findings_for("clock-domain", src, self.REL) == []
+
+
+class TestDeterminism:
+    REL = "src/repro/scheduler/x.py"
+
+    def test_flags_dict_view_iteration(self):
+        src = "def f(d):\n    for k, v in d.items():\n        pass\n"
+        (f,) = findings_for("determinism", src, self.REL)
+        assert "items" in f.message
+
+    def test_flags_set_iteration(self):
+        src = "s = {1, 2}\nfor x in s:\n    pass\n"
+        assert findings_for("determinism", src, self.REL)
+
+    def test_flags_unseeded_random(self):
+        src = "import random\nx = random.random()\n"
+        (f,) = findings_for("determinism", src, self.REL)
+        assert "unseeded" in f.message
+
+    def test_flags_id_call(self):
+        src = "def f(x):\n    return id(x)\n"
+        (f,) = findings_for("determinism", src, self.REL)
+        assert "id()" in f.message
+
+    def test_sorted_and_seeded_are_clean(self):
+        src = (
+            "import random\n"
+            "def f(d, seed):\n"
+            "    rng = random.Random(seed)\n"
+            "    return [rng.random() for k, v in sorted(d.items())]\n"
+        )
+        assert findings_for("determinism", src, self.REL) == []
+
+
+class TestTimeEps:
+    REL = "src/repro/scheduler/x.py"
+
+    def test_flags_exact_time_equality(self):
+        src = "def f(t0, t1):\n    return t0 == t1\n"
+        (f,) = findings_for("time-eps", src, self.REL)
+        assert f.rule == "time-eps"
+
+    def test_literal_and_inf_compares_are_exact_by_construction(self):
+        src = (
+            "import math\n"
+            "def f(deadline, t0):\n"
+            "    return deadline == math.inf or t0 == 0.0\n"
+        )
+        assert findings_for("time-eps", src, self.REL) == []
+
+    def test_eps_token_on_the_line_is_trusted(self):
+        src = "def f(t0, t1, EPS):\n    return (t0 == t1) and EPS > 0\n"
+        assert findings_for("time-eps", src, self.REL) == []
+
+    def test_non_time_names_are_ignored(self):
+        src = "def f(color, shape):\n    return color == shape\n"
+        assert findings_for("time-eps", src, self.REL) == []
+
+
+class TestTraceVocab:
+    REL = "src/repro/obs/x.py"
+
+    def test_flags_typod_emit_kind(self):
+        src = "def f(trace, t):\n    trace.emit('relese', t)\n"
+        (f,) = findings_for("trace-vocab", src, self.REL, config=VOCAB_CFG)
+        assert "'relese'" in f.message
+
+    def test_flags_bad_kind_in_sink_row(self):
+        src = (
+            "def f(trace, t):\n"
+            "    tr = trace.sink()\n"
+            "    tr((t, 'done', 'taskA'))\n"
+        )
+        (f,) = findings_for("trace-vocab", src, self.REL, config=VOCAB_CFG)
+        assert "'done'" in f.message
+
+    def test_flags_bad_kind_compared_against_event_kind(self):
+        src = "def f(e):\n    return e.kind == 'finish'\n"
+        assert findings_for("trace-vocab", src, self.REL, config=VOCAB_CFG)
+
+    def test_flags_bad_kind_in_vocab_tied_constant(self):
+        src = "DEFAULT_DIFF_KINDS = ('release', 'compleet')\n"
+        (f,) = findings_for("trace-vocab", src, self.REL, config=VOCAB_CFG)
+        assert "'compleet'" in f.message
+
+    def test_canonical_kinds_are_clean(self):
+        src = (
+            "def f(trace, e, t):\n"
+            "    trace.emit('release', t)\n"
+            "    return e.kind == 'complete'\n"
+        )
+        assert (
+            findings_for("trace-vocab", src, self.REL, config=VOCAB_CFG)
+            == []
+        )
+
+    def test_unrelated_kind_vocabularies_are_ignored(self):
+        # arrival specs, launch cases etc. also have a `.kind` — a
+        # different vocabulary the rule must leave alone
+        src = (
+            "_ARRIVAL_KINDS = ('periodic', 'sporadic')\n"
+            "def f(spec, case):\n"
+            "    return spec.kind == 'periodic' and case.kind == 'train'\n"
+        )
+        assert (
+            findings_for("trace-vocab", src, self.REL, config=VOCAB_CFG)
+            == []
+        )
+
+    def test_finalize_reports_emitterless_kinds(self):
+        cfg = {"rules": {"trace-vocab": {"vocab": ["release"]}}}
+        (f,) = lint_paths([], ROOT, config=cfg, rules=[RULES["trace-vocab"]])
+        assert "no emitter" in f.message and "'release'" in f.message
+
+    def test_finalize_skipped_on_partial_runs(self):
+        cfg = {"rules": {"trace-vocab": {"vocab": ["release"]}}}
+        assert (
+            lint_paths(
+                [], ROOT, config=cfg, rules=[RULES["trace-vocab"]],
+                partial=True,
+            )
+            == []
+        )
+
+
+class TestObsContract:
+    REL = "src/repro/scheduler/x.py"
+    CFG = VOCAB_CFG  # keep kind literals canonical in the snippets
+
+    def test_flags_enabled_read_inside_loop(self):
+        src = (
+            "def f(events, trace):\n"
+            "    for e in events:\n"
+            "        if trace.enabled:\n"
+            "            trace.emit('release', e)\n"
+        )
+        (f,) = findings_for("obs-contract", src, self.REL)
+        assert ".enabled" in f.message
+
+    def test_flags_sink_resolution_inside_loop(self):
+        src = (
+            "def f(events, trace):\n"
+            "    for e in events:\n"
+            "        trace.sink()((e, 'release'))\n"
+        )
+        (f,) = findings_for("obs-contract", src, self.REL)
+        assert ".sink()" in f.message
+
+    def test_flags_getattr_enabled_inside_loop(self):
+        src = (
+            "def f(events, trace):\n"
+            "    for e in events:\n"
+            "        if getattr(trace, 'enabled', False):\n"
+            "            pass\n"
+        )
+        (f,) = findings_for("obs-contract", src, self.REL)
+        assert "getattr" in f.message
+
+    def test_resolve_once_idiom_is_clean(self):
+        src = (
+            "def f(events, trace):\n"
+            "    tr = (\n"
+            "        trace.sink()\n"
+            "        if trace is not None and trace.enabled\n"
+            "        else None\n"
+            "    )\n"
+            "    for e in events:\n"
+            "        if tr is not None:\n"
+            "            tr((e, 'release'))\n"
+        )
+        assert findings_for("obs-contract", src, self.REL) == []
+
+
+# ---------------------------------------------------------------------------
+# framework mechanics
+# ---------------------------------------------------------------------------
+class TestSuppressions:
+    REL = "src/repro/pipeline/x.py"
+    SRC_BAD = "import time\nnow = time.time()\n"
+
+    def test_same_line_directive(self):
+        src = (
+            "import time\n"
+            "now = time.time()  # rtlint: disable=clock-domain\n"
+        )
+        assert findings_for("clock-domain", src, self.REL) == []
+
+    def test_rationale_after_dashes_does_not_leak_into_rule_names(self):
+        src = (
+            "import time\n"
+            "# rtlint: disable=clock-domain -- measured, on purpose\n"
+            "now = time.time()\n"
+        )
+        assert findings_for("clock-domain", src, self.REL) == []
+
+    def test_directive_survives_a_continuation_comment(self):
+        src = (
+            "import time\n"
+            "# rtlint: disable=clock-domain -- rationale that keeps\n"
+            "# going on a second comment line\n"
+            "now = time.time()\n"
+        )
+        assert findings_for("clock-domain", src, self.REL) == []
+
+    def test_wrong_rule_name_does_not_suppress(self):
+        src = (
+            "import time\n"
+            "now = time.time()  # rtlint: disable=determinism\n"
+        )
+        assert len(findings_for("clock-domain", src, self.REL)) == 1
+
+    def test_unused_directive_is_reported(self):
+        src = "x = 1  # rtlint: disable=clock-domain\n"
+        (f,) = findings_for(
+            "clock-domain", src, self.REL, report_unused=True
+        )
+        assert f.rule == "unused-suppression"
+        assert f.severity == "warning"
+
+    def test_stacked_directives(self):
+        src = (
+            "import time, random\n"
+            "# rtlint: disable=clock-domain\n"
+            "# rtlint: disable=determinism\n"
+            "x = (time.time(), random.random())\n"
+        )
+        out = lint_source(
+            src,
+            "src/repro/scheduler/x.py",  # in both rules' scopes
+            rules=[RULES["clock-domain"], RULES["determinism"]],
+            report_unused=True,
+        )
+        assert out == []
+
+
+class TestScopingAndSeverity:
+    SRC = "import time\nnow = time.time()\n"
+
+    def test_config_include_narrows_the_rule(self):
+        cfg = {"rules": {"clock-domain": {"include": ["src/repro/rt/**"]}}}
+        assert (
+            lint_source(
+                self.SRC,
+                "src/repro/pipeline/x.py",
+                rules=[RULES["clock-domain"]],
+                config=cfg,
+            )
+            == []
+        )
+
+    def test_config_exclude_carves_out_a_directory(self):
+        cfg = {"rules": {"clock-domain": {"exclude": ["src/repro/launch/**"]}}}
+        assert (
+            lint_source(
+                self.SRC,
+                "src/repro/launch/x.py",
+                rules=[RULES["clock-domain"]],
+                config=cfg,
+            )
+            == []
+        )
+
+    def test_config_severity_override(self):
+        cfg = {"rules": {"clock-domain": {"severity": "warning"}}}
+        (f,) = lint_source(
+            self.SRC,
+            "src/repro/pipeline/x.py",
+            rules=[RULES["clock-domain"]],
+            config=cfg,
+        )
+        assert f.severity == "warning"
+
+    def test_match_any_glob_forms(self):
+        assert match_any("src/repro/obs/trace.py", ("src/**",))
+        assert match_any("src/repro/obs/trace.py", ("src/repro/obs",))
+        assert match_any("src/repro/obs/trace.py", ("src/repro/obs/trace.py",))
+        assert not match_any("benchmarks/x.py", ("src/**",))
+        assert match_any("tools/rtlint/cli.py", ("tools/*/cli.py",))
+
+
+class TestConfig:
+    def test_mini_toml_subset(self):
+        doc = parse_toml_subset(
+            "\n".join(
+                (
+                    "[tool.rtlint]",
+                    'include = ["src", "tools"]  # scan roots',
+                    "strict = true",
+                    "max_findings = 50",
+                    "[tool.rtlint.rules.clock-domain]",
+                    'severity = "warning"',
+                    "exclude = [",
+                    '    "src/repro/traffic/clock.py",  # the impl',
+                    '    "src/repro/launch/**",',
+                    "]",
+                )
+            )
+        )
+        cfg = doc["tool"]["rtlint"]
+        assert cfg["include"] == ["src", "tools"]
+        assert cfg["strict"] is True
+        assert cfg["max_findings"] == 50
+        assert cfg["rules"]["clock-domain"]["severity"] == "warning"
+        assert cfg["rules"]["clock-domain"]["exclude"] == [
+            "src/repro/traffic/clock.py",
+            "src/repro/launch/**",
+        ]
+
+    def test_real_pyproject_round_trips_through_the_subset_parser(self):
+        """The repo's own [tool.rtlint] block must stay inside the
+        subset the 3.10 fallback parser understands."""
+        with open(os.path.join(ROOT, "pyproject.toml"), encoding="utf-8") as f:
+            text = f.read()
+        subset = parse_toml_subset(text)["tool"]["rtlint"]
+        assert subset == load_config(ROOT)  # tomllib agrees when present
+        assert "include" in subset and "rules" in subset
+        for name in subset["rules"]:
+            assert name in RULES, f"config scopes unknown rule {name!r}"
+
+    def test_outputs(self):
+        f = Finding(
+            rule="clock-domain",
+            rel="src/x.py",
+            line=3,
+            col=7,
+            message="wall-clock reference",
+            severity="error",
+        )
+        assert f.human() == (
+            "src/x.py:3:7: [error] clock-domain: wall-clock reference"
+        )
+        assert f.github() == (
+            "::error file=src/x.py,line=3,col=7,"
+            "title=rtlint(clock-domain)::wall-clock reference"
+        )
+        obj = f.json_obj()
+        assert obj["annotation_level"] == "failure"
+        assert obj["path"] == "src/x.py" and obj["start_line"] == 3
+        json.dumps(obj)  # annotation must be JSON-serializable
+
+
+# ---------------------------------------------------------------------------
+# the self-check
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "argv",
+    (
+        [],
+        ["--strict"],
+        ["--format", "github"],
+        ["--list-rules"],
+    ),
+    ids=("default", "strict", "github", "list-rules"),
+)
+def test_rtlint_over_this_repo_is_clean(argv):
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.rtlint", *argv],
+        cwd=ROOT,
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_rtlint_json_output_is_an_empty_annotation_list():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.rtlint", "--format", "json"],
+        cwd=ROOT,
+        capture_output=True,
+        text=True,
+        timeout=120,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert json.loads(proc.stdout) == []

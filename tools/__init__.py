@@ -1,0 +1,3 @@
+"""Repo tooling namespace: stdlib-only CI gates that run before
+dependency install (`tools.rtlint`, `tools/check_docs.py`) and the
+shared machinery both build on (`tools.pylib`)."""

@@ -24,19 +24,24 @@ it runs before dependencies are installed:
    against the full doc text: referencing one of them at all (outside
    an explicit "removed"/"old"/"retired" context sentence) fails.
 
+The repo walk, the AST parse cache and the code-vs-docstring token
+classification live in `tools.pylib` (shared with `tools/rtlint`).
+
 Run: ``python tools/check_docs.py`` (from the repo root; CI does).
 Exit 0 = fresh; exit 1 prints every stale reference with its file.
 """
 from __future__ import annotations
 
-import ast
 import os
 import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:  # `python tools/check_docs.py` direct invocation
+    sys.path.insert(0, ROOT)
 
-CODE_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+from tools.pylib import CODE_DIRS, code_words, iter_files, load  # noqa: E402
+
 DOC_FILES = ["README.md"] + sorted(
     os.path.join("docs", f)
     for f in (
@@ -106,63 +111,15 @@ _SPAN = re.compile(r"`([^`\n]+)`")
 _WORD = re.compile(r"[A-Za-z_]\w*")
 
 
-def _index_python(path: str, index: set[str]) -> None:
-    with open(path, encoding="utf-8") as f:
-        src = f.read()
-    try:
-        tree = ast.parse(src)
-    except SyntaxError:
-        return
-    docstrings: set[int] = set()
-    for node in ast.walk(tree):
-        if isinstance(
-            node,
-            (ast.Module, ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef),
-        ):
-            body = node.body
-            if (
-                body
-                and isinstance(body[0], ast.Expr)
-                and isinstance(body[0].value, ast.Constant)
-                and isinstance(body[0].value.value, str)
-            ):
-                docstrings.add(id(body[0].value))
-    for node in ast.walk(tree):
-        if isinstance(node, ast.Name):
-            index.add(node.id)
-        elif isinstance(node, ast.Attribute):
-            index.add(node.attr)
-        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
-            index.add(node.name)
-        elif isinstance(node, ast.arg):
-            index.add(node.arg)
-        elif isinstance(node, ast.keyword) and node.arg:
-            index.add(node.arg)
-        elif isinstance(node, ast.alias):
-            for part in (node.name or "").split("."):
-                index.add(part)
-            if node.asname:
-                index.add(node.asname)
-        elif (
-            isinstance(node, ast.Constant)
-            and isinstance(node.value, str)
-            and id(node) not in docstrings
-        ):
-            index.update(_WORD.findall(node.value))
-
-
 def build_index() -> set[str]:
     index: set[str] = set(ALLOW)
-    for top in CODE_DIRS:
-        for dirpath, _dirs, files in os.walk(os.path.join(ROOT, top)):
-            for f in files:
-                full = os.path.join(dirpath, f)
-                rel_parts = os.path.relpath(full, ROOT).split(os.sep)
-                for part in rel_parts:
-                    index.add(part)
-                    index.add(part.rsplit(".", 1)[0])
-                if f.endswith(".py"):
-                    _index_python(full, index)
+    for full in iter_files(CODE_DIRS, root=ROOT, suffix=None):
+        rel_parts = os.path.relpath(full, ROOT).split(os.sep)
+        for part in rel_parts:
+            index.add(part)
+            index.add(part.rsplit(".", 1)[0])
+        if full.endswith(".py"):
+            index.update(code_words(load(full, root=ROOT)))
     # top-level files + misc config words (flags, extras, job names)
     for f in os.listdir(ROOT):
         index.add(f)

@@ -1,0 +1,35 @@
+"""Shared stdlib-only machinery for the repo's pre-dependency CI gates.
+
+Both `tools/check_docs.py` (docs freshness) and `tools.rtlint` (the
+real-time-invariant linter) need the same three primitives:
+
+- a deterministic repo file walk (`repo_root`, `iter_files`),
+- a cached AST parse of every Python file (`load`, `PyFile`),
+- code-vs-docstring token classification (`docstring_exprs`,
+  `code_words`) — identifiers that appear in *code* versus words that
+  survive only in prose.
+
+Everything here is importable with no third-party dependencies so the
+gates run in CI before `pip install`.
+"""
+from tools.pylib.repo import CODE_DIRS, iter_files, repo_root
+from tools.pylib.parse import (
+    PyFile,
+    clear_cache,
+    code_words,
+    docstring_exprs,
+    from_source,
+    load,
+)
+
+__all__ = [
+    "CODE_DIRS",
+    "PyFile",
+    "clear_cache",
+    "code_words",
+    "docstring_exprs",
+    "from_source",
+    "iter_files",
+    "load",
+    "repo_root",
+]

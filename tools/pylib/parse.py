@@ -1,0 +1,130 @@
+"""Cached AST parsing + code-vs-docstring token classification."""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+
+_WORD = re.compile(r"[A-Za-z_]\w*")
+
+#: parse cache: absolute path -> (mtime, PyFile)
+_CACHE: dict[str, tuple[float, "PyFile"]] = {}
+
+
+@dataclass
+class PyFile:
+    """One parsed Python source file.
+
+    ``tree`` is ``None`` when the file does not parse (the gates skip
+    unparseable files rather than crash — CI's syntax check is pytest's
+    own collection, not ours). ``docstring_ids`` holds the ``id()`` of
+    every docstring ``ast.Constant`` so visitors can classify string
+    literals as code or prose in O(1).
+    """
+
+    path: str  # absolute, "" for in-memory sources
+    rel: str  # repo-relative posix path (or the given pseudo-path)
+    source: str
+    tree: ast.AST | None
+    docstring_ids: frozenset[int] = frozenset()
+    lines: list[str] = field(default_factory=list)
+
+    def line(self, lineno: int) -> str:
+        """1-indexed physical source line ("" out of range)."""
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1]
+        return ""
+
+
+def docstring_exprs(tree: ast.AST) -> frozenset[int]:
+    """``id()`` of every docstring string-Constant node in ``tree``."""
+    ids: set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(
+            node,
+            (ast.Module, ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef),
+        ):
+            body = node.body
+            if (
+                body
+                and isinstance(body[0], ast.Expr)
+                and isinstance(body[0].value, ast.Constant)
+                and isinstance(body[0].value.value, str)
+            ):
+                ids.add(id(body[0].value))
+    return frozenset(ids)
+
+
+def from_source(source: str, rel: str = "<memory>", path: str = "") -> PyFile:
+    """Parse an in-memory source string (the lint test corpus path)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError:
+        tree = None
+    return PyFile(
+        path=path,
+        rel=rel,
+        source=source,
+        tree=tree,
+        docstring_ids=docstring_exprs(tree) if tree is not None else frozenset(),
+        lines=source.splitlines(),
+    )
+
+
+def load(path: str, root: str | None = None) -> PyFile:
+    """Parse ``path`` through the cache (keyed by mtime)."""
+    path = os.path.abspath(path)
+    try:
+        mtime = os.path.getmtime(path)
+    except OSError:
+        mtime = -1.0
+    hit = _CACHE.get(path)
+    if hit is not None and hit[0] == mtime:
+        return hit[1]
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    rel = path
+    if root:
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+    pf = from_source(source, rel=rel, path=path)
+    _CACHE[path] = (mtime, pf)
+    return pf
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def code_words(pf: PyFile) -> set[str]:
+    """Every identifier that appears in *code* (names, attributes,
+    def/class names, args, keywords, import aliases) plus words inside
+    non-docstring string literals. Comments and docstrings are excluded
+    on purpose — a symbol that survives only in prose must not count as
+    alive (the `tools/check_docs.py` contract)."""
+    out: set[str] = set()
+    if pf.tree is None:
+        return out
+    for node in ast.walk(pf.tree):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            out.add(node.name)
+        elif isinstance(node, ast.arg):
+            out.add(node.arg)
+        elif isinstance(node, ast.keyword) and node.arg:
+            out.add(node.arg)
+        elif isinstance(node, ast.alias):
+            for part in (node.name or "").split("."):
+                out.add(part)
+            if node.asname:
+                out.add(node.asname)
+        elif (
+            isinstance(node, ast.Constant)
+            and isinstance(node.value, str)
+            and id(node) not in pf.docstring_ids
+        ):
+            out.update(_WORD.findall(node.value))
+    return out

@@ -1,0 +1,46 @@
+"""Deterministic repo file walk for the pre-dependency gates."""
+from __future__ import annotations
+
+import os
+
+#: the top-level directories that hold Python code (the default walk)
+CODE_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", ".ruff_cache"}
+
+
+def repo_root() -> str:
+    """Absolute path of the repository root (two levels above here)."""
+    return os.path.dirname(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    )
+
+
+def rel_posix(path: str, root: str) -> str:
+    """Repo-relative path with ``/`` separators (the lint/report key)."""
+    return os.path.relpath(path, root).replace(os.sep, "/")
+
+
+def iter_files(
+    tops=CODE_DIRS,
+    *,
+    root: str | None = None,
+    suffix: str | None = ".py",
+):
+    """Yield absolute file paths under ``tops``, sorted for determinism.
+
+    ``suffix`` filters by extension (``None`` yields every file). Cache
+    and VCS directories are skipped.
+    """
+    root = root or repo_root()
+    for top in tops:
+        base = os.path.join(root, top)
+        if os.path.isfile(base):
+            if suffix is None or base.endswith(suffix):
+                yield base
+            continue
+        for dirpath, dirs, files in os.walk(base):
+            dirs[:] = sorted(d for d in dirs if d not in _SKIP_DIRS)
+            for f in sorted(files):
+                if suffix is None or f.endswith(suffix):
+                    yield os.path.join(dirpath, f)

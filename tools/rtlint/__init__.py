@@ -1,0 +1,343 @@
+"""`rtlint` — real-time-invariant static analysis for this repo.
+
+PHAROS's schedulability guarantees only hold if the DES, the serving
+runtime and the analysis share a deterministic timebase and bit-stable
+event ordering. Those invariants used to live in docstrings; `rtlint`
+makes them machine-checked, stdlib-only, and runs in CI *before*
+dependency install (like `tools/check_docs.py`, with which it shares
+`tools.pylib`).
+
+Framework pieces:
+
+- `Rule` — an AST-visitor check with a name, severity and default
+  path scope; concrete rules register via `@register` (see
+  `tools.rtlint.rules`).
+- `Finding` — one diagnostic (rule, file, line, col, message).
+- inline suppressions — ``# rtlint: disable=<rule>[,<rule>...]`` on
+  the offending line, or on a comment line directly above it; every
+  suppression should carry a one-line rationale. Suppressions that
+  never fire are themselves reported (``unused-suppression``,
+  warning severity).
+- config — the ``[tool.rtlint]`` block in ``pyproject.toml`` scopes
+  rules per directory and overrides severities
+  (`tools.rtlint.config`).
+
+Run: ``python -m tools.rtlint`` (from the repo root; CI does).
+Docs: ``docs/static-analysis.md`` (rule catalog, how to add a rule).
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from dataclasses import dataclass, field
+
+_TOOLS_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_ROOT = os.path.dirname(_TOOLS_DIR)
+if _ROOT not in sys.path:  # `python tools/rtlint/...` direct invocation
+    sys.path.insert(0, _ROOT)
+
+from tools.pylib import PyFile, from_source, load  # noqa: E402
+
+SEVERITIES = ("error", "warning")
+
+#: ``# rtlint: disable=<rule>[,<rule>...]`` (optionally followed by a
+#: free-form rationale after `` -- `` or in a trailing comment)
+_SUPPRESS_RE = re.compile(
+    r"#\s*rtlint:\s*disable=([\w\-]+(?:\s*,\s*[\w\-]+)*)"
+)
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One diagnostic: ``rel:line:col [severity] rule: message``."""
+
+    rule: str
+    rel: str
+    line: int
+    col: int
+    message: str
+    severity: str = "error"
+
+    def human(self) -> str:
+        return (
+            f"{self.rel}:{self.line}:{self.col}: "
+            f"[{self.severity}] {self.rule}: {self.message}"
+        )
+
+    def github(self) -> str:
+        level = "error" if self.severity == "error" else "warning"
+        # GitHub workflow-command annotation (rendered on the PR diff)
+        msg = self.message.replace("%", "%25").replace("\n", "%0A")
+        return (
+            f"::{level} file={self.rel},line={self.line},"
+            f"col={self.col},title=rtlint({self.rule})::{msg}"
+        )
+
+    def json_obj(self) -> dict:
+        """GitHub checks-API annotation shape."""
+        return {
+            "path": self.rel,
+            "start_line": self.line,
+            "end_line": self.line,
+            "start_column": self.col,
+            "annotation_level": (
+                "failure" if self.severity == "error" else "warning"
+            ),
+            "title": f"rtlint({self.rule})",
+            "message": self.message,
+        }
+
+
+@dataclass
+class LintContext:
+    """Per-run shared state handed to every rule.
+
+    ``root`` is the repo root ("" for in-memory corpus runs);
+    ``config`` is the parsed ``[tool.rtlint]`` table; ``shared`` is a
+    scratch dict for cross-file rule state (e.g. the trace-vocabulary
+    rule accumulates emitted kinds here and reconciles in
+    `Rule.finalize`).
+    """
+
+    root: str = ""
+    config: dict = field(default_factory=dict)
+    shared: dict = field(default_factory=dict)
+
+    def rule_config(self, rule_name: str) -> dict:
+        return self.config.get("rules", {}).get(rule_name, {})
+
+
+class Rule:
+    """Base class: subclass, set the class attributes, implement
+    `check`; optionally implement `finalize` for whole-run checks."""
+
+    name: str = ""
+    description: str = ""
+    severity: str = "error"
+    #: default path scope (repo-relative posix globs); pyproject's
+    #: ``[tool.rtlint.rules.<name>]`` include/exclude override these
+    include: tuple[str, ...] = ("src/**",)
+    exclude: tuple[str, ...] = ()
+
+    def check(self, pf: PyFile, ctx: LintContext) -> list[Finding]:
+        raise NotImplementedError
+
+    def finalize(self, ctx: LintContext) -> list[Finding]:
+        return []
+
+    # -- scoping -------------------------------------------------------
+    def effective_severity(self, ctx: LintContext) -> str:
+        sev = self.rule_opt(ctx, "severity", self.severity)
+        return sev if sev in SEVERITIES else self.severity
+
+    def rule_opt(self, ctx: LintContext, key: str, default):
+        return ctx.rule_config(self.name).get(key, default)
+
+    def applies_to(self, rel: str, ctx: LintContext) -> bool:
+        inc = tuple(self.rule_opt(ctx, "include", self.include))
+        exc = tuple(self.rule_opt(ctx, "exclude", self.exclude))
+        return match_any(rel, inc) and not match_any(rel, exc)
+
+    def finding(
+        self, pf: PyFile, node, message: str, ctx: LintContext
+    ) -> Finding:
+        return Finding(
+            rule=self.name,
+            rel=pf.rel,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0) + 1,
+            message=message,
+            severity=self.effective_severity(ctx),
+        )
+
+
+def match_any(rel: str, patterns) -> bool:
+    """Match a repo-relative posix path against glob-ish patterns:
+    ``dir/**`` (or a bare directory) prefix-matches, exact paths match
+    literally, anything else goes through `fnmatch` (where ``*`` spans
+    ``/``)."""
+    from fnmatch import fnmatch
+
+    for pat in patterns:
+        pat = pat.rstrip("/")
+        if pat.endswith("/**"):
+            stem = pat[:-3]
+            if rel == stem or rel.startswith(stem + "/"):
+                return True
+        elif rel == pat or rel.startswith(pat + "/"):
+            return True
+        elif fnmatch(rel, pat):
+            return True
+    return False
+
+
+#: the rule registry: name -> Rule instance
+RULES: dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and register a `Rule`."""
+    rule = cls()
+    if not rule.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    if rule.name in RULES:
+        raise ValueError(f"duplicate rule name {rule.name!r}")
+    RULES[rule.name] = rule
+    return cls
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+@dataclass
+class Suppressions:
+    """Inline ``# rtlint: disable=`` directives of one file.
+
+    A directive on line L suppresses matching findings on L; a
+    directive on a *comment-only* line suppresses the next
+    non-comment line (directives stack). ``used`` tracks which
+    directives actually absorbed a finding so stale ones can be
+    reported."""
+
+    by_line: dict[int, set[str]] = field(default_factory=dict)
+    #: directive source line -> rule names it declares
+    declared: dict[int, set[str]] = field(default_factory=dict)
+    used: set[int] = field(default_factory=set)
+    #: finding line -> directive line(s) feeding it
+    _origin: dict[int, list[int]] = field(default_factory=dict)
+
+    @classmethod
+    def scan(cls, pf: PyFile) -> "Suppressions":
+        sup = cls()
+        pending: list[tuple[int, set[str]]] = []  # comment-line directives
+        for lineno, text in enumerate(pf.lines, 1):
+            m = _SUPPRESS_RE.search(text)
+            names: set[str] | None = None
+            if m:
+                names = {
+                    n.strip() for n in m.group(1).split(",") if n.strip()
+                }
+                sup.declared[lineno] = names
+            comment_only = text.lstrip().startswith("#")
+            if m and comment_only:
+                pending.append((lineno, names))
+                continue
+            if comment_only or not text.strip():
+                continue  # blank/plain comment: directives keep pending
+            target = sup.by_line.setdefault(lineno, set())
+            origin = sup._origin.setdefault(lineno, [])
+            for src, nms in pending:
+                target.update(nms)
+                origin.append(src)
+            pending.clear()
+            if m:
+                target.update(names)
+                origin.append(lineno)
+        return sup
+
+    def suppresses(self, finding: Finding) -> bool:
+        names = self.by_line.get(finding.line)
+        if not names or (
+            finding.rule not in names and "all" not in names
+        ):
+            return False
+        for src in self._origin.get(finding.line, []):
+            decl = self.declared.get(src, set())
+            if finding.rule in decl or "all" in decl:
+                self.used.add(src)
+        return True
+
+    def unused(self) -> list[tuple[int, set[str]]]:
+        return [
+            (lineno, names)
+            for lineno, names in sorted(self.declared.items())
+            if lineno not in self.used
+        ]
+
+
+# ---------------------------------------------------------------------------
+# the runner
+# ---------------------------------------------------------------------------
+def lint_file(
+    pf: PyFile,
+    ctx: LintContext,
+    rules=None,
+    *,
+    report_unused: bool = True,
+) -> list[Finding]:
+    """Run every in-scope rule over one parsed file."""
+    rules = list(RULES.values()) if rules is None else list(rules)
+    sup = Suppressions.scan(pf)
+    out: list[Finding] = []
+    for rule in rules:
+        if not rule.applies_to(pf.rel, ctx):
+            continue
+        if pf.tree is None:
+            continue
+        for f in rule.check(pf, ctx):
+            if not sup.suppresses(f):
+                out.append(f)
+    if report_unused:
+        for lineno, names in sup.unused():
+            out.append(
+                Finding(
+                    rule="unused-suppression",
+                    rel=pf.rel,
+                    line=lineno,
+                    col=1,
+                    message=(
+                        "suppression never fired: "
+                        f"disable={','.join(sorted(names))} — remove it "
+                        "or fix the rule name"
+                    ),
+                    severity="warning",
+                )
+            )
+    return out
+
+
+def lint_source(
+    source: str,
+    rel: str,
+    *,
+    rules=None,
+    config: dict | None = None,
+    report_unused: bool = False,
+) -> list[Finding]:
+    """Lint an in-memory snippet as if it lived at ``rel`` — the test
+    corpus entry point."""
+    ctx = LintContext(root="", config=config or {})
+    return lint_file(
+        from_source(source, rel=rel),
+        ctx,
+        rules=rules,
+        report_unused=report_unused,
+    )
+
+
+def lint_paths(
+    paths,
+    root: str,
+    config: dict | None = None,
+    rules=None,
+    *,
+    partial: bool = False,
+) -> list[Finding]:
+    """Lint files (absolute paths) against ``root``; runs per-file
+    checks then every rule's cross-file `finalize`. ``partial`` marks
+    an explicit-path run: rules whose finalize needs the whole tree
+    (e.g. trace-vocab's every-kind-has-an-emitter) skip themselves."""
+    import tools.rtlint.rules  # noqa: F401  (registers on import)
+
+    rules = list(RULES.values()) if rules is None else list(rules)
+    ctx = LintContext(root=root, config=config or {})
+    ctx.shared["partial"] = partial
+    findings: list[Finding] = []
+    for path in paths:
+        pf = load(path, root=root)
+        findings.extend(lint_file(pf, ctx, rules=rules))
+    for rule in rules:
+        findings.extend(rule.finalize(ctx))
+    findings.sort(key=lambda f: (f.rel, f.line, f.col, f.rule))
+    return findings

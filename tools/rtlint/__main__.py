@@ -1,0 +1,16 @@
+"""Bootstrap so both ``python -m tools.rtlint`` (repo root on path)
+and ``python tools/rtlint/__main__.py`` (it is not) resolve the
+``tools.*`` package imports."""
+import os
+import sys
+
+_ROOT = os.path.dirname(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+from tools.rtlint.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

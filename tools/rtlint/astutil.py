@@ -1,0 +1,84 @@
+"""Small AST helpers shared by the rtlint rules."""
+from __future__ import annotations
+
+import ast
+
+
+def dotted(node: ast.AST) -> str | None:
+    """Dotted name of a Name/Attribute chain (``time.perf_counter``,
+    ``self._tr.emit``); None for anything else."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def last_ident(node: ast.AST) -> str | None:
+    """The trailing identifier of an expression: ``a.b.c`` -> ``c``,
+    ``name`` -> ``name``, ``a[i]`` -> base's identifier."""
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Subscript):
+        return last_ident(node.value)
+    if isinstance(node, ast.Call):
+        return last_ident(node.func)
+    return None
+
+
+def is_call_to(node: ast.AST, names: set[str]) -> bool:
+    """Is ``node`` a Call whose dotted function name is in ``names``?"""
+    return (
+        isinstance(node, ast.Call)
+        and (dotted(node.func) or "") in names
+    )
+
+
+def str_consts(node: ast.AST) -> list[tuple[ast.AST, str]]:
+    """String constants reachable from ``node`` without descending into
+    calls: handles a bare constant, an IfExp over constants, and
+    tuple/list/set displays of constants — the shapes event-kind
+    arguments take."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [(node, node.value)]
+    if isinstance(node, ast.IfExp):
+        return str_consts(node.body) + str_consts(node.orelse)
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out = []
+        for elt in node.elts:
+            out.extend(str_consts(elt))
+        return out
+    return []
+
+
+class LoopAwareVisitor(ast.NodeVisitor):
+    """NodeVisitor that tracks whether the current node sits inside a
+    ``for``/``while`` body or a comprehension — the "per-event hot
+    loop" context several rules care about."""
+
+    def __init__(self) -> None:
+        self.loop_depth = 0
+
+    @property
+    def in_loop(self) -> bool:
+        return self.loop_depth > 0
+
+    def _visit_loop(self, node) -> None:
+        self.loop_depth += 1
+        try:
+            self.generic_visit(node)
+        finally:
+            self.loop_depth -= 1
+
+    visit_For = _visit_loop
+    visit_AsyncFor = _visit_loop
+    visit_While = _visit_loop
+    visit_ListComp = _visit_loop
+    visit_SetComp = _visit_loop
+    visit_DictComp = _visit_loop
+    visit_GeneratorExp = _visit_loop

@@ -1,0 +1,111 @@
+"""Command-line entry point: ``python -m tools.rtlint``."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from tools.pylib import iter_files, repo_root
+from tools.rtlint import RULES, lint_paths
+from tools.rtlint.config import load_config
+import tools.rtlint.rules  # noqa: F401  (populate the registry)
+
+#: directories scanned when neither config nor CLI names paths
+DEFAULT_SCAN = ("src", "benchmarks", "examples", "tools")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="rtlint",
+        description=(
+            "Real-time-invariant static analysis (stdlib-only; runs "
+            "before dependency install). See docs/static-analysis.md."
+        ),
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        help="files/directories to lint (default: the configured scan "
+        "roots; cross-file checks are skipped for explicit paths)",
+    )
+    ap.add_argument(
+        "--format",
+        choices=("human", "json", "github"),
+        default="human",
+        help="human lines, GitHub-annotation JSON, or GitHub workflow "
+        "commands",
+    )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="warnings also fail (default: only error severity fails)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    ap.add_argument(
+        "--root", default=None, help="repo root (default: autodetected)"
+    )
+    ap.add_argument(
+        "--no-config",
+        action="store_true",
+        help="ignore the [tool.rtlint] pyproject block (rule defaults "
+        "only)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            r = RULES[name]
+            print(f"{name:16s} [{r.severity}] {r.description}")
+        return 0
+
+    root = os.path.abspath(args.root) if args.root else repo_root()
+    config = {} if args.no_config else load_config(root)
+
+    partial = bool(args.paths)
+    if partial:
+        paths: list[str] = []
+        for p in args.paths:
+            full = p if os.path.isabs(p) else os.path.join(root, p)
+            if os.path.isdir(full):
+                paths.extend(iter_files((full,), root=root))
+            else:
+                paths.append(full)
+    else:
+        tops = tuple(config.get("include", DEFAULT_SCAN))
+        paths = list(iter_files(tops, root=root))
+
+    findings = lint_paths(paths, root, config=config, partial=partial)
+
+    errors = [f for f in findings if f.severity == "error"]
+    warnings = [f for f in findings if f.severity != "error"]
+
+    if args.format == "json":
+        print(json.dumps([f.json_obj() for f in findings], indent=2))
+    else:
+        for f in findings:
+            print(f.github() if args.format == "github" else f.human())
+
+    failed = bool(errors) or (args.strict and bool(warnings))
+    if args.format != "json":
+        if failed:
+            print(
+                f"rtlint: {len(errors)} error(s), {len(warnings)} "
+                f"warning(s) across {len(paths)} file(s)",
+                file=sys.stderr,
+            )
+        else:
+            extra = (
+                f", {len(warnings)} warning(s)" if warnings else ""
+            )
+            print(
+                f"rtlint clean: {len(paths)} file(s) against "
+                f"{len(RULES)} rule(s){extra}"
+            )
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

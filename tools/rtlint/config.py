@@ -1,0 +1,129 @@
+"""Minimal TOML reader for the ``[tool.rtlint]`` config block.
+
+Python 3.10 has no ``tomllib`` and the gate must not install
+dependencies, so this module parses the *subset* of TOML the rtlint
+config actually uses: ``[dotted.section]`` headers and
+``key = value`` pairs where value is a string, bool, number, or a
+(possibly multi-line) array of strings. Lines it cannot parse are
+skipped — other pyproject sections may use arbitrary TOML; only the
+``tool.rtlint`` subtree must stay within this subset (the self-test in
+``tests/test_rtlint.py`` parses the real pyproject and checks the
+block round-trips).
+
+When ``tomllib`` is available it is preferred, so 3.11+ parses the
+full language.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+_SECTION_RE = re.compile(r"^\s*\[([A-Za-z0-9_.\-\"' ]+)\]\s*(?:#.*)?$")
+_KEY_RE = re.compile(r"^\s*([A-Za-z0-9_\-]+|\"[^\"]+\")\s*=\s*(.*)$")
+_STR_RE = re.compile(r'"((?:[^"\\]|\\.)*)"|\'([^\']*)\'')
+
+
+def _strip_comment(text: str) -> str:
+    """Drop a trailing ``#`` comment that is not inside a string."""
+    out = []
+    in_str: str | None = None
+    for ch in text:
+        if in_str:
+            if ch == in_str:
+                in_str = None
+        elif ch in "\"'":
+            in_str = ch
+        elif ch == "#":
+            break
+        out.append(ch)
+    return "".join(out).strip()
+
+
+def _parse_scalar(text: str):
+    text = text.strip()
+    m = _STR_RE.fullmatch(text)
+    if m:
+        raw = m.group(1) if m.group(1) is not None else m.group(2)
+        return raw.encode().decode("unicode_escape") if "\\" in raw else raw
+    if text in ("true", "false"):
+        return text == "true"
+    try:
+        return int(text)
+    except ValueError:
+        pass
+    try:
+        return float(text)
+    except ValueError:
+        pass
+    return None  # out of subset: ignore
+
+
+def _parse_array(text: str) -> list:
+    out = []
+    for m in _STR_RE.finditer(text):
+        raw = m.group(1) if m.group(1) is not None else m.group(2)
+        out.append(
+            raw.encode().decode("unicode_escape") if "\\" in raw else raw
+        )
+    return out
+
+
+def parse_toml_subset(text: str) -> dict:
+    """Parse the supported TOML subset into nested dicts."""
+    root: dict = {}
+    section = root
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        line = _strip_comment(lines[i])
+        i += 1
+        if not line:
+            continue
+        m = _SECTION_RE.match(line)
+        if m:
+            section = root
+            for part in m.group(1).split("."):
+                part = part.strip().strip("\"'")
+                section = section.setdefault(part, {})
+                if not isinstance(section, dict):  # scalar collision
+                    section = {}
+            continue
+        m = _KEY_RE.match(line)
+        if not m:
+            continue
+        key = m.group(1).strip("\"'")
+        value = m.group(2)
+        # multi-line array: accumulate until brackets balance outside
+        # of strings
+        if value.lstrip().startswith("["):
+            buf = _strip_comment(value)
+            while buf.count("[") > buf.count("]") and i < len(lines):
+                buf += " " + _strip_comment(lines[i])
+                i += 1
+            section[key] = _parse_array(buf)
+            continue
+        parsed = _parse_scalar(_strip_comment(value))
+        if parsed is not None:
+            section[key] = parsed
+    return root
+
+
+def load_config(root: str) -> dict:
+    """The ``[tool.rtlint]`` table of ``<root>/pyproject.toml`` ({} when
+    absent)."""
+    path = os.path.join(root, "pyproject.toml")
+    if not os.path.isfile(path):
+        return {}
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    try:
+        import tomllib  # Python 3.11+
+
+        doc = tomllib.loads(text)
+    except ModuleNotFoundError:
+        doc = parse_toml_subset(text)
+    except Exception:
+        doc = parse_toml_subset(text)
+    tool = doc.get("tool", {})
+    cfg = tool.get("rtlint", {}) if isinstance(tool, dict) else {}
+    return cfg if isinstance(cfg, dict) else {}

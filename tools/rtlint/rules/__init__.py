@@ -1,0 +1,8 @@
+"""Rule modules register themselves on import (see `tools.rtlint.register`)."""
+from tools.rtlint.rules import (  # noqa: F401
+    clock_domain,
+    determinism,
+    obs_contract,
+    time_eps,
+    trace_vocab,
+)

@@ -1,0 +1,82 @@
+"""clock-domain: no wall-clock reads inside model-timebase code.
+
+Every schedulability claim in this repo assumes one deterministic
+timebase: the DES's event clock, the runtime's injected
+``Clock``/``sleep`` callables, the gateway's shared ``clk``. A stray
+``time.time()`` / ``time.perf_counter()`` / ``time.sleep()`` /
+``datetime.now()`` in those paths silently mixes wall time into model
+time — runs stop being reproducible and the analysis <-> DES <->
+runtime conformance contract stops meaning anything.
+
+The rule flags any *reference* (call or bare attribute — wall clocks
+leak in as default arguments too) to a wall-clock symbol. Allowed
+homes are configured per directory in ``pyproject.toml``
+(``[tool.rtlint.rules.clock-domain]``): the `WallClock` implementation
+itself, the wall-clock benches, training-launch timing, and DSE
+search-statistics; anything else needs an inline suppression with a
+rationale.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.pylib import PyFile
+from tools.rtlint import Finding, LintContext, Rule, register
+from tools.rtlint.astutil import dotted
+
+#: wall-clock reads/sleeps by dotted name (module-qualified and the
+#: common ``from datetime import datetime`` spelling)
+WALL_CLOCK_SYMBOLS = frozenset(
+    {
+        "time.time",
+        "time.time_ns",
+        "time.monotonic",
+        "time.monotonic_ns",
+        "time.perf_counter",
+        "time.perf_counter_ns",
+        "time.process_time",
+        "time.process_time_ns",
+        "time.sleep",
+        "datetime.datetime.now",
+        "datetime.datetime.utcnow",
+        "datetime.datetime.today",
+        "datetime.now",
+        "datetime.utcnow",
+        "datetime.today",
+        "datetime.date.today",
+        "date.today",
+    }
+)
+
+
+@register
+class ClockDomainRule(Rule):
+    name = "clock-domain"
+    description = (
+        "wall-clock reads (time.*, datetime.now) are forbidden in "
+        "model-timebase code; use the injected Clock"
+    )
+    severity = "error"
+    include = ("src/**",)
+    exclude = ("src/repro/traffic/clock.py",)
+
+    def check(self, pf: PyFile, ctx: LintContext) -> list[Finding]:
+        out: list[Finding] = []
+        assert pf.tree is not None
+        for node in ast.walk(pf.tree):
+            if not isinstance(node, ast.Attribute):
+                continue
+            name = dotted(node)
+            if name in WALL_CLOCK_SYMBOLS:
+                out.append(
+                    self.finding(
+                        pf,
+                        node,
+                        f"wall-clock reference `{name}` in model-"
+                        "timebase code: inject a Clock "
+                        "(repro.traffic.clock) or scope this "
+                        "directory out in [tool.rtlint.rules.clock-domain]",
+                        ctx,
+                    )
+                )
+        return out

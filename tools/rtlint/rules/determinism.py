@@ -1,0 +1,174 @@
+"""determinism: bit-stable ordering in scheduler/trace hot paths.
+
+The DES's event heap, the gateway's release loop and the trace streams
+promise *bit-identical* replays for identical seeds (the conformance
+harness and `tests/test_determinism.py` hold them to it). Three code
+shapes quietly break that promise:
+
+- order-sensitive iteration over a ``set`` (hash order varies with
+  PYTHONHASHSEED for str/object elements) or an *unsorted* dict view
+  whose insertion order is not itself pinned;
+- bare ``random.*`` / ``np.random.*`` module-level calls (global,
+  unseeded state) instead of a seeded ``random.Random(seed)`` /
+  ``np.random.default_rng(seed)`` generator;
+- ``id()``-based keys or tie-breaking — CPython ids are allocation
+  addresses, different every run.
+
+Iteration feeding order-insensitive reducers (``any``/``all``/``sum``
+of ints/``len``/membership) is not flagged; ``sorted(...)`` is always
+fine.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.pylib import PyFile
+from tools.rtlint import Finding, LintContext, Rule, register
+from tools.rtlint.astutil import dotted
+
+_DICT_VIEWS = ("keys", "values", "items")
+#: calls whose argument order reaches the output
+_ORDER_SENSITIVE_CALLS = ("list", "tuple", "enumerate", "reversed", "iter")
+_SEEDED_RANDOM = ("Random", "SystemRandom")
+_SEEDED_NP_RANDOM = ("default_rng", "SeedSequence", "Generator", "Philox", "PCG64")
+
+
+def _is_set_expr(node: ast.AST, set_names: set[str]) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        if node.func.id in ("set", "frozenset"):
+            return True
+    if isinstance(node, ast.Name) and node.id in set_names:
+        return True
+    return False
+
+
+def _is_dict_view(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and not node.args
+        and not node.keywords
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr in _DICT_VIEWS
+    )
+
+
+def _set_typed_names(tree: ast.AST) -> set[str]:
+    """Names assigned (or annotated) a set anywhere in the file — a
+    deliberately simple, file-local inference."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            if _is_set_expr(node.value, set()):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        names.add(tgt.id)
+        elif isinstance(node, ast.AnnAssign):
+            ann = ast.unparse(node.annotation) if node.annotation else ""
+            if isinstance(node.target, ast.Name) and (
+                ann.startswith("set") or ann.startswith("frozenset")
+            ):
+                names.add(node.target.id)
+    return names
+
+
+@register
+class DeterminismRule(Rule):
+    name = "determinism"
+    description = (
+        "hash-order iteration, unseeded randomness and id()-based "
+        "keys are forbidden in deterministic scheduler paths"
+    )
+    severity = "error"
+    include = (
+        "src/repro/scheduler/**",
+        "src/repro/traffic/**",
+        "src/repro/obs/**",
+    )
+
+    def check(self, pf: PyFile, ctx: LintContext) -> list[Finding]:
+        assert pf.tree is not None
+        out: list[Finding] = []
+        set_names = _set_typed_names(pf.tree)
+
+        def flag_iter_expr(node: ast.AST) -> None:
+            if _is_set_expr(node, set_names):
+                out.append(
+                    self.finding(
+                        pf,
+                        node,
+                        "order-sensitive iteration over a set (hash "
+                        "order): iterate sorted(...) or use a list/dict",
+                        ctx,
+                    )
+                )
+            elif _is_dict_view(node):
+                view = node.func.attr  # type: ignore[union-attr]
+                out.append(
+                    self.finding(
+                        pf,
+                        node,
+                        f"order-sensitive iteration over an unsorted "
+                        f"dict .{view}() view: wrap in sorted(...) or "
+                        "suppress with a rationale pinning the "
+                        "insertion order",
+                        ctx,
+                    )
+                )
+
+        for node in ast.walk(pf.tree):
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                flag_iter_expr(node.iter)
+            elif isinstance(
+                node,
+                (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp),
+            ):
+                for gen in node.generators:
+                    flag_iter_expr(gen.iter)
+            elif isinstance(node, ast.Call):
+                fn = dotted(node.func) or ""
+                if (
+                    isinstance(node.func, ast.Name)
+                    and node.func.id in _ORDER_SENSITIVE_CALLS
+                    and node.args
+                ):
+                    flag_iter_expr(node.args[0])
+                # unseeded module-level randomness
+                mod, _, leaf = fn.rpartition(".")
+                if mod == "random" and leaf not in _SEEDED_RANDOM:
+                    out.append(
+                        self.finding(
+                            pf,
+                            node,
+                            f"unseeded global randomness `{fn}()`: use "
+                            "a seeded random.Random(seed) generator",
+                            ctx,
+                        )
+                    )
+                elif (
+                    mod in ("np.random", "numpy.random")
+                    and leaf not in _SEEDED_NP_RANDOM
+                ):
+                    out.append(
+                        self.finding(
+                            pf,
+                            node,
+                            f"unseeded global randomness `{fn}()`: use "
+                            "np.random.default_rng(seed)",
+                            ctx,
+                        )
+                    )
+                elif fn == "id":
+                    out.append(
+                        self.finding(
+                            pf,
+                            node,
+                            "id() is an allocation address — different "
+                            "every run; never use it for ordering or "
+                            "keys (suppress with a rationale if it is "
+                            "pure identity membership)",
+                            ctx,
+                        )
+                    )
+        return out

@@ -1,0 +1,121 @@
+"""obs-contract: tracing handles are resolved once, never per event.
+
+`repro.obs.trace.TraceRecorder`'s zero-overhead-when-disabled
+guarantee (CI-enforced by ``benchmarks/obs_bench.py``) rests on the
+resolve-once idiom: each instrumented run evaluates
+``tr = trace if trace is not None and trace.enabled else None`` (or
+``trace.sink()``) *once*, then guards emissions with ``if tr is not
+None``. Re-resolving inside a loop — a per-event ``recorder.enabled``
+read, a ``getattr(trace, "enabled", ...)``, or worse a fresh
+``.sink()`` — re-introduces per-event overhead for disabled tracing
+and, for ``sink()``, re-snapshots sticky annotations mid-run.
+
+Flagged inside ``for``/``while`` bodies and comprehensions, on
+trace-ish receivers only:
+
+- ``.sink(...)`` calls — hoist the handle above the loop;
+- ``.enabled`` attribute reads and ``getattr(x, "enabled", ...)`` —
+  resolve once to a nullable handle instead.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.pylib import PyFile
+from tools.rtlint import Finding, LintContext, Rule, register
+from tools.rtlint.astutil import LoopAwareVisitor, dotted, last_ident
+
+_TRACEISH = ("tr", "_tr", "trace", "recorder", "rec")
+
+
+def _traceish(node: ast.AST) -> bool:
+    name = (last_ident(node) or "").lower()
+    return (
+        name in _TRACEISH
+        or "trace" in name
+        or "recorder" in name
+        or name.endswith("_tr")
+    )
+
+
+@register
+class ObsContractRule(Rule):
+    name = "obs-contract"
+    description = (
+        "per-event trace-handle resolution (.enabled reads / .sink() "
+        "calls) inside loops breaks the resolve-once zero-overhead "
+        "contract"
+    )
+    severity = "error"
+    include = (
+        "src/repro/scheduler/**",
+        "src/repro/pipeline/**",
+        "src/repro/traffic/**",
+        "src/repro/conformance/**",
+    )
+
+    def check(self, pf: PyFile, ctx: LintContext) -> list[Finding]:
+        assert pf.tree is not None
+        rule = self
+        out: list[Finding] = []
+
+        class V(LoopAwareVisitor):
+            def visit_Call(self, node: ast.Call) -> None:
+                if self.in_loop:
+                    fn = node.func
+                    if (
+                        isinstance(fn, ast.Attribute)
+                        and fn.attr == "sink"
+                        and _traceish(fn.value)
+                    ):
+                        out.append(
+                            rule.finding(
+                                pf,
+                                node,
+                                ".sink() resolved inside a loop: hoist "
+                                "the handle above the loop (resolve-"
+                                "once contract, repro.obs.trace)",
+                                ctx,
+                            )
+                        )
+                    elif (
+                        isinstance(fn, ast.Name)
+                        and fn.id == "getattr"
+                        and len(node.args) >= 2
+                        and isinstance(node.args[1], ast.Constant)
+                        and node.args[1].value == "enabled"
+                        and _traceish(node.args[0])
+                    ):
+                        out.append(
+                            rule.finding(
+                                pf,
+                                node,
+                                'per-event getattr(..., "enabled") '
+                                "inside a loop: resolve the trace "
+                                "handle once before the loop",
+                                ctx,
+                            )
+                        )
+                self.generic_visit(node)
+
+            def visit_Attribute(self, node: ast.Attribute) -> None:
+                if (
+                    self.in_loop
+                    and node.attr == "enabled"
+                    and _traceish(node.value)
+                ):
+                    out.append(
+                        rule.finding(
+                            pf,
+                            node,
+                            "per-event .enabled read inside a loop: "
+                            "resolve the trace handle once before the "
+                            "loop (tr = trace if trace is not None "
+                            "and trace.enabled else None)",
+                            ctx,
+                        )
+                    )
+                self.generic_visit(node)
+
+        V().visit(pf.tree)
+        return out

@@ -1,0 +1,145 @@
+"""time-eps: no exact float equality between time-typed expressions.
+
+Model time in this repo is accumulated floating point (event
+timestamps, response bounds, Eq. 3 slacks). Two independently-derived
+time values that are *mathematically* equal are not *bitwise* equal
+after different accumulation orders, so ``a == b`` / ``a != b``
+between time-typed expressions is a latent boundary bug — the Eq. 3
+boundary uses the module EPS idiom instead
+(`repro.core.rt.schedulability.EPS`: clamp or compare within the
+band).
+
+Exact comparisons against literals, ``math.inf`` / ``float("inf")``
+and ``None`` stay legal (sentinels and saturation checks are exact by
+construction), and any line that already mentions an EPS/tolerance
+token is trusted.
+"""
+from __future__ import annotations
+
+import ast
+
+from tools.pylib import PyFile
+from tools.rtlint import Finding, LintContext, Rule, register
+from tools.rtlint.astutil import dotted, last_ident
+
+#: identifiers treated as time-typed, exactly ...
+_TIME_NAMES = frozenset(
+    {
+        "t",
+        "t0",
+        "t1",
+        "dt",
+        "now",
+        "rel",
+        "release",
+        "deadline",
+        "abs_deadline",
+        "horizon",
+        "period",
+        "phase",
+        "slack",
+        "wcet",
+        "arrival",
+        "jitter",
+        "tardiness",
+        "response",
+        "busy_until",
+        "block_until",
+        "run_start",
+    }
+)
+#: ... or by substring
+_TIME_SUBSTR = (
+    "time",
+    "deadline",
+    "release",
+    "horizon",
+    "period",
+    "arrival",
+    "wcet",
+    "slack",
+    "latency",
+)
+#: tokens on the source line that signal an explicit tolerance idiom
+_EPS_TOKENS = ("EPS", "eps", "tol", "1e-")
+
+
+def _is_time_ident(name: str | None) -> bool:
+    if not name:
+        return False
+    low = name.lower()
+    return (
+        low in _TIME_NAMES
+        or low.endswith("_t")
+        or low.endswith("_s")
+        or any(s in low for s in _TIME_SUBSTR)
+    )
+
+
+def _is_time_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.BinOp):
+        return _is_time_expr(node.left) or _is_time_expr(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _is_time_expr(node.operand)
+    return _is_time_ident(last_ident(node))
+
+
+def _is_exact_operand(node: ast.AST) -> bool:
+    """Literals, +-inf and None compare exactly by construction."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.UnaryOp):
+        return _is_exact_operand(node.operand)
+    if (dotted(node) or "") in ("math.inf", "math.nan", "np.inf", "numpy.inf"):
+        return True
+    if isinstance(node, ast.Call):
+        fn = dotted(node.func) or ""
+        if fn == "float" and node.args:
+            return _is_exact_operand(node.args[0]) or (
+                isinstance(node.args[0], ast.Constant)
+            )
+        if fn in ("math.isinf", "math.isnan"):
+            return True
+    return False
+
+
+@register
+class TimeEpsRule(Rule):
+    name = "time-eps"
+    description = (
+        "exact ==/!= between float time-typed expressions; use the "
+        "module EPS idiom"
+    )
+    severity = "error"
+    include = ("src/repro/core/rt/**", "src/repro/scheduler/**")
+
+    def check(self, pf: PyFile, ctx: LintContext) -> list[Finding]:
+        assert pf.tree is not None
+        out: list[Finding] = []
+        for node in ast.walk(pf.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            line_text = pf.line(node.lineno)
+            if any(tok in line_text for tok in _EPS_TOKENS):
+                continue  # explicit tolerance idiom on this line
+            operands = [node.left] + list(node.comparators)
+            for op, lhs, rhs in zip(node.ops, operands, operands[1:]):
+                if not isinstance(op, (ast.Eq, ast.NotEq)):
+                    continue
+                if _is_exact_operand(lhs) or _is_exact_operand(rhs):
+                    continue
+                if _is_time_expr(lhs) and _is_time_expr(rhs):
+                    sym = "==" if isinstance(op, ast.Eq) else "!="
+                    out.append(
+                        self.finding(
+                            pf,
+                            node,
+                            f"exact float `{sym}` between time-typed "
+                            "expressions: accumulated model time is "
+                            "not bitwise-stable — compare within the "
+                            "module EPS band "
+                            "(repro.core.rt.schedulability.EPS)",
+                            ctx,
+                        )
+                    )
+        return out

@@ -1,0 +1,248 @@
+"""trace-vocab: every trace event kind is canonical, every kind emitted.
+
+The 12-kind event vocabulary in ``src/repro/obs/trace.py``
+(``EVENT_KINDS``) is the cross-layer schedule contract: the DES, the
+runtime, the gateway and every consumer (metrics, diff, Chrome export)
+agree on it. A typo'd kind string silently drops events from metrics
+and diffs — no exception, just wrong numbers.
+
+Checked, per file:
+
+- ``<recorder>.emit("<kind>", ...)`` calls (first positional or
+  ``kind=``) on trace-ish receivers;
+- compact sink-row calls ``tr((t, "<kind>", ...))`` where ``tr`` was
+  bound from a ``.sink()`` resolve;
+- ``<recorder>.stream(kind="<kind>")`` filters;
+- comparisons against ``<event>.kind`` where the receiver is an
+  event-ish name (``e`` / ``ev`` / ``event``; other ``.kind``
+  attributes — arrival specs, launch cases, dtypes — are unrelated
+  vocabularies and are left alone);
+- tuple/list/set literals assigned to ``*KINDS`` names whose name ties
+  them to the trace vocabulary (contains ``EVENT``/``TRACE``/``DIFF``,
+  e.g. ``DEFAULT_DIFF_KINDS``); other ``*_KINDS`` constants (e.g.
+  ``_ARRIVAL_KINDS``) are different vocabularies.
+
+Cross-file (`finalize`): every declared kind must have at least one
+emitter in the scanned tree, so the vocabulary cannot grow dead
+entries.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from tools.pylib import PyFile, load
+from tools.rtlint import Finding, LintContext, Rule, register
+from tools.rtlint.astutil import dotted, last_ident, str_consts
+
+#: the vocabulary's home, relative to the repo root
+VOCAB_FILE = "src/repro/obs/trace.py"
+
+_TRACEISH = ("tr", "_tr", "trace", "recorder", "rec")
+
+
+def _traceish(receiver: ast.AST) -> bool:
+    name = (last_ident(receiver) or "").lower()
+    return (
+        name in _TRACEISH
+        or "trace" in name
+        or "recorder" in name
+        or name.endswith("_tr")
+    )
+
+
+#: receivers whose ``.kind`` is a trace event's kind (vs. arrival
+#: specs, launch cases, numpy dtypes, violations, ... which also have
+#: a ``.kind`` but a different vocabulary)
+_EVENTISH = ("e", "ev", "evt", "event")
+
+
+def _eventish(receiver: ast.AST) -> bool:
+    name = (last_ident(receiver) or "").lower()
+    return name in _EVENTISH or "event" in name
+
+
+def _vocab_tied(const_name: str) -> bool:
+    up = const_name.upper()
+    return "EVENT" in up or "TRACE" in up or "DIFF" in up
+
+
+def _sink_bound_names(tree: ast.AST) -> set[str]:
+    """Names assigned from an expression containing a ``.sink()`` call
+    (e.g. ``tr = cfg.trace.sink() if ... else None``)."""
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        has_sink = any(
+            isinstance(sub, ast.Call)
+            and isinstance(sub.func, ast.Attribute)
+            and sub.func.attr == "sink"
+            for sub in ast.walk(node.value)
+        )
+        if has_sink:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    names.add(tgt.id)
+    return names
+
+
+def _load_vocab(ctx: LintContext):
+    """(vocab frozenset, decl file rel, decl line) or None when
+    unavailable — from config override or the canonical trace module."""
+    if "trace_vocab" in ctx.shared:
+        return ctx.shared["trace_vocab"]
+    cfg_vocab = ctx.rule_config("trace-vocab").get("vocab")
+    result = None
+    if cfg_vocab:
+        result = (frozenset(cfg_vocab), VOCAB_FILE, 1)
+    elif ctx.root:
+        path = os.path.join(ctx.root, VOCAB_FILE)
+        if os.path.isfile(path):
+            pf = load(path, root=ctx.root)
+            if pf.tree is not None:
+                for node in ast.walk(pf.tree):
+                    if (
+                        isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Name)
+                        and node.targets[0].id == "EVENT_KINDS"
+                    ):
+                        kinds = [v for _n, v in str_consts(node.value)]
+                        result = (
+                            frozenset(kinds), VOCAB_FILE, node.lineno
+                        )
+                        break
+    ctx.shared["trace_vocab"] = result
+    return result
+
+
+@register
+class TraceVocabRule(Rule):
+    name = "trace-vocab"
+    description = (
+        "trace event-kind strings must be members of the canonical "
+        "EVENT_KINDS vocabulary, and every kind must have an emitter"
+    )
+    severity = "error"
+    include = ("src/**", "benchmarks/**", "examples/**")
+
+    def _flag(self, pf, node, kind, ctx, how: str) -> Finding:
+        return self.finding(
+            pf,
+            node,
+            f"event kind {kind!r} ({how}) is not in the canonical "
+            f"trace vocabulary (EVENT_KINDS in {VOCAB_FILE}) — fix "
+            "the string or extend the vocabulary",
+            ctx,
+        )
+
+    def check(self, pf: PyFile, ctx: LintContext) -> list[Finding]:
+        loaded = _load_vocab(ctx)
+        if loaded is None:
+            return []
+        vocab, _, _ = loaded
+        assert pf.tree is not None
+        out: list[Finding] = []
+        emitted: set[str] = ctx.shared.setdefault("trace_emitted", set())
+        sink_names = _sink_bound_names(pf.tree)
+        in_vocab_module = pf.rel == VOCAB_FILE
+
+        def check_kind(node, kind, how, *, is_emitter=False):
+            if is_emitter:
+                emitted.add(kind)
+            if kind not in vocab:
+                out.append(self._flag(pf, node, kind, ctx, how))
+
+        for node in ast.walk(pf.tree):
+            if isinstance(node, ast.Call):
+                fn = node.func
+                if isinstance(fn, ast.Attribute) and fn.attr in (
+                    "emit",
+                    "stream",
+                ):
+                    if not _traceish(fn.value):
+                        continue
+                    arg = None
+                    if fn.attr == "emit" and node.args:
+                        arg = node.args[0]
+                    for kw in node.keywords:
+                        if kw.arg == "kind":
+                            arg = kw.value
+                    if arg is not None:
+                        for n, kind in str_consts(arg):
+                            check_kind(
+                                n,
+                                kind,
+                                f"passed to .{fn.attr}()",
+                                is_emitter=(fn.attr == "emit"),
+                            )
+                elif (
+                    isinstance(fn, ast.Name)
+                    and fn.id in sink_names
+                    and len(node.args) == 1
+                    and isinstance(node.args[0], ast.Tuple)
+                    and len(node.args[0].elts) >= 2
+                ):
+                    for n, kind in str_consts(node.args[0].elts[1]):
+                        check_kind(
+                            n, kind, "in a sink row", is_emitter=True
+                        )
+            elif isinstance(node, ast.Compare):
+                sides = [node.left] + list(node.comparators)
+                kind_side = any(
+                    isinstance(s, ast.Attribute)
+                    and s.attr == "kind"
+                    and _eventish(s.value)
+                    for s in sides
+                )
+                if not kind_side:
+                    continue
+                for s in sides:
+                    for n, kind in str_consts(s):
+                        check_kind(n, kind, "compared against .kind")
+            elif (
+                isinstance(node, ast.Assign)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and node.targets[0].id.endswith("KINDS")
+                and _vocab_tied(node.targets[0].id)
+                and not (
+                    in_vocab_module
+                    and node.targets[0].id == "EVENT_KINDS"
+                )
+            ):
+                for n, kind in str_consts(node.value):
+                    check_kind(
+                        n,
+                        kind,
+                        f"in {node.targets[0].id}",
+                    )
+        return out
+
+    def finalize(self, ctx: LintContext) -> list[Finding]:
+        if ctx.shared.get("partial"):
+            return []  # explicit-path run: emitters were not all scanned
+        loaded = _load_vocab(ctx)
+        if loaded is None:
+            return []
+        vocab, rel, lineno = loaded
+        emitted = ctx.shared.get("trace_emitted", set())
+        out: list[Finding] = []
+        for kind in sorted(vocab - emitted):
+            out.append(
+                Finding(
+                    rule=self.name,
+                    rel=rel,
+                    line=lineno,
+                    col=1,
+                    message=(
+                        f"declared event kind {kind!r} has no emitter "
+                        "anywhere in the tree — remove it from "
+                        "EVENT_KINDS or instrument the layer that "
+                        "should emit it"
+                    ),
+                    severity=self.effective_severity(ctx),
+                )
+            )
+        return out
