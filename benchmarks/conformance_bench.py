@@ -14,7 +14,7 @@ host ``wall_seconds`` and a ``trace_diff`` verdict (``identical`` or
 the first divergent event) from the `repro.obs` schedule traces — the
 bench asserts the verdict exists for every registry case.
 
-Five CI-enforced invariants ride on top of the sweep:
+Six CI-enforced invariants ride on top of the sweep:
 
 - **tightened tolerance** — the window-boundary DES must hold a
   DES-vs-runtime tolerance *strictly below* the PR-2 values that
@@ -32,6 +32,11 @@ Five CI-enforced invariants ride on top of the sweep:
 - **shedding cases** — `run_shedding_case` drives overdriven
   scenarios with identical drop-shedding armed in DES and runtime and
   matches the surviving jobs by release time;
+- **mode-switch cases** — `run_mode_switch_case` drives the
+  mixed-criticality ``av_stack`` scenario with twin `ModeController`s
+  armed in DES and runtime; CI fails on any HI-class guarantee miss
+  across a transition, on survivor-set disagreement, and on a
+  committed switch whose Eq. 3 re-proof failed;
 - **wall-clock case** — `run_wallclock_case` drives the gateway on the
   real clock against the calibrated `CostModel` in calibrated-admission
   mode (tenancy admitted against measured WCETs; one retry absorbs a
@@ -64,6 +69,7 @@ from repro.conformance import (
     CostModel,
     run_conformance,
     run_dse_case,
+    run_mode_switch_case,
     run_sharded_case,
     run_shedding_case,
     run_wallclock_case,
@@ -317,6 +323,80 @@ def bench_shedding(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
     return {"cases": cases}, ok
 
 
+def bench_mode_switch(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
+    """Mixed-criticality mode-switch conformance: the ``av_stack``
+    scenario (overdriven LO infotainment next to HI perception) with
+    twin `ModeController`s armed in DES and runtime. The CI gate fails
+    on *any* HI-class guarantee miss across a transition — a HI job
+    exceeding the survivor set's Eq. 3 bound plus the transition
+    allowance — and on survivor-set disagreement between the layers."""
+    from repro.core.perfmodel.hardware import paper_platform
+    from repro.traffic.scenarios import build, get_scenario
+
+    cfg = ConformanceConfig(horizon_periods=24.0 if quick else 60.0)
+    configs = (
+        (("degrade", "edf"), ("drop", "edf"))
+        if quick
+        else (
+            ("degrade", "edf"),
+            ("degrade", "fifo"),
+            ("drop", "edf"),
+            ("drop", "fifo"),
+        )
+    )
+    built = prebuilt.get("av_stack") or build(
+        get_scenario("av_stack"), paper_platform(16), beam_width=4
+    )
+    prebuilt["av_stack"] = built
+    cases = []
+    ok = True
+    for action, policy in configs:
+        res = run_mode_switch_case(built, policy, action=action, cfg=cfg)
+        des_miss, srv_miss = res.hi_miss_totals()
+        ok = ok and res.ok
+        cases.append(
+            {
+                "scenario": res.scenario,
+                "policy": res.policy,
+                "action": res.action,
+                "analysis_schedulable": res.analysis_schedulable,
+                "hi_proof_schedulable": res.hi_proof_schedulable,
+                "survivors": list(res.survivors),
+                "des_switches": len(res.des_switches),
+                "server_switches": len(res.server_switches),
+                "hi_misses_des": des_miss,
+                "hi_misses_server": srv_miss,
+                "tasks": [
+                    {
+                        "task": t.task,
+                        "criticality": t.criticality,
+                        "des_completed": t.des_completed,
+                        "des_shed": t.des_shed,
+                        "des_degraded": t.des_degraded,
+                        "des_misses": t.des_misses,
+                        "server_completed": t.server_completed,
+                        "server_shed": t.server_shed,
+                        "server_degraded": t.server_degraded,
+                        "server_misses": t.server_misses,
+                        "matched_jobs": t.matched_jobs,
+                        "des_max_s": t.des_max,
+                        "server_max_s": t.server_max,
+                    }
+                    for t in res.tasks
+                ],
+                "violations": [str(v) for v in res.violations],
+            }
+        )
+        print(
+            f"mode {res.scenario:10s} {action:8s}/{policy:4s} "
+            f"switches des/srv={len(res.des_switches)}/"
+            f"{len(res.server_switches)} "
+            f"hi_miss={des_miss}/{srv_miss} "
+            f"survivors={list(res.survivors)} viol={len(res.violations)}"
+        )
+    return {"cases": cases}, ok
+
+
 def bench_calibration(quick: bool, built) -> dict:
     """Wall-clock WCET calibration on the steady_city serve bundle."""
     from repro.pipeline.serve import PharosServer
@@ -448,6 +528,7 @@ def main() -> None:
     sharded, sharded_ok = bench_sharded(quick, sharded_city)
     dse, dse_ok = bench_dse(quick)
     shedding, shedding_ok = bench_shedding(quick, {})
+    modes, modes_ok = bench_mode_switch(quick, {})
     wall, wall_ok = bench_wallclock(quick, steady)
     payload = {
         "bench": "conformance",
@@ -456,6 +537,7 @@ def main() -> None:
         "sharded": sharded,
         "dse": dse,
         "shedding": shedding,
+        "mode_switch": modes,
         "wallclock": wall,
         "calibration": bench_calibration(quick, steady),
     }
@@ -464,7 +546,14 @@ def main() -> None:
     with open(path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"\nwrote {path}")
-    if not ok or not sharded_ok or not dse_ok or not shedding_ok or not wall_ok:
+    if (
+        not ok
+        or not sharded_ok
+        or not dse_ok
+        or not shedding_ok
+        or not modes_ok
+        or not wall_ok
+    ):
         print("CONFORMANCE VIOLATIONS DETECTED", file=sys.stderr)
         sys.exit(1)
 

@@ -13,6 +13,10 @@
   held to the full contract + bit-exact per-shard admission);
   `run_shedding_case` (overdriven traffic with identical shedding
   armed in DES and runtime, release-matched surviving jobs);
+  `run_mode_switch_case` (mixed-criticality overload: twin
+  `ModeController`s in DES and runtime must agree on the Eq. 3
+  re-proved HI survivor set and lose zero HI deadlines across every
+  transition);
   `run_dse_case` (every DSE-claimed-feasible design held to the three
   layers, and the best design provisioned into a `ShardedGateway`
   that must serve the scenario's traffic violation-free); plus
@@ -33,6 +37,8 @@ from repro.conformance.harness import (
     ConformanceConfig,
     ConformanceReport,
     DSECaseResult,
+    ModeSwitchCaseResult,
+    ModeSwitchTaskRow,
     ShardedCaseResult,
     SheddingCaseResult,
     SheddingTaskRow,
@@ -44,6 +50,7 @@ from repro.conformance.harness import (
     run_case,
     run_conformance,
     run_dse_case,
+    run_mode_switch_case,
     run_sharded_case,
     run_shedding_case,
     run_virtual_server,
@@ -61,6 +68,8 @@ __all__ = [
     "ConformanceConfig",
     "ConformanceReport",
     "DSECaseResult",
+    "ModeSwitchCaseResult",
+    "ModeSwitchTaskRow",
     "ShardedCaseResult",
     "SheddingCaseResult",
     "SheddingTaskRow",
@@ -72,6 +81,7 @@ __all__ = [
     "run_case",
     "run_conformance",
     "run_dse_case",
+    "run_mode_switch_case",
     "run_sharded_case",
     "run_shedding_case",
     "run_virtual_server",

@@ -77,7 +77,7 @@ from repro.obs.diff import TraceDiff, trace_diff
 from repro.obs.trace import TraceRecorder
 from repro.core.rt.response_time import end_to_end_bounds
 from repro.core.rt.schedulability import srt_schedulable
-from repro.core.rt.task import SegmentTable
+from repro.core.rt.task import SegmentTable, TaskSet
 from repro.scheduler.des import SimResult, simulate_taskset
 
 
@@ -1112,6 +1112,396 @@ def run_shedding_case(
         analysis_schedulable=sched_a,
         des_overloaded=des.overload_detected,
         server_bounded=server_bounded,
+        tasks=tuple(rows),
+        violations=tuple(violations),
+    )
+
+
+# ---------------------------------------------------------------------------
+# the mode-switch case: mixed-criticality overload transitions
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ModeSwitchTaskRow:
+    """Per-task view of one mode-switch conformance case.
+
+    The ``*_misses`` columns count **per-class guarantee** violations
+    in the SRT sense: jobs whose response exceeds the survivor set's
+    analytic bound plus the transition allowance (see
+    `run_mode_switch_case`). Tenants outside the survivor set carry no
+    guarantee in HI mode, so their columns are definitionally zero."""
+
+    task: str
+    criticality: str
+    des_completed: int
+    des_shed: int
+    des_degraded: int
+    des_misses: int
+    server_completed: int
+    server_shed: int
+    server_degraded: int
+    server_misses: int
+    matched_jobs: int
+    des_max: float
+    server_max: float
+
+
+@dataclass(frozen=True)
+class ModeSwitchCaseResult:
+    """DES-with-modes vs runtime-with-modes on overdriven
+    mixed-criticality traffic (`run_mode_switch_case`)."""
+
+    scenario: str
+    policy: str
+    action: str
+    analysis_schedulable: bool
+    #: every committed HI entry carried a schedulable Eq. 3 re-proof of
+    #: its survivor set (in both layers)
+    hi_proof_schedulable: bool
+    #: committed transitions, ``(t, mode, survivors)`` per layer
+    des_switches: tuple[tuple[float, str, tuple[str, ...]], ...]
+    server_switches: tuple[tuple[float, str, tuple[str, ...]], ...]
+    #: the agreed HI-mode guarantee set (first HI entry)
+    survivors: tuple[str, ...]
+    tasks: tuple[ModeSwitchTaskRow, ...]
+    violations: tuple[Violation, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def hi_miss_totals(self) -> tuple[int, int]:
+        """(DES, runtime) deadline-miss totals over the HI class."""
+        hi = [t for t in self.tasks if t.criticality == "HI"]
+        return (
+            sum(t.des_misses for t in hi),
+            sum(t.server_misses for t in hi),
+        )
+
+
+def _hi_entries(switches):
+    """The HI-entry transitions of one layer's switch log."""
+    return [s for s in switches if s[1] == "hi"]
+
+
+def run_mode_switch_case(
+    built,
+    policy: str = "edf",
+    *,
+    action: str = "degrade",
+    cfg: ConformanceConfig | None = None,
+) -> ModeSwitchCaseResult:
+    """Mixed-criticality mode-switch conformance: drive **unregulated**
+    overdriven traffic through the DES and the virtual runtime with a
+    `repro.traffic.modes.ModeController` armed in both — identical
+    criticality contracts, identical analysis-derived engage limits —
+    and check that the overload mode machinery tells one story:
+
+    - **switches happen**: both layers must commit at least one HI
+      entry (``mode_no_switch``) — an overdriven scenario that never
+      trips the monitor makes every other check vacuous;
+    - **survivor agreement**: every HI entry's survivor set — the Eq. 3
+      re-proved HI guarantee set — must be identical in both layers and
+      across repeated entries (``mode_survivor_mismatch``). Survivors
+      are a pure function of the criticality contracts and the
+      admission analysis, never of the traffic, so this holds exactly
+      even when the two layers switch at slightly different times;
+    - **the proof is real**: every committed HI entry must carry a
+      schedulable re-proof (``mode_unschedulable_survivors``);
+    - **per-class Eq. 3 guarantee**: zero HI deadline misses in either
+      layer over the whole run, transitions included
+      (``mode_hi_miss_des`` / ``mode_hi_miss_server``). "Miss" is the
+      SRT (bounded-tardiness) sense every other case in this harness
+      uses: a HI job misses when its response exceeds the **survivor
+      set's own analytic bound** (`end_to_end_bounds` over the HI
+      subset, blocking-aware) plus the **transition allowance** — the
+      LO backlog the `BacklogMonitor` hysteresis tolerates before the
+      switch commits (engage limit x per-job service, summed over the
+      LO tenants) — plus the case's overload schedule-noise tolerance.
+      The gate applies where the action can actually protect the HI
+      class: a *dropping* action under any policy, a *demoting* action
+      only under EDF (demotion works by deadline ordering; FIFO keeps
+      demoted jobs in their pool positions, so degrade-under-FIFO
+      carries no HI guarantee and the rows report misses without
+      gating them — the same carve-out `run_shedding_case` makes for
+      demote-only boundedness);
+    - job-wise ordering on matched HI jobs (release-time join, same as
+      `run_shedding_case`, under the same overload tolerances
+      `ConformanceConfig.shed_tol_rel`/``shed_quantum_slack``):
+      ``mode_des_vs_server``, with the ``mode_no_matched_jobs``
+      vacuity guard.
+    """
+    from repro.pipeline.serve import PharosServer
+    from repro.traffic.admission import CRITICALITY_HI, AdmissionController
+    from repro.traffic.arrival import TraceArrivals
+    from repro.traffic.clock import VirtualClock
+    from repro.traffic.gateway import TrafficGateway
+    from repro.traffic.modes import ModeController
+
+    if policy not in POLICIES:
+        raise ValueError(f"unknown policy {policy!r}")
+    cfg = cfg or ConformanceConfig()
+    scenario = built.scenario.name
+    taskset = built.taskset
+    preemptive = policy == "edf"
+
+    serve_tasks, _requests, _arrivals = built.serve_bundle(
+        period_scale=1.0, seed=cfg.seed, max_dim=cfg.max_dim
+    )
+    cm = CostModel.from_exec_model(
+        built.design, list(built.workloads), serve_tasks
+    )
+    table = SegmentTable(
+        base=cm.segment_table().base,
+        overhead=[0.0] * cm.n_stages,
+    )
+    periods = [t.period for t in taskset.tasks]
+    horizon = cfg.horizon_periods * max(periods)
+    # unregulated on purpose: the LO overdrive is what trips the mode
+    traces = built.des_arrivals(horizon)
+    quanta = cm.stage_window_quantum()
+
+    sched_a = srt_schedulable(table, taskset, preemptive)
+
+    # twin mode controllers, one per layer, over that layer's own
+    # admission state — identical contracts in, so identical limits
+    # and identical survivor proofs out
+    des_ctl = AdmissionController(
+        [0.0] * built.design.n_stages, preemptive=preemptive
+    )
+    for r in built.requests:
+        des_ctl.admit(r)
+    des_modes = ModeController(
+        des_ctl, list(built.requests), action=action
+    )
+
+    des: SimResult = simulate_taskset(
+        table,
+        taskset,
+        policy,
+        horizon=horizon,
+        overheads=None,
+        arrivals=traces,
+        chunk_schedules=cm.chunk_schedule(),
+        preemption="window",
+        shedding=des_modes,
+    )
+
+    clk = VirtualClock()
+    srv = PharosServer(
+        serve_tasks,
+        built.design.n_stages,
+        policy=policy,
+        cost_model=cm,
+        clock=clk.now,
+        sleep=clk.sleep,
+    )
+    gw_ctl = AdmissionController(
+        [0.0] * built.design.n_stages, preemptive=preemptive
+    )
+    gw_modes = ModeController(
+        gw_ctl, list(built.requests), action=action
+    )
+    gateway = TrafficGateway(
+        srv,
+        gw_ctl,
+        list(built.requests),
+        [TraceArrivals(times=tuple(tr)) for tr in traces],
+        modes=gw_modes,
+        clock=clk,
+    )
+    report = gateway.run(horizon, warmup=True)
+    sr = report.server_report
+
+    visit_quanta = [
+        sum(q for q, b in zip(quanta, row) if b > 0.0)
+        for row in table.base
+    ]
+    crit = {r.name: r.criticality for r in built.requests}
+    violations: list[Violation] = []
+
+    # -- transition agreement ----------------------------------------
+    des_hi = _hi_entries(des.mode_switches)
+    srv_hi = _hi_entries(report.mode_switches)
+    if not des_hi or not srv_hi:
+        violations.append(
+            Violation(
+                scenario, policy, "*", "mode_no_switch",
+                float(bool(des_hi)) + float(bool(srv_hi)), 2.0,
+                "overdriven scenario never committed a HI entry in "
+                f"{'the DES' if not des_hi else 'the runtime'} — the "
+                "mode-switch case is vacuous",
+            )
+        )
+    survivor_sets = {s[2] for s in des_hi} | {s[2] for s in srv_hi}
+    survivors = des_hi[0][2] if des_hi else (
+        srv_hi[0][2] if srv_hi else ()
+    )
+    if len(survivor_sets) > 1:
+        violations.append(
+            Violation(
+                scenario, policy, "*", "mode_survivor_mismatch",
+                float(len(survivor_sets)), 1.0,
+                "HI-entry survivor sets disagree across layers or "
+                f"entries: {sorted(survivor_sets)}",
+            )
+        )
+    hi_proof = all(
+        s.schedulable
+        for mc in (des_modes, gw_modes)
+        for s in mc.switches
+        if s.mode == "hi"
+    )
+    if not hi_proof:
+        violations.append(
+            Violation(
+                scenario, policy, "*", "mode_unschedulable_survivors",
+                0.0, 1.0,
+                "a committed HI entry carried a failing Eq. 3 re-proof "
+                "— the HI guarantee is vacuous",
+            )
+        )
+
+    # -- per-class guarantee allowance -------------------------------
+    # the survivor subset's own analytic bounds (blocking-aware, same
+    # formula as `run_case`) ...
+    name_to_idx = {t.name: i for i, t in enumerate(taskset.tasks)}
+    surv_idx = [name_to_idx[n] for n in survivors if n in name_to_idx]
+    hi_bounds: dict[str, float] = {}
+    if surv_idx:
+        hi_table = SegmentTable(
+            base=[table.base[i] for i in surv_idx],
+            overhead=list(table.overhead),
+        )
+        hi_ts = TaskSet(tasks=tuple(taskset.tasks[i] for i in surv_idx))
+        for t2, b in zip(
+            hi_ts.tasks,
+            end_to_end_bounds(hi_table, hi_ts, policy, blocking=quanta),
+        ):
+            hi_bounds[t2.name] = b
+    # ... plus the transition allowance: the backlog (engage limit x
+    # per-job service) the hysteresis tolerates from each non-survivor
+    # before the switch commits — work the HI class may still sit
+    # behind across the transition
+    limits = des_modes.limits()
+    carryover = sum(
+        limits[i] * sum(table.base[i])
+        for i, r in enumerate(built.requests)
+        if r.name not in hi_bounds
+    )
+    # where the action can actually protect the HI class: dropping
+    # removes LO work under any policy; demotion works through
+    # deadline ordering, so it only bites under EDF (see docstring)
+    guarantee_armed = action == "drop" or preemptive
+
+    # -- per-task rows + per-class guarantees ------------------------
+    rows: list[ModeSwitchTaskRow] = []
+    for i, t in enumerate(taskset.tasks):
+        r_des = des.response_times[i]
+        r_srv = sr.response_times.get(t.name, [])
+        des_pairs = sorted(zip(des.completed_releases[i], r_des))
+        srv_pairs = sorted(
+            zip(
+                sr.completed_releases.get(t.name, []),
+                r_srv,
+            )
+        )
+        des_max = max(r_des) if r_des else 0.0
+        allow = (
+            des_max * cfg.shed_tol_rel
+            + cfg.shed_quantum_slack * visit_quanta[i]
+        )
+        # SRT "miss": response beyond the survivor-set bound plus the
+        # transition allowance (non-survivors carry no guarantee)
+        miss_allow = hi_bounds.get(t.name, math.inf) + carryover + allow
+        des_misses = sum(1 for r in r_des if r > miss_allow)
+        srv_misses = sum(1 for r in r_srv if r > miss_allow)
+        matched = 0
+        worst = None
+        di = 0
+        for rel, rs in srv_pairs:
+            while di < len(des_pairs) and des_pairs[di][0] < rel:
+                di += 1
+            if di >= len(des_pairs) or des_pairs[di][0] != rel:
+                continue
+            rd = des_pairs[di][1]
+            di += 1
+            matched += 1
+            if (
+                crit[t.name] == CRITICALITY_HI
+                and rs > rd + allow
+                and (worst is None or rs - rd > worst[0])
+            ):
+                worst = (rs - rd, rel, rs, rd)
+        if worst is not None:
+            violations.append(
+                Violation(
+                    scenario, policy, t.name, "mode_des_vs_server",
+                    worst[2], worst[3],
+                    f"HI job released at {worst[1]:.6g} responds later "
+                    "in the runtime than in the DES beyond the "
+                    "overload tolerance",
+                )
+            )
+        if matched == 0 and r_des and r_srv:
+            violations.append(
+                Violation(
+                    scenario, policy, t.name, "mode_no_matched_jobs",
+                    float(len(r_srv)), 0.0,
+                    "both layers completed jobs but none matched by "
+                    "release time — the release stamps have diverged "
+                    "and the HI-job comparison is vacuous",
+                )
+            )
+        if t.name in hi_bounds and guarantee_armed:
+            if des_misses:
+                violations.append(
+                    Violation(
+                        scenario, policy, t.name, "mode_hi_miss_des",
+                        float(des_misses), 0.0,
+                        "HI tenant exceeded its survivor-set bound "
+                        "plus the transition allowance in the DES — "
+                        "the per-class Eq. 3 guarantee is broken at "
+                        "the model layer",
+                    )
+                )
+            if srv_misses:
+                violations.append(
+                    Violation(
+                        scenario, policy, t.name, "mode_hi_miss_server",
+                        float(srv_misses), 0.0,
+                        "HI tenant exceeded its survivor-set bound "
+                        "plus the transition allowance in the runtime "
+                        "— the per-class Eq. 3 guarantee is broken at "
+                        "the serving layer",
+                    )
+                )
+        rows.append(
+            ModeSwitchTaskRow(
+                task=t.name,
+                criticality=crit[t.name],
+                des_completed=len(r_des),
+                des_shed=des.shed_per_task[i],
+                des_degraded=des.degraded_per_task[i],
+                des_misses=des_misses,
+                server_completed=len(r_srv),
+                server_shed=report.tenant(t.name).shed,
+                server_degraded=report.tenant(t.name).degraded,
+                server_misses=srv_misses,
+                matched_jobs=matched,
+                des_max=des_max,
+                server_max=max(r_srv) if r_srv else 0.0,
+            )
+        )
+
+    return ModeSwitchCaseResult(
+        scenario=scenario,
+        policy=policy,
+        action=action,
+        analysis_schedulable=sched_a,
+        hi_proof_schedulable=hi_proof,
+        des_switches=tuple(des.mode_switches),
+        server_switches=tuple(report.mode_switches),
+        survivors=survivors,
         tasks=tuple(rows),
         violations=tuple(violations),
     )

@@ -46,6 +46,12 @@ Event vocabulary (``TraceEvent.kind``):
 - ``rate_limited``   — a release refused by a dry token bucket.
 - ``admit``/``reject`` — tenancy admission decisions (gateway).
 - ``place``          — tenant -> shard placement (sharded gateway).
+- ``mode_switch``    — a committed mixed-criticality mode transition
+                       (`repro.traffic.modes.ModeController`);
+                       ``attrs["mode"]`` is the mode entered,
+                       ``attrs["survivors"]`` the re-proved guarantee
+                       set, ``attrs["schedulable"]`` the Eq. 3
+                       re-proof verdict that gated the commit.
 
 Identity and ordering: events carry the emitting ``layer`` ("des",
 "runtime" or "gateway"), the tenant/task ``task`` name, the job's
@@ -87,6 +93,7 @@ EVENT_KINDS = (
     "admit",
     "reject",
     "place",
+    "mode_switch",
 )
 
 #: layer tags of the three instrumented layers

@@ -46,6 +46,16 @@ from repro.kernels.preemptible_matmul import (
 
 DEFAULT_BLOCK = (128, 128, 128)
 
+#: Degenerate safety tick (seconds): the smallest forced clock advance
+#: of a serving loop iteration that made no progress — no window ran
+#: and the next modeled event is not in the future (a float-equality
+#: corner the event-driven advance cannot cross on its own). Advancing
+#: by this epsilon guarantees a zero-progress step still terminates
+#: instead of spinning; it is far below any modeled window cost, so it
+#: never perturbs response times. Shared with the gateway's
+#: cost-driven loop (`repro.traffic.gateway`).
+DEGENERATE_SAFETY_TICK_S = 1e-9
+
 
 def window_plan(
     M: int, N: int, K: int, *, block, backend: str, window_tiles: int
@@ -722,7 +732,7 @@ class PharosServer:
                 if nxt > now2:
                     self.sleep(nxt - now2)
                 elif not ran:
-                    self.sleep(1e-9)  # degenerate safety tick
+                    self.sleep(DEGENERATE_SAFETY_TICK_S)
             elif not ran:
                 self.sleep(1e-4)  # idle
         return self.finalize_report(t0 + horizon_s)

@@ -215,7 +215,13 @@ class SimConfig:
     #: while true divergence (u > 1) grows the response linearly in the
     #: horizon (far past 2x between halves).
     growth_tol: float = 2.0
-    #: release-time overload shedding (None -> every release enters)
+    #: release-time overload shedding (None -> every release enters).
+    #: Duck-typed: anything with `ReleaseShedding`'s observe / engaged /
+    #: classify surface works — `repro.traffic.modes.ModeController`
+    #: plugs in here to run mixed-criticality mode switching against
+    #: the simulated backlog (its committed transitions are drained via
+    #: an optional ``drain_events()`` hook into ``mode_switch`` trace
+    #: events and `SimResult.mode_switches`)
     shedding: ReleaseShedding | None = None
     #: schedule-trace sink (duck-typed `repro.obs.TraceRecorder` — the
     #: DES stays dependency-free). Resolved once per `simulate` call:
@@ -246,6 +252,13 @@ class SimResult:
     jobs_shed: int = 0
     shed_per_task: list[int] = field(default_factory=list)
     degraded_per_task: list[int] = field(default_factory=list)
+    #: committed mixed-criticality transitions, in commit order:
+    #: ``(t, mode, survivors)`` tuples drained from a mode-aware
+    #: shedding hook (`repro.traffic.modes.ModeController`); empty
+    #: without one
+    mode_switches: list[tuple[float, str, tuple[str, ...]]] = field(
+        default_factory=list
+    )
 
     def max_response_overall(self) -> float:
         vals = [m for m in self.max_response if m > 0.0]
@@ -394,6 +407,16 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
     jobs_shed = 0
     shed_per_task = [0] * n_tasks
     degraded_per_task = [0] * n_tasks
+    mode_switches: list[tuple[float, str, tuple[str, ...]]] = []
+    # mode-transition drain hook, resolved once like the trace sink: a
+    # mode-aware shedding object (`repro.traffic.modes.ModeController`)
+    # commits transitions during the observe sweep and the DES stamps
+    # them with its virtual clock here
+    drain_modes = (
+        getattr(cfg.shedding, "drain_events", None)
+        if cfg.shedding is not None
+        else None
+    )
     overload = False
     enter_counter = 0
 
@@ -634,6 +657,15 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
                 # like the gateway's per-release monitor sweep
                 for i2 in range(n_tasks):
                     cfg.shedding.observe(i2, pending_count[i2])
+                if drain_modes is not None:
+                    for sw in drain_modes():
+                        mode_switches.append((now, sw.mode, sw.survivors))
+                        if tr is not None:
+                            tr((now, "mode_switch", "", -1, None, {
+                                "mode": sw.mode,
+                                "survivors": sw.survivors,
+                                "schedulable": sw.schedulable,
+                            }))
                 overloaded = tuple(
                     i2
                     for i2 in range(n_tasks)
@@ -788,6 +820,7 @@ def simulate(tasks: list[SimTask], cfg: SimConfig) -> SimResult:
         jobs_shed=jobs_shed,
         shed_per_task=shed_per_task,
         degraded_per_task=degraded_per_task,
+        mode_switches=mode_switches,
     )
 
 

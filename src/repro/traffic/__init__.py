@@ -15,6 +15,10 @@ an *online* layer in front of the serving runtime:
   DES;
 - `ratelimit` — per-tenant token buckets (`RateLimiter`) trimming live
   traffic back to the provisioned contract in front of admission;
+- `modes`     — mixed-criticality overload modes (`ModeController`):
+  HI/LO tenant classes, backlog-triggered HI-mode switches that re-run
+  the Eq. 3 admission over the HI survivor set *before* committing,
+  and symmetric recovery when the backlog drains;
 - `gateway`   — `TrafficGateway`: the admission-controlled front door
   releasing `ArrivalProcess` traffic into a `PharosServer`;
 - `shard`     — `ShardedGateway`: K gateway replicas of one pipeline
@@ -25,6 +29,9 @@ an *online* layer in front of the serving runtime:
   gateway and server.
 """
 from repro.traffic.admission import (
+    CRITICALITY_HI,
+    CRITICALITY_LEVELS,
+    CRITICALITY_LO,
     AdmissionController,
     AdmissionDecision,
     HeadroomReport,
@@ -42,6 +49,13 @@ from repro.traffic.arrival import (
 )
 from repro.traffic.clock import VirtualClock, WallClock
 from repro.traffic.gateway import GatewayReport, TrafficGateway
+from repro.traffic.modes import (
+    MODE_HI,
+    MODE_NORMAL,
+    MODES,
+    ModeController,
+    ModeSwitch,
+)
 from repro.traffic.ratelimit import RateLimiter, TokenBucket
 from repro.traffic.scenarios import (
     ArrivalSpec,
@@ -79,6 +93,9 @@ from repro.traffic.shedding import (
 __all__ = [
     "AdmissionController",
     "AdmissionDecision",
+    "CRITICALITY_HI",
+    "CRITICALITY_LEVELS",
+    "CRITICALITY_LO",
     "HeadroomReport",
     "TaskRequest",
     "calibrated_requests",
@@ -93,6 +110,11 @@ __all__ = [
     "WallClock",
     "TrafficGateway",
     "GatewayReport",
+    "MODE_HI",
+    "MODE_NORMAL",
+    "MODES",
+    "ModeController",
+    "ModeSwitch",
     "ArrivalSpec",
     "TenantSpec",
     "TrafficScenario",

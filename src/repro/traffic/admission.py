@@ -41,6 +41,16 @@ from repro.core.rt.response_time import end_to_end_bounds
 from repro.core.rt.schedulability import EPS, srt_schedulable
 from repro.core.rt.task import LayerDesc, SegmentTable, Task, TaskSet, Workload
 
+#: criticality levels a tenant contract may carry, most critical first
+#: (Vestal-style, extensible: the overload `ModeController` in
+#: `repro.traffic.modes` guarantees every level strictly above its
+#: configured shed threshold). "HI" is safety-critical — survives an
+#: overload mode switch with a re-proved Eq. 3 contract; "LO" is
+#: mission/best-effort work the switch sheds or demotes.
+CRITICALITY_HI = "HI"
+CRITICALITY_LO = "LO"
+CRITICALITY_LEVELS = (CRITICALITY_HI, CRITICALITY_LO)
+
 
 @dataclass(frozen=True)
 class TaskRequest:
@@ -50,7 +60,10 @@ class TaskRequest:
     stage is skipped) — one row of a `SegmentTable`. ``period`` is the
     analysis period: the minimum inter-arrival for (spo)radic traffic or
     the provisioned period (`ArrivalProcess.analysis_period`) for
-    stochastic traffic. ``value`` feeds the shed-by-value policy.
+    stochastic traffic. ``value`` feeds the shed-by-value policy;
+    ``criticality`` (one of `CRITICALITY_LEVELS`) feeds the overload
+    `ModeController` — "HI" tenants keep their guarantee through a mode
+    switch, "LO" tenants are shed or demoted.
     """
 
     name: str
@@ -59,6 +72,7 @@ class TaskRequest:
     deadline: float = 0.0  # 0 -> implicit (= period)
     value: float = 1.0
     best_effort: bool = False
+    criticality: str = CRITICALITY_LO
 
     def __post_init__(self) -> None:
         if self.period <= 0 or not math.isfinite(self.period):
@@ -67,6 +81,11 @@ class TaskRequest:
             raise ValueError("negative WCET")
         if not any(b > 0 for b in self.base):
             raise ValueError("request has no active stage")
+        if self.criticality not in CRITICALITY_LEVELS:
+            raise ValueError(
+                f"unknown criticality {self.criticality!r}; "
+                f"expected one of {CRITICALITY_LEVELS}"
+            )
         if self.deadline == 0.0:
             object.__setattr__(self, "deadline", self.period)
 
@@ -152,6 +171,7 @@ def calibrated_requests(
             deadline=r.deadline,
             value=r.value,
             best_effort=r.best_effort,
+            criticality=r.criticality,
         )
         for i, r in enumerate(requests)
     )

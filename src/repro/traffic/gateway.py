@@ -13,7 +13,13 @@ contract) and an `ArrivalProcess` (its actual traffic). At ``run``:
    release as ``rate_limited``, trimming live traffic back to the
    provisioned contract), is then checked against the `BacklogMonitor`
    and, while observed backlog contradicts the analysis, routed through
-   the `SheddingPolicy` (submit / drop / degrade-to-best-effort);
+   the `SheddingPolicy` (submit / drop / degrade-to-best-effort) — or,
+   with ``modes=`` armed instead, through the mixed-criticality
+   `repro.traffic.modes.ModeController`: overload commits a HI-mode
+   switch (Eq. 3 re-proved for the HI survivor set first, a
+   ``mode_switch`` trace event emitted), LO releases are shed/demoted
+   and pay a tightened token-bucket cost while the mode holds, and the
+   controller switches back when backlog drains;
 3. the server is stepped between releases. With a `VirtualClock` the
    whole run is deterministic: when the server carries a
    `repro.conformance.CostModel` the clock jumps event-to-event (every
@@ -44,7 +50,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Sequence
 
-from repro.pipeline.serve import PharosServer
+from repro.pipeline.serve import DEGENERATE_SAFETY_TICK_S, PharosServer
 from repro.traffic.admission import (
     AdmissionController,
     AdmissionDecision,
@@ -52,6 +58,7 @@ from repro.traffic.admission import (
 )
 from repro.traffic.arrival import ArrivalProcess, merge_arrivals
 from repro.traffic.clock import WallClock
+from repro.traffic.modes import ModeController
 from repro.traffic.ratelimit import RateLimiter
 from repro.traffic.shedding import (
     BEST_EFFORT,
@@ -81,6 +88,11 @@ class GatewayReport:
     tenants: list[TenantStats]
     decisions: list[AdmissionDecision]
     server_report: object  # ServerReport
+    #: committed mixed-criticality transitions ``(t, mode, survivors)``
+    #: (empty without a `ModeController` armed)
+    mode_switches: list[tuple[float, str, tuple[str, ...]]] = field(
+        default_factory=list
+    )
 
     def tenant(self, name: str) -> TenantStats:
         for t in self.tenants:
@@ -109,6 +121,7 @@ class TrafficGateway:
         shedding: SheddingPolicy | None = None,
         monitor: BacklogMonitor | None = None,
         ratelimit: RateLimiter | None = None,
+        modes: ModeController | None = None,
         clock=None,
         trace=None,
         shard: int = -1,
@@ -119,6 +132,11 @@ class TrafficGateway:
             )
         if ratelimit is not None and len(ratelimit) != len(requests):
             raise ValueError("rate limiter buckets must align 1:1 with tenants")
+        if modes is not None and shedding is not None:
+            raise ValueError(
+                "arm either per-job shedding or mixed-criticality modes, "
+                "not both — one overload authority per gateway"
+            )
         self.server = server
         self.admission = admission
         self.requests = list(requests)
@@ -126,6 +144,10 @@ class TrafficGateway:
         self.shedding = shedding
         self.monitor = monitor or BacklogMonitor()
         self.ratelimit = ratelimit
+        self.modes = modes
+        #: committed mode transitions, ``(t, mode, survivors)`` in
+        #: commit order (mirrors `SimResult.mode_switches`)
+        self.mode_switches: list[tuple[float, str, tuple[str, ...]]] = []
         self.clock = clock or WallClock()
         # schedule-trace handle (repro.obs.TraceRecorder), resolved
         # once: disabled tracing emits nothing and costs nothing.
@@ -237,7 +259,12 @@ class TrafficGateway:
                 if nxt > now2:
                     self.clock.advance(nxt - now2)
                 elif not ran:
-                    self.clock.advance(virtual_dt)  # degenerate safety
+                    # degenerate safety: no progress and no future
+                    # event — force time forward so the loop terminates
+                    # even with a zero serving quantum
+                    self.clock.advance(
+                        max(virtual_dt, DEGENERATE_SAFETY_TICK_S)
+                    )
             elif virtual:
                 if not ran and pos < len(sched):
                     # idle: fast-forward to the next arrival
@@ -252,6 +279,7 @@ class TrafficGateway:
             tenants=stats,
             decisions=list(self.admission.decisions),
             server_report=self.server.finalize_report(self.clock.now()),
+            mode_switches=list(self.mode_switches),
         )
 
     def _release(
@@ -264,9 +292,17 @@ class TrafficGateway:
         # the token bucket polices the traffic contract before anything
         # else sees the release: a dry bucket refuses it outright
         # (lazily refilled from the nominal release timestamp, so
-        # virtual and wall runs decide identically)
+        # virtual and wall runs decide identically). In HI mode the
+        # ModeController tightens LO tenants' buckets by charging
+        # `release_cost` tokens per release instead of one.
         if self.ratelimit is not None and not self.ratelimit.allow(
-            i, release_time
+            i,
+            release_time,
+            cost=(
+                self.modes.release_cost(i)
+                if self.modes is not None
+                else 1.0
+            ),
         ):
             stats[i].rate_limited += 1
             if self._tr is not None:
@@ -278,18 +314,51 @@ class TrafficGateway:
             return
         # refresh overload state for every admitted tenant (pending
         # counts change between releases as jobs complete)
-        for j in self._admitted_idx:
-            self.monitor.observe(
-                j, self.server.pending(j), self._limits[j]
-            )
-        overloaded = [
-            j for j in self._admitted_idx if self.monitor.engaged.get(j)
-        ]
-        verdict = "submit"
-        if overloaded and self.shedding is not None:
-            verdict = self.shedding.classify(
-                i, overloaded, self.admission, self.requests
-            )
+        if self.modes is not None:
+            # the mode controller owns hysteresis (its monitor) *and*
+            # the per-release verdict; transitions it commits during
+            # the sweep are stamped with the gateway clock and emitted
+            # as mode_switch events
+            for j in self._admitted_idx:
+                self.modes.observe(j, self.server.pending(j))
+            for sw in self.modes.drain_events():
+                now = self.clock.now()
+                self.mode_switches.append((now, sw.mode, sw.survivors))
+                if self._tr is not None:
+                    self._tr.emit(
+                        "mode_switch", now, "gateway", "",
+                        -1, self._tr_shard,
+                        attrs={
+                            "mode": sw.mode,
+                            "survivors": sw.survivors,
+                            "schedulable": sw.schedulable,
+                        },
+                    )
+            overloaded = [
+                j
+                for j in self._admitted_idx
+                if self.modes.engaged.get(j)
+            ]
+            verdict = "submit"
+            if overloaded:
+                verdict = self.modes.classify(
+                    i, overloaded, self.admission, self.requests
+                )
+        else:
+            for j in self._admitted_idx:
+                self.monitor.observe(
+                    j, self.server.pending(j), self._limits[j]
+                )
+            overloaded = [
+                j
+                for j in self._admitted_idx
+                if self.monitor.engaged.get(j)
+            ]
+            verdict = "submit"
+            if overloaded and self.shedding is not None:
+                verdict = self.shedding.classify(
+                    i, overloaded, self.admission, self.requests
+                )
         if verdict == DROP:
             stats[i].shed += 1
             if self._tr is not None:

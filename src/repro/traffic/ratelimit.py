@@ -66,11 +66,17 @@ class TokenBucket:
             self.burst, self.tokens + max(0.0, now - self.last) * self.rate
         )
 
-    def take(self, now: float) -> bool:
+    def take(self, now: float, cost: float = 1.0) -> bool:
+        """Spend ``cost`` tokens (default one). A cost above 1 is how
+        the mixed-criticality gateway tightens a LO tenant's bucket in
+        HI mode (`ModeController.release_cost`): the sustained rate
+        divides by the cost without rebuilding the bucket."""
+        if cost < 1.0:
+            raise ValueError("token cost must be >= 1")
         self.tokens = self.peek(now)
         self.last = max(self.last, now)
-        if self.tokens >= 1.0:
-            self.tokens -= 1.0
+        if self.tokens >= cost:
+            self.tokens -= cost
             self.granted += 1
             return True
         self.denied += 1
@@ -137,8 +143,8 @@ class RateLimiter:
     def __len__(self) -> int:
         return len(self.buckets)
 
-    def allow(self, i: int, now: float) -> bool:
-        return self.buckets[i].take(now)
+    def allow(self, i: int, now: float, cost: float = 1.0) -> bool:
+        return self.buckets[i].take(now, cost)
 
     def tokens(self, i: int, now: float) -> float:
         return self.buckets[i].peek(now)

@@ -28,7 +28,12 @@ from repro.core.workloads import (
     PAPER_WORKLOADS,
     single_acc_reference_latency,
 )
-from repro.traffic.admission import TaskRequest
+from repro.traffic.admission import (
+    CRITICALITY_HI,
+    CRITICALITY_LEVELS,
+    CRITICALITY_LO,
+    TaskRequest,
+)
 from repro.traffic.arrival import (
     ArrivalProcess,
     MMPPArrivals,
@@ -109,10 +114,19 @@ class TenantSpec:
     #: batch/seq only used by config:-references
     batch: int = 1
     seq: int = 2048
+    #: mixed-criticality class (see `repro.traffic.admission`): "HI"
+    #: tenants survive an overload mode switch, "LO" tenants are shed
+    #: or demoted by the `ModeController`
+    criticality: str = CRITICALITY_LO
 
     def __post_init__(self) -> None:
         if self.ratio <= 0 or self.overdrive <= 0:
             raise ValueError("ratio and overdrive must be positive")
+        if self.criticality not in CRITICALITY_LEVELS:
+            raise ValueError(
+                f"unknown criticality {self.criticality!r}; "
+                f"expected one of {CRITICALITY_LEVELS}"
+            )
         if not self.name:
             object.__setattr__(
                 self, "name", self.workload.split(":", 1)[-1]
@@ -254,6 +268,7 @@ class BuiltScenario:
                 base=tuple(b * period_scale for b in r.base),
                 period=r.period * period_scale,
                 value=r.value,
+                criticality=r.criticality,
             )
             for r in self.requests
         )
@@ -338,6 +353,7 @@ def materialize(
             base=tuple(table.base[i]),
             period=taskset.tasks[i].period,
             value=spec.value,
+            criticality=spec.criticality,
         )
         for i, spec in enumerate(scenario.tenants)
     )
@@ -597,6 +613,44 @@ register(
             TenantSpec("paper:mlp_mixer", ratio=0.35, value=1.0),
             TenantSpec("paper:resmlp", ratio=0.3, value=2.0),
             TenantSpec("paper:deit_t", ratio=0.25, value=1.5),
+        ),
+    )
+)
+
+register(
+    TrafficScenario(
+        name="av_stack",
+        description=(
+            "AV mixed-criticality stack: safety-critical LiDAR + camera "
+            "perception (HI) sharing the pipeline with a best-effort "
+            "infotainment tenant (LO) overdriven 5x past its "
+            "provisioning — the mode-switch conformance scenario "
+            "(overdriven, so it stays out of DEFAULT_SCENARIOS)"
+        ),
+        tenants=(
+            TenantSpec(
+                "paper:pointnet",
+                ratio=0.55,
+                value=5.0,
+                criticality=CRITICALITY_HI,
+                name="lidar_perception",
+            ),
+            TenantSpec(
+                "paper:deit_t",
+                ratio=0.3,
+                value=3.0,
+                criticality=CRITICALITY_HI,
+                name="camera_monitor",
+            ),
+            TenantSpec(
+                "paper:mlp_mixer",
+                ratio=0.25,
+                arrival=ArrivalSpec(kind="poisson", provision_factor=1.3),
+                value=0.5,
+                overdrive=5.0,
+                criticality=CRITICALITY_LO,
+                name="infotainment",
+            ),
         ),
     )
 )

@@ -340,6 +340,7 @@ def built_gateway(
     shedding: SheddingPolicy | None = None,
     monitor: BacklogMonitor | None = None,
     ratelimit: RateLimiter | None = None,
+    make_modes=None,
     trace=None,
     shard: int = -1,
 ) -> TrafficGateway:
@@ -353,7 +354,10 @@ def built_gateway(
 
     ``trace`` (a `repro.obs.TraceRecorder`) is handed to both the
     gateway and its server; ``shard`` tags every emitted event with the
-    replica index (-1: unsharded).
+    replica index (-1: unsharded). ``make_modes(admission, requests)``
+    builds a fresh `repro.traffic.modes.ModeController` over the
+    gateway's own admission controller after it is constructed — the
+    mixed-criticality analogue of ``monitor``/``ratelimit``.
     """
     from repro.pipeline.serve import PharosServer
     from repro.traffic.clock import VirtualClock
@@ -378,14 +382,17 @@ def built_gateway(
         [0.0] * built.design.n_stages,
         preemptive=(policy == "edf"),
     )
+    requests = list(built.requests)
+    modes = make_modes(admission, requests) if make_modes else None
     return TrafficGateway(
         server,
         admission,
-        list(built.requests),
+        requests,
         list(built.arrivals),
         shedding=shedding,
         monitor=monitor,
         ratelimit=ratelimit,
+        modes=modes,
         clock=clk,
         trace=trace,
         shard=shard,
@@ -429,13 +436,17 @@ class ShardedGateway:
         shedding: SheddingPolicy | None = None,
         make_monitor=None,
         make_ratelimit=None,
+        make_modes=None,
         trace=None,
     ) -> "ShardedGateway":
         """Place a `BuiltScenario`'s tenants across ``shards`` replicas.
 
-        ``make_monitor()`` / ``make_ratelimit(sub_requests)`` build one
-        fresh `BacklogMonitor` / `RateLimiter` per shard (monitors and
-        buckets are stateful — shards must not share them).
+        ``make_monitor()`` / ``make_ratelimit(sub_requests)`` /
+        ``make_modes(admission, sub_requests)`` build one fresh
+        `BacklogMonitor` / `RateLimiter` / `ModeController` per shard
+        (monitors, buckets and mode state are stateful — shards must
+        not share them; each shard runs its own mode machine over its
+        own tenant subset).
 
         ``trace`` (a `repro.obs.TraceRecorder`) is shared by every
         shard's gateway and server — events carry the shard index —
@@ -475,6 +486,7 @@ class ShardedGateway:
                         if make_ratelimit
                         else None
                     ),
+                    make_modes=make_modes,
                     trace=trace,
                     shard=k,
                 )

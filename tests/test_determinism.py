@@ -22,9 +22,11 @@ import pytest
 from repro.core.perfmodel.hardware import paper_platform
 from repro.obs.trace import EVENT_KINDS, TraceRecorder
 from repro.scheduler.des import simulate_taskset
+from repro.traffic.admission import AdmissionController, CRITICALITY_HI
+from repro.traffic.modes import ModeController
 from repro.traffic.scenarios import build, get_scenario
 
-SCENARIOS = ("sensor_fusion", "sharded_city")
+SCENARIOS = ("sensor_fusion", "sharded_city", "av_stack")
 
 
 def _event_tuples(rec: TraceRecorder) -> list[tuple]:
@@ -41,12 +43,24 @@ def _run_once(name: str) -> tuple[list[tuple], tuple[float, ...]]:
     periods = tuple(t.period for t in built.taskset.tasks)
     horizon = 20.0 * max(periods)
     rec = TraceRecorder()
+    # mixed-criticality scenarios run with the mode machinery armed so
+    # the determinism contract covers `mode_switch` emission too
+    shedding = None
+    if any(r.criticality == CRITICALITY_HI for r in built.requests):
+        ctl = AdmissionController(
+            [0.0] * len(built.table.overhead),
+            preemptive=(built.scenario.policy == "edf"),
+        )
+        for r in built.requests:
+            ctl.admit(r)
+        shedding = ModeController(ctl, list(built.requests))
     simulate_taskset(
         built.table,
         built.taskset,
         built.scenario.policy,
         horizon=horizon,
         arrivals=built.des_arrivals(horizon),
+        shedding=shedding,
         trace=rec,
     )
     return _event_tuples(rec), periods

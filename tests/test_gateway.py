@@ -224,6 +224,46 @@ def test_server_virtual_clock_timestamps_consistent():
             assert steps == pytest.approx(round(steps), abs=1e-6)
 
 
+def test_gateway_zero_quantum_degenerate_step_terminates():
+    """The gateway twin of the server's degenerate-safety regression:
+    with ``virtual_dt=0`` and a stalled cost-driven server, each
+    no-progress iteration must still advance by
+    ``max(virtual_dt, DEGENERATE_SAFETY_TICK_S)`` so the release loop
+    reaches its horizon."""
+    from repro.pipeline.serve import DEGENERATE_SAFETY_TICK_S
+
+    class StalledServer(PharosServer):
+        def warmup(self):
+            pass
+
+        def step(self):
+            return False
+
+        def next_completion_time(self):
+            return self.clock()
+
+    t = ServeTask(
+        "t", _weights([(128, 128)]), stage_of_layer=(0,), period=1.0
+    )
+    clk = VirtualClock()
+    srv = StalledServer([t], 1, policy="fifo", clock=clk.now,
+                        sleep=clk.sleep)
+    srv.cost_model = object()  # arm the event-driven branch
+    gw = TrafficGateway(
+        srv,
+        AdmissionController([0.0]),
+        [TaskRequest("t", (1e-4,), period=1.0, value=1.0)],
+        [PeriodicArrivals(period=1.0)],
+        clock=clk,
+    )
+    horizon = 25 * DEGENERATE_SAFETY_TICK_S
+    t0 = clk.now()
+    rep = gw.run(horizon, virtual_dt=0.0, warmup=False)
+    assert clk.now() - t0 >= horizon
+    assert rep.tenant("t").released >= 1
+    assert rep.server_report.jobs_completed == 0
+
+
 # ---------------------------------------------------------------------------
 # scenario registry
 # ---------------------------------------------------------------------------

@@ -1,0 +1,412 @@
+"""Mixed-criticality mode switching (`repro.traffic.modes`).
+
+Unit semantics of the `ModeController` state machine — the pre-commit
+Eq. 3 re-proof of the HI survivor set, symmetric recovery, drop vs
+degrade verdicts, HI-mode rate-limit costs — plus its DES duck-type
+integration (`SimConfig.shedding` + `mode_switch` trace emission), and
+the property battery the issue asked for: randomized overload traces
+through the DES asserting survivor-set invariance across every
+transition, HI-class preservation, twin-controller agreement, and
+bit-identical reruns under the same seed. The cross-layer (DES vs
+gateway) agreement leg runs once on the registry's ``av_stack``
+scenario through `run_mode_switch_case`.
+"""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.obs.trace import EVENT_KINDS, TraceRecorder
+from repro.scheduler.des import SimConfig, SimTask, simulate
+from repro.traffic.admission import (
+    CRITICALITY_HI,
+    CRITICALITY_LO,
+    AdmissionController,
+    TaskRequest,
+)
+from repro.traffic.modes import (
+    MODE_HI,
+    MODE_NORMAL,
+    ModeController,
+    criticality_counts,
+)
+from repro.traffic.shedding import BEST_EFFORT, DROP, SUBMIT
+
+
+def _controller(reqs, **kw):
+    adm = AdmissionController(
+        [0.0] * len(reqs[0].base), preemptive=True
+    )
+    for r in reqs:
+        assert adm.admit(r).admitted
+    return ModeController(adm, list(reqs), **kw)
+
+
+def _mixed_requests():
+    return [
+        TaskRequest(
+            "hi_a", (0.2,), period=1.0, value=5.0,
+            criticality=CRITICALITY_HI,
+        ),
+        TaskRequest(
+            "hi_b", (0.1,), period=1.0, value=3.0,
+            criticality=CRITICALITY_HI,
+        ),
+        TaskRequest("lo_c", (0.3,), period=1.0, value=0.5),
+    ]
+
+
+def _overload(mc, lo_idx=2, n=30):
+    """Push the LO tenant's observed backlog past its engage limit."""
+    for step in range(n):
+        for i in range(len(mc.requests)):
+            mc.observe(i, step if i == lo_idx else 0)
+
+
+def _drain(mc, n=30):
+    for _ in range(n):
+        for i in range(len(mc.requests)):
+            mc.observe(i, 0)
+
+
+# ---------------------------------------------------------------------------
+# criticality contracts
+# ---------------------------------------------------------------------------
+def test_criticality_defaults_and_validation():
+    r = TaskRequest("t", (0.1,), period=1.0)
+    assert r.criticality == CRITICALITY_LO
+    with pytest.raises(ValueError, match="criticality"):
+        TaskRequest("t", (0.1,), period=1.0, criticality="SAFETY")
+    assert criticality_counts(_mixed_requests()) == {
+        CRITICALITY_HI: 2,
+        CRITICALITY_LO: 1,
+    }
+
+
+def test_tenant_spec_carries_criticality():
+    from repro.traffic.scenarios import TenantSpec, get_scenario
+
+    spec = TenantSpec(
+        "paper:deit_t", ratio=0.5, criticality=CRITICALITY_HI
+    )
+    assert spec.criticality == CRITICALITY_HI
+    with pytest.raises(ValueError, match="criticality"):
+        TenantSpec("paper:deit_t", ratio=0.5, criticality="MEDIUM")
+    av = get_scenario("av_stack")
+    counts = criticality_counts(av.tenants)
+    assert counts[CRITICALITY_HI] == 2 and counts[CRITICALITY_LO] == 1
+
+
+# ---------------------------------------------------------------------------
+# the state machine
+# ---------------------------------------------------------------------------
+def test_hi_switch_commits_with_proof_and_recovers():
+    mc = _controller(_mixed_requests())
+    assert mc.mode == MODE_NORMAL
+    assert mc.survivors == ("hi_a", "hi_b", "lo_c")
+
+    _overload(mc)
+    assert mc.mode == MODE_HI
+    assert mc.survivors == ("hi_a", "hi_b")
+    (sw,) = mc.switches
+    assert sw.mode == MODE_HI
+    assert sw.survivors == ("hi_a", "hi_b")
+    assert sw.schedulable and 0.0 < sw.max_util < 1.0
+    # the host layer drains each committed transition exactly once
+    assert [s.mode for s in mc.drain_events()] == [MODE_HI]
+    assert mc.drain_events() == []
+
+    _drain(mc)
+    assert mc.mode == MODE_NORMAL
+    assert mc.survivors == ("hi_a", "hi_b", "lo_c")
+    recovery = mc.switches[-1]
+    assert recovery.mode == MODE_NORMAL
+    assert recovery.survivors == ("hi_a", "hi_b", "lo_c")
+    assert recovery.schedulable
+    assert [s.mode for s in mc.drain_events()] == [MODE_NORMAL]
+
+
+def test_classify_verdicts_per_action():
+    for action, lo_verdict in (("degrade", BEST_EFFORT), ("drop", DROP)):
+        mc = _controller(_mixed_requests(), action=action)
+        assert mc.drops == (action == "drop")
+        # normal mode: everything flows
+        assert all(mc.classify(i, (2,)) == SUBMIT for i in range(3))
+        _overload(mc)
+        assert mc.classify(0, (2,)) == SUBMIT
+        assert mc.classify(1, (2,)) == SUBMIT
+        assert mc.classify(2, (2,)) == lo_verdict
+        # the verdict keys on the committed mode, not on who is
+        # overloaded right now
+        assert mc.classify(2, ()) == lo_verdict
+
+
+def test_constructor_validation():
+    reqs = _mixed_requests()
+    with pytest.raises(ValueError, match="mode action"):
+        _controller(reqs, action="evict")
+    with pytest.raises(ValueError, match="lo_release_cost"):
+        _controller(reqs, lo_release_cost=0.5)
+
+
+def test_release_cost_tightens_lo_only_in_hi_mode():
+    mc = _controller(_mixed_requests(), lo_release_cost=3.0)
+    assert [mc.release_cost(i) for i in range(3)] == [1.0, 1.0, 1.0]
+    _overload(mc)
+    assert [mc.release_cost(i) for i in range(3)] == [1.0, 1.0, 3.0]
+    _drain(mc)
+    assert [mc.release_cost(i) for i in range(3)] == [1.0, 1.0, 1.0]
+
+
+def test_hi_util_cap_excludes_unprovable_hi_tenant():
+    # a tightened HI-mode cap that hi_a (0.2 util) fits but the pair
+    # (0.3) does not: the re-proof must exclude hi_b, flag the proof
+    # as partial, and treat hi_b like LO work in HI mode
+    mc = _controller(
+        _mixed_requests(), hi_util_cap=0.25, action="degrade"
+    )
+    _overload(mc)
+    (sw,) = mc.switches
+    assert sw.survivors == ("hi_a",)
+    assert not sw.schedulable
+    assert mc.classify(0, (2,)) == SUBMIT
+    assert mc.classify(1, (2,)) == BEST_EFFORT
+    assert mc.release_cost(1) == mc.lo_release_cost
+
+
+# ---------------------------------------------------------------------------
+# DES integration
+# ---------------------------------------------------------------------------
+def _des_system():
+    reqs = [
+        TaskRequest(
+            "hi", (0.2,), period=1.0, value=5.0,
+            criticality=CRITICALITY_HI,
+        ),
+        TaskRequest("lo", (0.5,), period=1.0, value=0.5),
+    ]
+    hi = SimTask(segments=((0, 0.2),), period=1.0, name="hi")
+    lo = SimTask(
+        segments=((0, 0.5),),
+        period=1.0,
+        arrivals=tuple(0.2 * i for i in range(100)),
+        name="lo",
+    )
+    return reqs, [hi, lo]
+
+
+def test_des_emits_mode_switch_and_protects_hi():
+    reqs, tasks = _des_system()
+    mc = _controller(reqs, action="degrade")
+    rec = TraceRecorder(enabled=True)
+    res = simulate(
+        tasks,
+        SimConfig(policy="edf", horizon=20.0, shedding=mc, trace=rec),
+    )
+    assert res.mode_switches and res.mode_switches[0][1] == MODE_HI
+    assert res.mode_switches[0][2] == ("hi",)
+    # the HI tenant is never demoted or shed
+    assert res.shed_per_task[0] == 0 and res.degraded_per_task[0] == 0
+    assert res.degraded_per_task[1] > 0
+    # the trace carries the canonical kind with stamped attrs,
+    # mirroring SimResult.mode_switches one-to-one
+    events = [e for e in rec.events if e.kind == "mode_switch"]
+    assert {e.kind for e in rec.events} <= set(EVENT_KINDS)
+    assert [
+        (e.t, e.attrs["mode"], tuple(e.attrs["survivors"])) for e in events
+    ] == list(res.mode_switches)
+    assert all(e.attrs["schedulable"] for e in events)
+
+
+def test_des_drop_mode_keeps_gating_chain_live():
+    """Dropped LO releases must stay gate-transparent: with a two-stage
+    LO chain under `fifo_no_polling`, jobs released after HI-mode drops
+    still flow through both stages."""
+    reqs = [
+        TaskRequest(
+            "hi", (0.2, 0.0), period=1.0, value=5.0,
+            criticality=CRITICALITY_HI,
+        ),
+        TaskRequest("lo", (0.4, 0.1), period=1.0, value=0.5),
+    ]
+    adm = AdmissionController([0.0, 0.0], preemptive=False)
+    for r in reqs:
+        assert adm.admit(r).admitted
+    mc = ModeController(adm, reqs, action="drop")
+    hi = SimTask(segments=((0, 0.2),), period=1.0, name="hi")
+    lo = SimTask(
+        segments=((0, 0.4), (1, 0.1)),
+        period=1.0,
+        arrivals=tuple(0.25 * i for i in range(80)),
+        name="lo",
+    )
+    res = simulate(
+        [hi, lo],
+        SimConfig(policy="fifo_no_polling", horizon=30.0, shedding=mc),
+    )
+    assert res.jobs_shed > 0
+    # everything released finishes, modulo jobs caught mid-flight by
+    # the horizon — a stalled gating chain would strand far more
+    assert res.jobs_released - res.jobs_completed <= len(res.response_times)
+
+
+# ---------------------------------------------------------------------------
+# the property battery
+# ---------------------------------------------------------------------------
+@st.composite
+def mixed_system(draw):
+    """1-3 HI tenants plus one overdriven-then-quiet LO tenant on one
+    stage, with the provisioned mix kept Eq. 3-admissible."""
+    n_hi = draw(st.integers(1, 3))
+    hi_w = [
+        draw(st.floats(0.05, 0.15, allow_nan=False)) for _ in range(n_hi)
+    ]
+    lo_w = draw(st.floats(0.1, 0.4, allow_nan=False))
+    overdrive = draw(st.floats(2.0, 3.0, allow_nan=False))
+    burst_end = draw(st.floats(10.0, 20.0, allow_nan=False))
+    seed = draw(st.integers(0, 10_000))
+    action = draw(st.sampled_from(["drop", "degrade"]))
+    policy = draw(st.sampled_from(["fifo", "edf"]))
+
+    rng = random.Random(seed)
+    gap = lo_w / overdrive
+    t, arrivals = 0.0, []
+    while t < burst_end:
+        arrivals.append(t)
+        t += gap * (0.5 + rng.random())
+    reqs = [
+        TaskRequest(
+            f"hi{i}", (w,), period=1.0, value=5.0,
+            criticality=CRITICALITY_HI,
+        )
+        for i, w in enumerate(hi_w)
+    ] + [TaskRequest("lo", (lo_w,), period=1.0, value=0.5)]
+    tasks = [
+        SimTask(segments=((0, w),), period=1.0, name=f"hi{i}")
+        for i, w in enumerate(hi_w)
+    ] + [
+        SimTask(
+            segments=((0, lo_w),),
+            period=1.0,
+            arrivals=tuple(arrivals),
+            name="lo",
+        )
+    ]
+    return reqs, tasks, action, policy
+
+
+def _run_mixed(reqs, tasks, action, policy, horizon=40.0):
+    mc = _controller(reqs, action=action)
+    rec = TraceRecorder(enabled=True)
+    res = simulate(
+        list(tasks),
+        SimConfig(policy=policy, horizon=horizon, shedding=mc, trace=rec),
+    )
+    events = [
+        (e.t, e.kind, e.task, e.stage, e.release, e.attrs)
+        for e in rec.events
+    ]
+    return mc, res, events
+
+
+@pytest.mark.property
+@settings(max_examples=25, deadline=None)
+@given(mixed_system())
+def test_property_mode_switches_protect_hi_and_stay_invariant(sys_):
+    """Every HI entry re-proves and commits the same survivor set (the
+    full HI class), modes strictly alternate, and the HI class is never
+    shed or demoted — across every randomized overload trace."""
+    reqs, tasks, action, policy = sys_
+    mc, res, _events = _run_mixed(reqs, tasks, action, policy)
+    hi_names = tuple(r.name for r in reqs if r.criticality == CRITICALITY_HI)
+    assert res.mode_switches, "overdriven LO never tripped the monitor"
+    modes = [m for _, m, _ in res.mode_switches]
+    assert modes[0] == MODE_HI
+    assert all(a != b for a, b in zip(modes, modes[1:])), (
+        "mode transitions must strictly alternate hi/normal"
+    )
+    for _, mode, survivors in res.mode_switches:
+        if mode == MODE_HI:
+            assert survivors == hi_names
+        else:
+            assert survivors == tuple(r.name for r in reqs)
+    for s in mc.switches:
+        assert s.schedulable
+    for i, r in enumerate(reqs):
+        if r.criticality == CRITICALITY_HI:
+            assert res.shed_per_task[i] == 0
+            assert res.degraded_per_task[i] == 0
+    # the committed mode and the hysteresis state agree at rest
+    assert any(mc.engaged.values()) == (mc.mode == MODE_HI)
+
+
+@pytest.mark.property
+@settings(max_examples=15, deadline=None)
+@given(mixed_system())
+def test_property_mode_runs_are_bit_identical(sys_):
+    """Same contracts, same trace, fresh controller: the transition
+    log, the per-task counters and the full event stream reproduce
+    bit-for-bit — mode switching adds no nondeterminism."""
+    reqs, tasks, action, policy = sys_
+    _mc1, res1, ev1 = _run_mixed(reqs, tasks, action, policy)
+    _mc2, res2, ev2 = _run_mixed(reqs, tasks, action, policy)
+    assert res1.mode_switches == res2.mode_switches
+    assert res1.shed_per_task == res2.shed_per_task
+    assert res1.degraded_per_task == res2.degraded_per_task
+    assert res1.response_times == res2.response_times
+    assert len(ev1) == len(ev2)
+    for i, (a, b) in enumerate(zip(ev1, ev2)):
+        assert a == b, f"first trace divergence at event {i}: {a} != {b}"
+
+
+@pytest.mark.property
+@settings(max_examples=25, deadline=None)
+@given(mixed_system(), st.integers(0, 10_000))
+def test_property_twin_controllers_agree_on_survivors(sys_, obs_seed):
+    """Two fresh controllers over the same contracts — one per layer,
+    as `run_mode_switch_case` arms them — commit identical transition
+    sequences when fed the same backlog observations, even observed in
+    a different task order within each step."""
+    reqs, _tasks, action, _policy = sys_
+    a = _controller(reqs, action=action)
+    b = _controller(reqs, action=action)
+    rng = random.Random(obs_seed)
+    lo = len(reqs) - 1
+    pending = 0
+    for _ in range(60):
+        pending = max(0, pending + rng.choice((-3, -1, 2, 4)))
+        order = list(range(len(reqs)))
+        rng.shuffle(order)
+        for i in order:
+            a.observe(i, pending if i == lo else 0)
+        for i in range(len(reqs)):
+            b.observe(i, pending if i == lo else 0)
+    assert [
+        (s.mode, s.survivors, s.schedulable) for s in a.switches
+    ] == [(s.mode, s.survivors, s.schedulable) for s in b.switches]
+    assert a.mode == b.mode and a.survivors == b.survivors
+
+
+# ---------------------------------------------------------------------------
+# cross-layer agreement on the registry scenario
+# ---------------------------------------------------------------------------
+def test_av_stack_mode_switch_case_is_green():
+    """The conformance harness's own verdict on the registry's AV
+    scenario: both layers switch, agree on the survivor set, and the
+    HI class holds its per-class Eq. 3 guarantee across transitions."""
+    from repro.conformance import ConformanceConfig, run_mode_switch_case
+    from repro.core.perfmodel.hardware import paper_platform
+    from repro.traffic.scenarios import build, get_scenario
+
+    built = build(
+        get_scenario("av_stack"), paper_platform(16), beam_width=4
+    )
+    cfg = ConformanceConfig(horizon_periods=24.0)
+    res = run_mode_switch_case(built, "edf", action="degrade", cfg=cfg)
+    assert res.ok, [str(v) for v in res.violations]
+    assert res.survivors == ("lidar_perception", "camera_monitor")
+    assert res.des_switches and res.server_switches
+    assert res.hi_proof_schedulable
+    assert res.hi_miss_totals() == (0, 0)
+    lo_row = next(t for t in res.tasks if t.criticality == CRITICALITY_LO)
+    assert lo_row.server_degraded > 0 and lo_row.des_degraded > 0

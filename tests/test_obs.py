@@ -127,7 +127,7 @@ def test_event_kinds_vocabulary_is_closed():
     assert set(EVENT_KINDS) == {
         "release", "dispatch", "preempt_store", "preempt_load",
         "segment_end", "complete", "deadline_miss", "shed",
-        "rate_limited", "admit", "reject", "place",
+        "rate_limited", "admit", "reject", "place", "mode_switch",
     }
 
 

@@ -100,6 +100,37 @@ def test_preempted_result_is_exact():
     np.testing.assert_allclose(captured[0], want, rtol=1e-3, atol=1e-3)
 
 
+def test_zero_progress_step_still_terminates():
+    """Regression for the degenerate safety tick: an event-driven
+    serving iteration that runs no window and whose next modeled event
+    is not in the future must force the clock forward by
+    `DEGENERATE_SAFETY_TICK_S` and terminate instead of spinning."""
+    from repro.pipeline.serve import DEGENERATE_SAFETY_TICK_S
+    from repro.traffic.clock import VirtualClock
+
+    class StalledServer(PharosServer):
+        def warmup(self):
+            pass  # nothing ever executes; skip the JIT pass
+
+        def step(self):
+            return False  # no stage makes progress, ever
+
+        def next_completion_time(self):
+            return self.clock()  # the next event is never in the future
+
+    t = ServeTask("t", _weights([(128, 128)]), (0,), period=1.0,
+                  input_rows=128)
+    clk = VirtualClock()
+    srv = StalledServer([t], 1, policy="fifo", clock=clk.now,
+                        sleep=clk.sleep)
+    srv.cost_model = object()  # arm the event-driven branch
+    horizon = 25 * DEGENERATE_SAFETY_TICK_S
+    t0 = clk.now()
+    rep = srv.run(horizon)
+    assert clk.now() - t0 >= horizon  # the loop exited via the horizon
+    assert rep.jobs_released >= 1 and rep.jobs_completed == 0
+
+
 def test_design_to_segments_bridge():
     plat = paper_platform(16)
     combo = ("pointnet", "mlp_mixer")

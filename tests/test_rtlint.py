@@ -204,6 +204,45 @@ class TestTraceVocab:
             == []
         )
 
+    # -- the mixed-criticality `mode_switch` kind --------------------
+    MODE_CFG = {
+        "rules": {"trace-vocab": {"vocab": ["release", "mode_switch"]}}
+    }
+
+    def test_mode_switch_kind_is_canonical(self):
+        # every emission surface the rule scans accepts the kind:
+        # recorder emit, compact sink row, event-kind compare
+        src = (
+            "def f(trace, e, t):\n"
+            "    trace.emit('mode_switch', t)\n"
+            "    tr = trace.sink()\n"
+            "    tr((t, 'mode_switch', '', -1, None, {'mode': 'hi'}))\n"
+            "    return e.kind == 'mode_switch'\n"
+        )
+        assert (
+            findings_for("trace-vocab", src, self.REL, config=self.MODE_CFG)
+            == []
+        )
+
+    def test_flags_typod_mode_switch_emit(self):
+        src = "def f(trace, t):\n    trace.emit('mode_swich', t)\n"
+        (f,) = findings_for(
+            "trace-vocab", src, self.REL, config=self.MODE_CFG
+        )
+        assert "'mode_swich'" in f.message
+
+    def test_repo_vocabulary_includes_mode_switch(self):
+        # the canonical EVENT_KINDS parsed from disk must carry the
+        # mixed-criticality kind — guards against the vocabulary and
+        # the `ModeController` emitters drifting apart
+        from tools.rtlint import LintContext
+        from tools.rtlint.rules.trace_vocab import _load_vocab
+
+        vocab, _file, _line = _load_vocab(
+            LintContext(root=ROOT, config={})
+        )
+        assert "mode_switch" in vocab
+
     def test_finalize_reports_emitterless_kinds(self):
         cfg = {"rules": {"trace-vocab": {"vocab": ["release"]}}}
         (f,) = lint_paths([], ROOT, config=cfg, rules=[RULES["trace-vocab"]])

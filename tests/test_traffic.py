@@ -409,6 +409,70 @@ def test_shedding_policies_pick_expected_victims():
         get_policy("nope")
 
 
+def test_value_density_sheds_safety_tenants_last():
+    """Value-ordered shedding is strict: with every tenant overloaded,
+    only the single cheapest value-density tenant is a victim, and the
+    victim order walks up the density ladder — the safety (highest
+    value) tenant falls last."""
+    ctl = AdmissionController([0.0], preemptive=False)
+    reqs = [
+        TaskRequest("safety", (0.1,), period=1.0, value=10.0),
+        TaskRequest("mid", (0.1,), period=1.0, value=2.0),
+        TaskRequest("cheap", (0.1,), period=1.0, value=0.3),
+    ]
+    for r in reqs:
+        ctl.admit(r)
+    sv = get_policy("shed_by_value")
+    verdicts = [sv.classify(i, [0, 1, 2], ctl, reqs) for i in range(3)]
+    assert verdicts == [SUBMIT, SUBMIT, DROP]
+    # once the cheapest drains out of the overloaded set, the next
+    # rung up becomes the victim; safety only when it stands alone
+    assert sv.classify(1, [0, 1], ctl, reqs) == DROP
+    assert sv.classify(0, [0, 1], ctl, reqs) == SUBMIT
+    assert sv.classify(0, [0], ctl, reqs) == DROP
+
+
+def test_equal_density_victim_is_deterministic():
+    """Ties in value density resolve to the lowest admission index,
+    and repeated classification never flips the victim."""
+    ctl = AdmissionController([0.0], preemptive=False)
+    reqs = [
+        TaskRequest(f"t{i}", (0.1,), period=1.0, value=1.0)
+        for i in range(3)
+    ]
+    for r in reqs:
+        ctl.admit(r)
+    for policy_name, victim_verdict in (
+        ("shed_by_value", DROP),
+        ("degrade_best_effort", "best_effort"),
+    ):
+        pol = get_policy(policy_name)
+        for _ in range(5):
+            verdicts = [
+                pol.classify(i, [0, 1, 2], ctl, reqs) for i in range(3)
+            ]
+            assert verdicts == [victim_verdict, SUBMIT, SUBMIT]
+
+
+def test_degrade_picks_same_victim_as_shed_but_demotes():
+    ctl = AdmissionController([0.0], preemptive=False)
+    reqs = [
+        TaskRequest("keep", (0.2,), period=1.0, value=5.0),
+        TaskRequest("victim", (0.2,), period=1.0, value=0.5),
+    ]
+    for r in reqs:
+        ctl.admit(r)
+    sv = get_policy("shed_by_value")
+    dg = get_policy("degrade_best_effort")
+    assert sv.drops and not dg.drops
+    for i in range(2):
+        shed_v = sv.classify(i, [0, 1], ctl, reqs)
+        deg_v = dg.classify(i, [0, 1], ctl, reqs)
+        # same victim selection, different disposition
+        assert (shed_v == DROP) == (deg_v == "best_effort")
+        assert (shed_v == SUBMIT) == (deg_v == SUBMIT)
+
+
 # ---------------------------------------------------------------------------
 # mini-hypothesis shim: fixtures must coexist with drawn parameters
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
 """trace-vocab: every trace event kind is canonical, every kind emitted.
 
-The 12-kind event vocabulary in ``src/repro/obs/trace.py``
+The 13-kind event vocabulary in ``src/repro/obs/trace.py``
 (``EVENT_KINDS``) is the cross-layer schedule contract: the DES, the
 runtime, the gateway and every consumer (metrics, diff, Chrome export)
 agree on it. A typo'd kind string silently drops events from metrics
