@@ -14,7 +14,7 @@ host ``wall_seconds`` and a ``trace_diff`` verdict (``identical`` or
 the first divergent event) from the `repro.obs` schedule traces — the
 bench asserts the verdict exists for every registry case.
 
-Six CI-enforced invariants ride on top of the sweep:
+Seven CI-enforced invariants ride on top of the sweep:
 
 - **tightened tolerance** — the window-boundary DES must hold a
   DES-vs-runtime tolerance *strictly below* the PR-2 values that
@@ -32,6 +32,12 @@ Six CI-enforced invariants ride on top of the sweep:
 - **shedding cases** — `run_shedding_case` drives overdriven
   scenarios with identical drop-shedding armed in DES and runtime and
   matches the surviving jobs by release time;
+- **migration cases** — `run_migration_case` live-migrates
+  ``sharded_city`` tenants between co-simulated elastic shards
+  (slack-aware and explicit targets, both policies) and fails CI on
+  any deadline violation during a handover, any DES/runtime
+  survivor-set disagreement, or a re-home without a committed Eq. 3
+  proof;
 - **mode-switch cases** — `run_mode_switch_case` drives the
   mixed-criticality ``av_stack`` scenario with twin `ModeController`s
   armed in DES and runtime; CI fails on any HI-class guarantee miss
@@ -323,6 +329,76 @@ def bench_shedding(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
     return {"cases": cases}, ok
 
 
+def bench_migration(quick: bool, built) -> tuple[dict, bool]:
+    """Live-migration conformance: `run_migration_case` re-homes
+    ``sharded_city`` tenants between co-simulated elastic shards and
+    holds the run to zero deadline violations during any handover,
+    exact DES/runtime survivor-set agreement on every tenant, and a
+    committed Eq. 3 proof behind every re-home. One slack-aware and one
+    explicit-target migration per policy."""
+    from repro.conformance import run_migration_case
+    from repro.traffic.migration import MigrationPlan
+
+    cfg = ConformanceConfig(horizon_periods=20.0 if quick else 40.0)
+    cases = []
+    ok = True
+    policies = ("edf",) if quick else POLICIES
+    for policy in policies:
+        for label, plans in (
+            ("slack_aware", None),
+            (
+                "explicit",
+                [
+                    MigrationPlan(
+                        tenant=built.requests[0].name,
+                        at=0.25 * cfg.horizon_periods
+                        * max(r.period for r in built.requests),
+                        target=1,
+                    )
+                ],
+            ),
+        ):
+            res = run_migration_case(
+                built, policy, shards=2, plans=plans, cfg=cfg
+            )
+            ok = ok and res.ok
+            cases.append(
+                {
+                    "scenario": res.scenario,
+                    "policy": res.policy,
+                    "plan": label,
+                    "shards": res.n_shards,
+                    "commits": res.commits,
+                    "aborts": res.aborts,
+                    "final_assignment": [
+                        list(x) for x in res.final_assignment
+                    ],
+                    "tenants": [
+                        {
+                            "tenant": t.tenant,
+                            "migrated": t.migrated,
+                            "donor": t.donor,
+                            "target": t.target,
+                            "committed": t.committed,
+                            "held": t.held,
+                            "runtime_survivors": t.runtime_survivors,
+                            "des_survivors": t.des_survivors,
+                            "runtime_misses": t.runtime_misses,
+                            "des_misses": t.des_misses,
+                        }
+                        for t in res.tenants
+                    ],
+                    "violations": [str(v) for v in res.violations],
+                }
+            )
+            print(
+                f"migration {res.scenario:12s} {res.policy:4s} "
+                f"{label:12s} commits={res.commits} aborts={res.aborts} "
+                f"viol={len(res.violations)}"
+            )
+    return {"cases": cases}, ok
+
+
 def bench_mode_switch(quick: bool, prebuilt: dict) -> tuple[dict, bool]:
     """Mixed-criticality mode-switch conformance: the ``av_stack``
     scenario (overdriven LO infotainment next to HI perception) with
@@ -528,6 +604,7 @@ def main() -> None:
     sharded, sharded_ok = bench_sharded(quick, sharded_city)
     dse, dse_ok = bench_dse(quick)
     shedding, shedding_ok = bench_shedding(quick, {})
+    migration, migration_ok = bench_migration(quick, sharded_city)
     modes, modes_ok = bench_mode_switch(quick, {})
     wall, wall_ok = bench_wallclock(quick, steady)
     payload = {
@@ -537,6 +614,7 @@ def main() -> None:
         "sharded": sharded,
         "dse": dse,
         "shedding": shedding,
+        "migration": migration,
         "mode_switch": modes,
         "wallclock": wall,
         "calibration": bench_calibration(quick, steady),
@@ -551,6 +629,7 @@ def main() -> None:
         or not sharded_ok
         or not dse_ok
         or not shedding_ok
+        or not migration_ok
         or not modes_ok
         or not wall_ok
     ):

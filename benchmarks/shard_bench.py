@@ -22,6 +22,13 @@ disarmed, reporting per (K, placement, ratelimit):
   absorbs the contract violation up front, shedding drops to ~0 and
   the miss rate falls with it.
 
+A second, elastic section ramps the tenant population up and back down
+(25% -> 50% -> 100% -> 50% -> 25%) and compares the `Autoscaler` (K
+free to grow/shrink inside [1, max K], emptiest shard drained before
+removal) against static fleets at each K over the identical phases;
+the bench gates on the autoscaled admit rate matching or beating every
+static K.
+
 Each shard runs deterministically (cost-model `PharosServer` on a
 `VirtualClock`), so every number here is bit-reproducible.
 
@@ -37,11 +44,12 @@ import time
 
 from repro.core.perfmodel.hardware import paper_platform
 from repro.traffic import RateLimiter, ShardedGateway
+from repro.traffic.autoscale import Autoscaler, RampPhase
 from repro.traffic.scenarios import (
     BuiltScenario,
-    TrafficScenario,
     build,
     get_scenario,
+    replicate,
 )
 from repro.traffic.shedding import get_policy
 
@@ -51,65 +59,60 @@ SCENARIO = "multi_tenant_rush"
 PLACEMENTS = ("hash_by_tenant", "least_loaded", "slack_aware")
 
 
-def replicate(built: BuiltScenario, copies: int) -> BuiltScenario:
-    """``copies`` independent copies of every tenant on the same
-    pipeline design: names suffixed ``#c<i>``, traffic re-seeded per
-    copy (same shapes, fresh randomness), per-task design splits
-    duplicated. The result deliberately overcommits one pipeline —
-    that is the population the sharded admission has to triage."""
-    from dataclasses import replace as dc_replace
+def ramp_phases(
+    population: BuiltScenario, quick: bool
+) -> tuple[RampPhase, ...]:
+    """Tenant-count ramp over the replicated population: 25% -> 50% ->
+    100% -> 50% -> 25% of the tenants arrive/depart across epochs (the
+    quick sweep trims to the up-leg).  Each epoch runs long enough for
+    the per-shard backlog dynamics to engage."""
+    n = len(population.requests)
+    duration = 8.0 * max(r.period for r in population.requests)
+    fracs = (0.25, 0.5, 1.0) if quick else (0.25, 0.5, 1.0, 0.5, 0.25)
+    phases = []
+    for frac in fracs:
+        count = max(1, round(frac * n))
+        phases.append(
+            RampPhase(duration=duration, active=tuple(range(count)))
+        )
+    return tuple(phases)
 
-    from repro.core.dse.space import DesignPoint
-    from repro.core.rt.task import SegmentTable, Task, TaskSet
 
-    n = len(built.requests)
-    tenants, workloads, tasks, base, reqs, arrs = [], [], [], [], [], []
-    for c in range(copies):
-        for i in range(n):
-            spec = built.scenario.tenants[i]
-            name = spec.name if c == 0 else f"{spec.name}#c{c}"
-            tenants.append(dc_replace(spec, name=name))
-            workloads.append(built.workloads[i])
-            t = built.taskset.tasks[i]
-            tasks.append(
-                Task(
-                    workload=t.workload,
-                    period=t.period,
-                    deadline=t.deadline,
-                    sporadic=t.sporadic,
-                    name=name,
-                )
-            )
-            base.append(list(built.table.base[i]))
-            r = built.requests[i]
-            reqs.append(dc_replace(r, name=name))
-            proc = built.arrivals[i]
-            arrs.append(
-                dc_replace(proc, seed=proc.seed + 7919 * c)
-                if hasattr(proc, "seed")
-                else proc
-            )
-    return BuiltScenario(
-        scenario=TrafficScenario(
-            name=f"{built.scenario.name}x{copies}",
-            description=built.scenario.description,
-            tenants=tuple(tenants),
-            policy=built.scenario.policy,
-        ),
-        workloads=tuple(workloads),
-        taskset=TaskSet(tasks=tuple(tasks)),
-        design=DesignPoint(
-            accs=built.design.accs,
-            splits=tuple(
-                tuple(row[i % len(row)] for i in range(copies * n))
-                for row in built.design.splits
-            ),
-            max_util=built.design.max_util * copies,
-        ),
-        table=SegmentTable(base=base, overhead=list(built.table.overhead)),
-        requests=tuple(reqs),
-        arrivals=tuple(arrs),
+def run_ramp_point(
+    population: BuiltScenario,
+    phases: tuple[RampPhase, ...],
+    min_shards: int,
+    max_shards: int,
+) -> dict:
+    t0 = time.perf_counter()
+    scaler = Autoscaler(
+        population, min_shards=min_shards, max_shards=max_shards
     )
+    report = scaler.run_ramp(phases)
+    elapsed = time.perf_counter() - t0
+    return {
+        "min_shards": min_shards,
+        "max_shards": max_shards,
+        "admit_rate": report.admit_rate(),
+        "max_shards_used": report.max_shards_used(),
+        "shard_counts": report.shard_counts(),
+        "final_assignment": {
+            str(k): v for k, v in report.final_assignment().items()
+        },
+        "epochs": [
+            {
+                "t_start": ep.t_start,
+                "n_shards": ep.n_shards,
+                "active": ep.tenant_count(),
+                "admitted": ep.admitted_count(),
+                "rehomed": ep.rehomed,
+                "grew": ep.grew,
+                "shrank": ep.shrank,
+            }
+            for ep in report.epochs
+        ],
+        "wall_seconds": elapsed,
+    }
 
 
 def run_point(
@@ -251,6 +254,31 @@ def main() -> None:
                 b >= a - 1e-12 for a, b in zip(rates, rates[1:])
             ), f"admit rate regressed with K under {placement}: {rates}"
 
+    # elastic ramp gate: the autoscaler (K free to move in
+    # [1, max(ks)]) must admit at least as many tenant-phases as every
+    # static fleet run over the same ramp with the same epoch
+    # machinery.  It can: any placement a static K proves, the
+    # autoscaler can reach by growing to that K, and shrink only fires
+    # when every evicted tenant re-proves elsewhere.
+    phases = ramp_phases(population, quick)
+    auto_pt = run_ramp_point(population, phases, 1, max(ks))
+    print(
+        f"ramp auto     K<={max(ks)} admit={auto_pt['admit_rate']:.2f} "
+        f"shards={auto_pt['shard_counts']}"
+    )
+    static_pts = []
+    for k in ks:
+        pt = run_ramp_point(population, phases, k, k)
+        static_pts.append(pt)
+        print(
+            f"ramp static   K={k}  admit={pt['admit_rate']:.2f} "
+            f"shards={pt['shard_counts']}"
+        )
+        assert auto_pt["admit_rate"] >= pt["admit_rate"] - 1e-12, (
+            f"autoscaled admit rate {auto_pt['admit_rate']} fell below "
+            f"static K={k} ({pt['admit_rate']})"
+        )
+
     payload = {
         "bench": "shard",
         "quick": quick,
@@ -258,6 +286,14 @@ def main() -> None:
         "copies": copies,
         "horizon_periods": horizon_periods,
         "points": points,
+        "ramp": {
+            "phases": [
+                {"duration_s": p.duration, "active": len(p.active)}
+                for p in phases
+            ],
+            "autoscaled": auto_pt,
+            "static": static_pts,
+        },
     }
     os.makedirs(RESULTS_DIR, exist_ok=True)
     path = os.path.join(RESULTS_DIR, "BENCH_shard.json")

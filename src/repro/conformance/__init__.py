@@ -17,6 +17,10 @@
   `ModeController`s in DES and runtime must agree on the Eq. 3
   re-proved HI survivor set and lose zero HI deadlines across every
   transition);
+  `run_migration_case` (live tenant re-homing on the shared-clock
+  co-simulated elastic gateway, DES replayed on the realized release
+  stamps: exact survivor-set agreement, zero deadline violations
+  during any handover, proof-before-commit membership);
   `run_dse_case` (every DSE-claimed-feasible design held to the three
   layers, and the best design provisioned into a `ShardedGateway`
   that must serve the scenario's traffic violation-free); plus
@@ -37,6 +41,8 @@ from repro.conformance.harness import (
     ConformanceConfig,
     ConformanceReport,
     DSECaseResult,
+    MigrationCaseResult,
+    MigrationTenantRow,
     ModeSwitchCaseResult,
     ModeSwitchTaskRow,
     ShardedCaseResult,
@@ -50,6 +56,7 @@ from repro.conformance.harness import (
     run_case,
     run_conformance,
     run_dse_case,
+    run_migration_case,
     run_mode_switch_case,
     run_sharded_case,
     run_shedding_case,
@@ -68,6 +75,8 @@ __all__ = [
     "ConformanceConfig",
     "ConformanceReport",
     "DSECaseResult",
+    "MigrationCaseResult",
+    "MigrationTenantRow",
     "ModeSwitchCaseResult",
     "ModeSwitchTaskRow",
     "ShardedCaseResult",
@@ -81,6 +90,7 @@ __all__ = [
     "run_case",
     "run_conformance",
     "run_dse_case",
+    "run_migration_case",
     "run_mode_switch_case",
     "run_sharded_case",
     "run_shedding_case",

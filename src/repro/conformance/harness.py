@@ -1118,6 +1118,296 @@ def run_shedding_case(
 
 
 # ---------------------------------------------------------------------------
+# the migration case: live tenant re-homing under the co-simulation
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class MigrationTenantRow:
+    """Per-tenant view of one migration conformance case. Survivor
+    counts are completed jobs inside the compared window (releases at
+    least one analytic response bound before the horizon — the tail a
+    layer may legitimately leave in flight is excluded)."""
+
+    tenant: str
+    migrated: bool
+    donor: int
+    target: int | None
+    committed: bool
+    aborted: bool
+    held: int
+    runtime_survivors: int
+    des_survivors: int
+    runtime_misses: int
+    des_misses: int
+
+
+@dataclass(frozen=True)
+class MigrationCaseResult:
+    """`run_migration_case` result: live migrations executed on the
+    shared-clock co-simulated elastic gateway, replayed shard-by-shard
+    through the DES on the *realized* release stamps, and held to:
+    zero deadline violations in either layer during any handover,
+    exact DES/runtime survivor-set agreement for every tenant, a
+    committed Eq. 3 proof behind every re-home, and bit-exact per-shard
+    admission verdicts after all the churn."""
+
+    scenario: str
+    policy: str
+    n_shards: int
+    commits: int
+    aborts: int
+    final_assignment: tuple[tuple[str, int], ...]
+    tenants: tuple[MigrationTenantRow, ...]
+    violations: tuple[Violation, ...]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def run_migration_case(
+    built,
+    policy: str = "edf",
+    *,
+    shards: int = 2,
+    placement="least_loaded",
+    plans=None,
+    cfg: ConformanceConfig | None = None,
+) -> MigrationCaseResult:
+    """Live-migration conformance: run ``built`` on an **elastic**
+    `ShardedGateway` (shared-clock co-simulation) with a
+    `MigrationController` executing ``plans`` (default: re-home the
+    first tenant slack-aware at 30% of the horizon), then replay each
+    shard through the DES using the runtime's own realized release
+    stamps as explicit arrival traces — the cross-layer join is the
+    release float, exactly as in `run_shedding_case`.
+
+    Checks, each a named `Violation` on failure:
+
+    - ``migration_no_commit``   — vacuity: at least one plan committed.
+    - ``migration_drain_stuck`` — every started drain finished inside
+      the horizon.
+    - ``migration_uncommitted_member`` — every committed tenant is an
+      admitted member of its target shard (proof-before-commit held).
+    - ``migration_survivor_mismatch`` — per tenant and shard, the DES
+      and the runtime completed exactly the same job set (release
+      stamps) outside the horizon tail.
+    - ``migration_deadline_miss_runtime`` / ``..._des`` — zero
+      deadline violations in either layer, handovers included.
+    - ``migration_no_post_commit_service`` — each migrated tenant
+      completed at least one job on its target shard (the post-commit
+      Eq. 3 contract was actually exercised).
+    - ``verdict_shard_admission`` — after all churn, every shard's
+      cached Eq. 3 verdict survives full re-analysis.
+    """
+    from repro.traffic.migration import MigrationController, MigrationPlan
+    from repro.traffic.shard import ShardedGateway
+
+    cfg = cfg or ConformanceConfig()
+    scenario = built.scenario.name
+    periods = [t.period for t in built.taskset.tasks]
+    horizon = cfg.horizon_periods * max(periods)
+    names = [r.name for r in built.requests]
+    n = len(names)
+
+    rec = TraceRecorder()
+    gw = ShardedGateway.from_built(
+        built,
+        shards=shards,
+        placement=placement,
+        policy=policy,
+        seed=cfg.seed,
+        max_dim=cfg.max_dim,
+        elastic=True,
+        trace=rec,
+    )
+    if plans is None:
+        plans = [MigrationPlan(tenant=names[0], at=0.3 * horizon)]
+    ctl = MigrationController(plans, trace=rec)
+    gw.run(horizon, shared_clock=True, controller=ctl)
+
+    violations: list[Violation] = []
+    commits = len(ctl.committed)
+    aborts = len(ctl.aborted)
+    if commits == 0:
+        violations.append(
+            Violation(
+                scenario, policy, "*", "migration_no_commit",
+                0.0, 1.0,
+                "no migration committed — the case proves nothing",
+            )
+        )
+    for tenant in ctl.in_progress():
+        violations.append(
+            Violation(
+                scenario, policy, tenant, "migration_drain_stuck",
+                1.0, 0.0,
+                "drain did not complete inside the horizon",
+            )
+        )
+    for r in ctl.committed:
+        target_gw = gw.gateways[r.target]
+        if r.tenant not in target_gw.admission.names():
+            violations.append(
+                Violation(
+                    scenario, policy, r.tenant,
+                    "migration_uncommitted_member",
+                    1.0, 0.0,
+                    f"committed to shard {r.target} but not an admitted "
+                    "member there",
+                )
+            )
+
+    # ---- the DES replay: per shard, on the realized release stamps ----
+    serve_tasks, _reqs, _arr = built.serve_bundle(
+        period_scale=1.0, seed=cfg.seed, max_dim=cfg.max_dim
+    )
+    cm = built.conformance_cost_model(serve_tasks)
+    table = SegmentTable(
+        base=cm.segment_table().base,
+        overhead=[0.0] * cm.n_stages,
+    )
+    idx = {nm: i for i, nm in enumerate(names)}
+    realized: list[list[list[float]]] = [
+        [[] for _ in range(n)] for _ in range(shards)
+    ]
+    for e in rec.events:
+        if e.layer == "gateway" and e.kind == "release":
+            realized[e.shard][idx[e.task]].append(e.release)
+    des_runs = [
+        simulate_taskset(
+            table,
+            built.taskset,
+            policy,
+            horizon=horizon,
+            overheads=None,
+            arrivals=[sorted(tr) for tr in realized[k]],
+            chunk_schedules=cm.chunk_schedule(),
+            preemption="window",
+        )
+        for k in range(shards)
+    ]
+
+    # tail: a release may legitimately still be in flight at the
+    # horizon; outside one analytic response bound the layers must
+    # agree exactly on who survived
+    bounds = end_to_end_bounds(
+        table, built.taskset, policy, blocking=cm.stage_window_quantum()
+    )
+    by_record = {r.tenant: r for r in ctl.records}
+    rows: list[MigrationTenantRow] = []
+    for i, nm in enumerate(names):
+        cutoff = horizon - bounds[i]
+        deadline = built.taskset.tasks[i].deadline
+        rt_surv: set[tuple[int, float]] = set()
+        rt_misses = 0
+        for k in range(shards):
+            sr = gw.gateways[k].server.report
+            rt_surv |= {
+                (k, rel)
+                for rel in sr.completed_releases.get(nm, [])
+                if rel <= cutoff
+            }
+            rt_misses += gw.gateways[k].server.report.deadline_misses.get(
+                nm, 0
+            )
+        des_surv: set[tuple[int, float]] = set()
+        des_misses = 0
+        for k, des in enumerate(des_runs):
+            des_surv |= {
+                (k, rel)
+                for rel in des.completed_releases[i]
+                if rel <= cutoff
+            }
+            des_misses += sum(
+                1
+                for rel, resp in zip(
+                    des.completed_releases[i], des.response_times[i]
+                )
+                if rel <= cutoff and resp > deadline + 1e-9
+            )
+        if rt_surv != des_surv:
+            delta = rt_surv.symmetric_difference(des_surv)
+            violations.append(
+                Violation(
+                    scenario, policy, nm, "migration_survivor_mismatch",
+                    float(len(delta)), 0.0,
+                    f"DES and runtime disagree on {len(delta)} completed "
+                    f"jobs (runtime {len(rt_surv)}, DES {len(des_surv)})",
+                )
+            )
+        if rt_misses:
+            violations.append(
+                Violation(
+                    scenario, policy, nm,
+                    "migration_deadline_miss_runtime",
+                    float(rt_misses), 0.0,
+                    "runtime violated a deadline during the migrated run",
+                )
+            )
+        if des_misses:
+            violations.append(
+                Violation(
+                    scenario, policy, nm, "migration_deadline_miss_des",
+                    float(des_misses), 0.0,
+                    "DES violated a deadline during the migrated run",
+                )
+            )
+        r = by_record.get(nm)
+        if r is not None and r.committed:
+            post = [
+                (k, rel)
+                for (k, rel) in sorted(rt_surv)
+                if k == r.target and rel >= (r.committed_at or 0.0)
+            ]
+            if not post:
+                violations.append(
+                    Violation(
+                        scenario, policy, nm,
+                        "migration_no_post_commit_service",
+                        0.0, 1.0,
+                        "no job completed on the target shard after the "
+                        "commit — the re-homed contract was never "
+                        "exercised",
+                    )
+                )
+        rows.append(
+            MigrationTenantRow(
+                tenant=nm,
+                migrated=r is not None,
+                donor=r.donor if r is not None else -1,
+                target=r.target if r is not None else None,
+                committed=bool(r is not None and r.committed),
+                aborted=bool(r is not None and r.aborted),
+                held=r.held if r is not None else 0,
+                runtime_survivors=len(rt_surv),
+                des_survivors=len(des_surv),
+                runtime_misses=rt_misses,
+                des_misses=des_misses,
+            )
+        )
+
+    if not gw.verify():
+        violations.append(
+            Violation(
+                scenario, policy, "*", "verdict_shard_admission",
+                1.0, 0.0,
+                "a shard's cached Eq. 3 verdict disagrees with the full "
+                "re-analysis after migration churn",
+            )
+        )
+    return MigrationCaseResult(
+        scenario=scenario,
+        policy=policy,
+        n_shards=shards,
+        commits=commits,
+        aborts=aborts,
+        final_assignment=tuple(sorted(ctl.final_assignment().items())),
+        tenants=tuple(rows),
+        violations=tuple(violations),
+    )
+
+
+# ---------------------------------------------------------------------------
 # the mode-switch case: mixed-criticality overload transitions
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)

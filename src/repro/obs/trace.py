@@ -52,6 +52,20 @@ Event vocabulary (``TraceEvent.kind``):
                        ``attrs["survivors"]`` the re-proved guarantee
                        set, ``attrs["schedulable"]`` the Eq. 3
                        re-proof verdict that gated the commit.
+- ``migrate_start``  — a live tenant migration began draining
+                       (`repro.traffic.migration.MigrationController`):
+                       new releases stop on the donor shard (``shard``)
+                       while in-flight jobs complete;
+                       ``attrs["held"]`` counts the withheld releases.
+- ``migrate_commit`` — the drained tenant passed the target shard's
+                       Eq. 3 admit and was re-homed; ``shard`` is the
+                       target, ``attrs["donor"]`` the shard it left,
+                       ``attrs["held"]`` the re-stamped releases
+                       injected on the target.
+- ``migrate_abort``  — no target could prove the tenant's contract;
+                       the tenant was restored onto its donor shard
+                       (``shard``) with its held releases re-injected —
+                       ``attrs["reason"]`` says why.
 
 Identity and ordering: events carry the emitting ``layer`` ("des",
 "runtime" or "gateway"), the tenant/task ``task`` name, the job's
@@ -94,6 +108,9 @@ EVENT_KINDS = (
     "reject",
     "place",
     "mode_switch",
+    "migrate_start",
+    "migrate_commit",
+    "migrate_abort",
 )
 
 #: layer tags of the three instrumented layers

@@ -22,7 +22,15 @@ an *online* layer in front of the serving runtime:
 - `gateway`   — `TrafficGateway`: the admission-controlled front door
   releasing `ArrivalProcess` traffic into a `PharosServer`;
 - `shard`     — `ShardedGateway`: K gateway replicas of one pipeline
-  with pluggable tenant placement (hash / least-loaded / slack-aware);
+  with pluggable tenant placement (hash / least-loaded / slack-aware),
+  co-simulated on one shared `VirtualClock` (and, in elastic mode,
+  accepting live tenant re-homing mid-run);
+- `migration` — `MigrationController`: slack-aware live tenant
+  migration between shards — drain the donor, re-prove the Eq. 3
+  contract on the target, commit only if the proof succeeds;
+- `autoscale` — `Autoscaler`: epoch-based elastic shard fleet, growing
+  K when placement is unprovable and draining the emptiest shard when
+  the survivors re-prove elsewhere;
 - `scenarios` — named traffic mixes (smart-transportation style) built
   from the paper workloads and the LM `configs/`;
 - `clock`     — `WallClock` / deterministic `VirtualClock` shared by
@@ -47,8 +55,19 @@ from repro.traffic.arrival import (
     TraceArrivals,
     merge_arrivals,
 )
+from repro.traffic.autoscale import (
+    AutoscaleReport,
+    Autoscaler,
+    EpochResult,
+    RampPhase,
+)
 from repro.traffic.clock import VirtualClock, WallClock
 from repro.traffic.gateway import GatewayReport, TrafficGateway
+from repro.traffic.migration import (
+    MigrationController,
+    MigrationPlan,
+    MigrationRecord,
+)
 from repro.traffic.modes import (
     MODE_HI,
     MODE_NORMAL,
@@ -67,6 +86,7 @@ from repro.traffic.scenarios import (
     list_scenarios,
     materialize,
     register,
+    replicate,
     resolve_problem,
 )
 from repro.traffic.shard import (
@@ -124,7 +144,15 @@ __all__ = [
     "list_scenarios",
     "materialize",
     "register",
+    "replicate",
     "resolve_problem",
+    "MigrationController",
+    "MigrationPlan",
+    "MigrationRecord",
+    "Autoscaler",
+    "AutoscaleReport",
+    "EpochResult",
+    "RampPhase",
     "BacklogMonitor",
     "RejectNewest",
     "ShedByValue",

@@ -48,7 +48,7 @@ to it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Sequence
+from typing import Iterable, Sequence
 
 from repro.pipeline.serve import DEGENERATE_SAFETY_TICK_S, PharosServer
 from repro.traffic.admission import (
@@ -110,6 +110,24 @@ class GatewayReport:
         return sum(t.released + t.degraded for t in self.tenants)
 
 
+@dataclass
+class _RunState:
+    """Release-loop state between `begin_run` and `finish_run` — what the
+    shared-clock co-simulation driver (`repro.traffic.shard`) advances
+    one event at a time across K gateways."""
+
+    horizon_s: float
+    stats: list[TenantStats]
+    #: merged release schedule, ``(t_rel, tenant_index)`` ascending;
+    #: entries at ``pos`` and beyond are still in the future
+    sched: list[tuple[float, int]]
+    pos: int
+    t0: float
+    virtual: bool
+    cost_driven: bool
+    virtual_dt: float
+
+
 class TrafficGateway:
     def __init__(
         self,
@@ -125,6 +143,7 @@ class TrafficGateway:
         clock=None,
         trace=None,
         shard: int = -1,
+        active: Sequence[int] | None = None,
     ):
         if not (len(server.tasks) == len(requests) == len(arrivals)):
             raise ValueError(
@@ -161,14 +180,32 @@ class TrafficGateway:
         self._tr_shard = shard
         self._admitted_idx: list[int] | None = None
         self._limits: list[int] = []
+        # elastic membership: ``active`` names the tenant indices this
+        # gateway initially serves (the rest are *present* — the server
+        # knows their task geometry — but admit nothing and release
+        # nothing until `admit_tenant` activates them mid-run). None
+        # keeps the classic fixed-tenancy gateway: every request is a
+        # member and mid-run churn is not expected.
+        if active is not None:
+            bad = [i for i in active if not 0 <= i < len(self.requests)]
+            if bad:
+                raise ValueError(f"active indices out of range: {bad}")
+        self._elastic = active is not None
+        self._active: set[int] = (
+            set(active) if active is not None else set(range(len(requests)))
+        )
+        self._ever_active: set[int] = set(self._active)
+        self._run: _RunState | None = None
 
     # -- phase 1: tenancy admission -----------------------------------
     def open(self) -> list[AdmissionDecision]:
-        """Run admission for every tenant (idempotent)."""
+        """Run admission for every (active) tenant (idempotent)."""
         if self._admitted_idx is not None:
             return self.admission.decisions
         self._admitted_idx = []
         for i, req in enumerate(self.requests):
+            if self._elastic and i not in self._active:
+                continue
             dec = self.admission.admit(req)
             if dec.admitted:
                 self._admitted_idx.append(i)
@@ -179,7 +216,16 @@ class TrafficGateway:
                     -1, self._tr_shard,
                     attrs={"max_util": dec.max_util, "reason": dec.reason},
                 )
-        # backlog limits from the post-admission response bounds
+        self._refresh_limits()
+        return self.admission.decisions
+
+    def _refresh_limits(self) -> None:
+        """Recompute backlog limits from the *current* admitted set's
+        response bounds. Called at `open` and after every mid-run
+        `admit_tenant`/`release_tenant` — limits derived from a stale
+        admitted set would make the backlog monitor (and everything
+        scoring headroom through it) judge live traffic against a
+        departed tenant's interference."""
         bounds = self.admission.response_bounds()
         self._limits = [
             self.monitor.limit_for(
@@ -187,16 +233,95 @@ class TrafficGateway:
             )
             for req in self.requests
         ]
-        return self.admission.decisions
+
+    # -- elastic membership (live migration / autoscaling) ------------
+    def serves(self, i: int) -> bool:
+        """Is tenant ``i`` currently an active member of this gateway?"""
+        return i in self._active and (
+            self._admitted_idx is None or i in self._admitted_idx
+        )
+
+    def admit_tenant(self, i: int) -> AdmissionDecision:
+        """Mid-run activation of tenant ``i``: run the Eq. 3 admit
+        against this gateway's *current* admitted set, and on success
+        make the tenant an active member. Backlog limits are recomputed
+        from the post-admit bounds (fresh, never stale)."""
+        if self._admitted_idx is None:
+            self.open()
+        dec = self.admission.admit(self.requests[i])
+        if self._tr is not None:
+            self._tr.emit(
+                "admit" if dec.admitted else "reject",
+                self.clock.now(), "gateway", self.requests[i].name,
+                -1, self._tr_shard,
+                attrs={"max_util": dec.max_util, "reason": dec.reason},
+            )
+        if dec.admitted:
+            if i not in self._admitted_idx:
+                self._admitted_idx.append(i)
+                self._admitted_idx.sort()
+            self._active.add(i)
+            self._ever_active.add(i)
+            self._refresh_limits()
+            if self._run is not None:
+                self._run.stats[i].admitted = True
+        return dec
+
+    def release_tenant(self, i: int) -> TaskRequest:
+        """Mid-run release of tenant ``i``: drop its Eq. 3 contribution
+        (`AdmissionController.release` rebuilds the utilization cache
+        exactly) and deactivate it. Backlog limits are recomputed so no
+        later overload verdict or headroom snapshot scores this gateway
+        with the departed tenant's load."""
+        req = self.admission.release(self.requests[i].name)
+        if self._admitted_idx is not None and i in self._admitted_idx:
+            self._admitted_idx.remove(i)
+        self._active.discard(i)
+        self._refresh_limits()
+        return req
+
+    def extract_future(self, i: int) -> list[float]:
+        """Remove tenant ``i``'s not-yet-due releases from the live
+        schedule (drain: stop new releases) and return their nominal
+        times (relative to the run's ``t0``, ascending)."""
+        st = self._require_run()
+        held = [t for t, j in st.sched[st.pos:] if j == i]
+        st.sched[st.pos:] = [e for e in st.sched[st.pos:] if e[1] != i]
+        st.stats[i].scheduled -= len(held)
+        return held
+
+    def inject_future(self, i: int, times: Iterable[float]) -> None:
+        """Merge releases for tenant ``i`` (times relative to the run's
+        ``t0``) into the live schedule — the re-home side of a
+        migration handover."""
+        st = self._require_run()
+        ev = [(float(t), i) for t in times]
+        st.sched[st.pos:] = sorted(st.sched[st.pos:] + ev)
+        st.stats[i].scheduled += len(ev)
+
+    def _require_run(self) -> _RunState:
+        if self._run is None:
+            raise RuntimeError(
+                "no run in progress — begin_run() first"
+            )
+        return self._run
 
     # -- phase 2: the release loop ------------------------------------
-    def run(
+    # The loop is decomposed into four primitives so that a shared-clock
+    # driver (`ShardedGateway.run(shared_clock=True)`) can interleave K
+    # gateways event-by-event on one timebase: `begin_run` freezes the
+    # run state, `release_due` performs the due-release sweep,
+    # `next_event` exposes the earliest future event, `finish_run`
+    # assembles the report. `run` composes them and is bit-identical to
+    # the pre-decomposition loop.
+    def begin_run(
         self,
         horizon_s: float,
         *,
         virtual_dt: float | None = None,
         warmup: bool = True,
-    ) -> GatewayReport:
+    ) -> None:
+        """Open, merge arrival schedules and freeze the run state."""
         self.open()
         stats = [
             TenantStats(name=req.name, admitted=(i in self._admitted_idx))
@@ -228,33 +353,82 @@ class TrafficGateway:
             virtual_dt = p_min / 20.0
         if warmup:
             self.server.warmup()
+        self._run = _RunState(
+            horizon_s=horizon_s,
+            stats=stats,
+            sched=sched,
+            pos=0,
+            t0=self.clock.now(),
+            virtual=virtual,
+            cost_driven=cost_driven,
+            virtual_dt=virtual_dt if virtual_dt is not None else 0.0,
+        )
 
-        t0 = self.clock.now()
-        pos = 0
+    def release_due(self) -> float:
+        """Release every due arrival; returns elapsed run time.
+
+        Due arrivals are released *before* the caller's horizon check so
+        jobs landing between the last tick and the horizon still flow
+        through the shedding path — every scheduled arrival ends up
+        released, degraded or shed, never silently dropped."""
+        st = self._require_run()
+        rel = self.clock.now() - st.t0
+        while st.pos < len(st.sched) and (
+            st.sched[st.pos][0] <= rel or rel >= st.horizon_s
+        ):
+            sched_t, i = st.sched[st.pos]
+            st.pos += 1
+            self._release(
+                i, st.t0 + sched_t, max(0.0, rel - sched_t), st.stats
+            )
+        return rel
+
+    def next_event(self) -> float:
+        """Earliest future event on this gateway's timeline (absolute
+        clock time): next modeled window boundary, next scheduled
+        arrival, or the horizon — whichever comes first."""
+        st = self._require_run()
+        nxt = self.server.next_completion_time()
+        if st.pos < len(st.sched):
+            nxt = min(nxt, st.t0 + st.sched[st.pos][0])
+        return min(nxt, st.t0 + st.horizon_s)
+
+    def finish_run(self) -> GatewayReport:
+        """Finalize the server report and close the run. Elastic
+        gateways report only ever-active tenants (the rest were never
+        members here — their stats rows belong to other shards)."""
+        st = self._require_run()
+        self._run = None
+        tenants = (
+            [st.stats[i] for i in sorted(self._ever_active)]
+            if self._elastic
+            else st.stats
+        )
+        return GatewayReport(
+            tenants=tenants,
+            decisions=list(self.admission.decisions),
+            server_report=self.server.finalize_report(self.clock.now()),
+            mode_switches=list(self.mode_switches),
+        )
+
+    def run(
+        self,
+        horizon_s: float,
+        *,
+        virtual_dt: float | None = None,
+        warmup: bool = True,
+    ) -> GatewayReport:
+        self.begin_run(horizon_s, virtual_dt=virtual_dt, warmup=warmup)
+        st = self._run
         while True:
-            rel = self.clock.now() - t0
-            # release due arrivals *before* the horizon check so jobs
-            # landing between the last tick and the horizon still flow
-            # through the shedding path — every scheduled arrival ends
-            # up released, degraded or shed, never silently dropped
-            while pos < len(sched) and (
-                sched[pos][0] <= rel or rel >= horizon_s
-            ):
-                sched_t, i = sched[pos]
-                pos += 1
-                self._release(
-                    i, t0 + sched_t, max(0.0, rel - sched_t), stats
-                )
+            rel = self.release_due()
             if rel >= horizon_s:
                 break
             ran = self.server.step()
-            if cost_driven:
+            if st.cost_driven:
                 # advance to the next modeled window boundary or the
                 # next scheduled arrival, whichever comes first
-                nxt = self.server.next_completion_time()
-                if pos < len(sched):
-                    nxt = min(nxt, t0 + sched[pos][0])
-                nxt = min(nxt, t0 + horizon_s)
+                nxt = self.next_event()
                 now2 = self.clock.now()
                 if nxt > now2:
                     self.clock.advance(nxt - now2)
@@ -263,24 +437,19 @@ class TrafficGateway:
                     # event — force time forward so the loop terminates
                     # even with a zero serving quantum
                     self.clock.advance(
-                        max(virtual_dt, DEGENERATE_SAFETY_TICK_S)
+                        max(st.virtual_dt, DEGENERATE_SAFETY_TICK_S)
                     )
-            elif virtual:
-                if not ran and pos < len(sched):
+            elif st.virtual:
+                if not ran and st.pos < len(st.sched):
                     # idle: fast-forward to the next arrival
                     self.clock.advance(
-                        max(virtual_dt, sched[pos][0] - rel)
+                        max(st.virtual_dt, st.sched[st.pos][0] - rel)
                     )
                 else:
-                    self.clock.advance(virtual_dt)
+                    self.clock.advance(st.virtual_dt)
             elif not ran:
                 self.clock.sleep(1e-4)
-        return GatewayReport(
-            tenants=stats,
-            decisions=list(self.admission.decisions),
-            server_report=self.server.finalize_report(self.clock.now()),
-            mode_switches=list(self.mode_switches),
-        )
+        return self.finish_run()
 
     def _release(
         self,

@@ -411,6 +411,70 @@ def build(
     return materialize(scenario, workloads, taskset, design, seed=seed)
 
 
+def replicate(built: BuiltScenario, copies: int) -> BuiltScenario:
+    """``copies`` independent copies of every tenant on the same
+    pipeline design: names suffixed ``#c<i>``, traffic re-seeded per
+    copy (same shapes, fresh randomness), per-task design splits
+    duplicated. The result deliberately overcommits one pipeline —
+    the population the sharded admission (`repro.traffic.shard`) has
+    to triage and the autoscaler (`repro.traffic.autoscale`) has to
+    absorb by growing the fleet."""
+    from dataclasses import replace as dc_replace
+
+    from repro.core.dse.space import DesignPoint
+
+    if copies < 1:
+        raise ValueError("need at least one copy")
+    n = len(built.requests)
+    tenants, workloads, tasks, base, reqs, arrs = [], [], [], [], [], []
+    for c in range(copies):
+        for i in range(n):
+            spec = built.scenario.tenants[i]
+            name = spec.name if c == 0 else f"{spec.name}#c{c}"
+            tenants.append(dc_replace(spec, name=name))
+            workloads.append(built.workloads[i])
+            t = built.taskset.tasks[i]
+            tasks.append(
+                Task(
+                    workload=t.workload,
+                    period=t.period,
+                    deadline=t.deadline,
+                    sporadic=t.sporadic,
+                    name=name,
+                )
+            )
+            base.append(list(built.table.base[i]))
+            r = built.requests[i]
+            reqs.append(dc_replace(r, name=name))
+            proc = built.arrivals[i]
+            arrs.append(
+                dc_replace(proc, seed=proc.seed + 7919 * c)
+                if hasattr(proc, "seed")
+                else proc
+            )
+    return BuiltScenario(
+        scenario=TrafficScenario(
+            name=f"{built.scenario.name}x{copies}",
+            description=built.scenario.description,
+            tenants=tuple(tenants),
+            policy=built.scenario.policy,
+        ),
+        workloads=tuple(workloads),
+        taskset=TaskSet(tasks=tuple(tasks)),
+        design=DesignPoint(
+            accs=built.design.accs,
+            splits=tuple(
+                tuple(row[i % len(row)] for i in range(copies * n))
+                for row in built.design.splits
+            ),
+            max_util=built.design.max_util * copies,
+        ),
+        table=SegmentTable(base=base, overhead=list(built.table.overhead)),
+        requests=tuple(reqs),
+        arrivals=tuple(arrs),
+    )
+
+
 # ---------------------------------------------------------------------------
 # the registry
 # ---------------------------------------------------------------------------

@@ -26,10 +26,29 @@ with ``K == 1`` the sharded run reproduces the unsharded
 identity and the single shard is built through the very same
 constructor path (`built_gateway`).
 
-Shards share no clock and no state: `run` drives each shard's gateway
-on its own `VirtualClock` to the same horizon, which is exactly the
-deployment semantics (independent replicas) and keeps every run
-deterministic.
+Stepping modes — `run(shared_clock=...)`:
+
+- **shared-clock co-simulation** (default): all K shards advance in
+  lockstep on one global event timeline — each iteration sweeps due
+  releases on every shard, steps every server once, and advances every
+  shard's clock to the globally earliest next event. For
+  non-interacting shards this is observably identical to independent
+  clocks (each shard's own events are a subset of the global event
+  set, and a cost-model server stepped mid-window is a no-op — see
+  ``tests/test_shard.py``'s differential fuzz leg), but it gives
+  cross-shard controllers (live migration, `repro.traffic.migration`)
+  a consistent "now" to act in.
+- **independent clocks** (``shared_clock=False``): the original
+  deployment semantics — each shard's gateway runs to the horizon on
+  its own `VirtualClock`, one after the other.
+
+Elastic mode — `from_built(..., elastic=True)` builds every shard's
+server over the *full* scenario (so any tenant can be re-homed onto
+any shard mid-run) but activates only the planned members per shard:
+admission, release schedules and backlog monitoring are restricted to
+active members exactly as in the subset-built path. This is the
+substrate `MigrationController` and `repro.traffic.autoscale` operate
+on.
 """
 from __future__ import annotations
 
@@ -343,6 +362,7 @@ def built_gateway(
     make_modes=None,
     trace=None,
     shard: int = -1,
+    active: Sequence[int] | None = None,
 ) -> TrafficGateway:
     """One deterministic cost-model `TrafficGateway` over a
     `BuiltScenario` (or a `BuiltScenario.subset`), on its own
@@ -396,6 +416,7 @@ def built_gateway(
         clock=clk,
         trace=trace,
         shard=shard,
+        active=active,
     )
 
 
@@ -416,12 +437,16 @@ class ShardedGateway:
         plan: ShardPlan,
         gateways: Sequence[TrafficGateway | None],
         names: Sequence[str],
+        *,
+        elastic: bool = False,
     ):
         if len(gateways) != plan.n_shards:
             raise ValueError("one gateway (or None) per shard required")
         self.plan = plan
         self.gateways = list(gateways)
         self.names = list(names)
+        #: built over the full scenario per shard (tenants re-homeable)?
+        self.elastic = elastic
 
     @classmethod
     def from_built(
@@ -438,6 +463,8 @@ class ShardedGateway:
         make_ratelimit=None,
         make_modes=None,
         trace=None,
+        elastic: bool = False,
+        plan: ShardPlan | None = None,
     ) -> "ShardedGateway":
         """Place a `BuiltScenario`'s tenants across ``shards`` replicas.
 
@@ -452,27 +479,47 @@ class ShardedGateway:
         shard's gateway and server — events carry the shard index —
         and receives one ``place`` event per tenant recording the
         placement decision.
+
+        ``elastic=True`` builds each shard's server over the *full*
+        scenario with only the planned members active, so tenants can
+        later be re-homed across shards by a `MigrationController`
+        (subset-built servers have fixed task lists and cannot serve a
+        migrated-in tenant). Empty shards still get a (fully inactive)
+        gateway in elastic mode — they are valid migration targets.
+
+        ``plan`` overrides placement entirely with an explicit
+        `ShardPlan` (assignment indices into ``built.requests``) — the
+        autoscaler's path, where the plan is carried over from the
+        previous epoch rather than recomputed.
         """
         policy = policy or built.scenario.policy
-        _placement, plan = plan_shards(
-            built.requests,
-            shards,
-            placement,
-            n_stages=built.design.n_stages,
-            preemptive=(policy == "edf"),
-        )
+        if plan is not None:
+            if plan.n_shards != shards or len(plan.assignment) != len(
+                built.requests
+            ):
+                raise ValueError("explicit plan does not match scenario")
+            placement_name = "explicit"
+        else:
+            _placement, plan = plan_shards(
+                built.requests,
+                shards,
+                placement,
+                n_stages=built.design.n_stages,
+                preemptive=(policy == "edf"),
+            )
+            placement_name = _placement.name
         if trace is not None and getattr(trace, "enabled", False):
             for r, k in zip(built.requests, plan.assignment):
                 trace.emit(
                     "place", 0.0, "gateway", r.name, -1, k,
-                    attrs={"placement": _placement.name},
+                    attrs={"placement": placement_name},
                 )
         gateways: list[TrafficGateway | None] = []
         for k, members in enumerate(plan.members):
-            if not members:
+            if not members and not elastic:
                 gateways.append(None)
                 continue
-            sub = built.subset(members)
+            sub = built if elastic else built.subset(members)
             gateways.append(
                 built_gateway(
                     sub,
@@ -489,9 +536,15 @@ class ShardedGateway:
                     make_modes=make_modes,
                     trace=trace,
                     shard=k,
+                    active=members if elastic else None,
                 )
             )
-        return cls(plan, gateways, [r.name for r in built.requests])
+        return cls(
+            plan,
+            gateways,
+            [r.name for r in built.requests],
+            elastic=elastic,
+        )
 
     def open(self):
         """Run tenancy admission on every shard; returns the flattened
@@ -512,12 +565,24 @@ class ShardedGateway:
         )
 
     def headroom(self) -> tuple[ShardHeadroom | None, ...]:
-        """Per-shard remaining-capacity snapshot (run `open` first —
-        before admission every shard trivially reports full slack)."""
+        """Per-shard remaining-capacity snapshot, computed fresh from
+        each shard's *live* admission controller (run `open` first —
+        before admission every shard trivially reports full slack).
+        Always recompute through this method after a mid-run
+        release/admit; a snapshot taken earlier still scores departed
+        tenants' load (the headroom-staleness pitfall)."""
         return tuple(
             _shard_headroom(k, gw) if gw is not None else None
             for k, gw in enumerate(self.gateways)
         )
+
+    def shard_of_tenant(self, i: int) -> int | None:
+        """Shard currently serving global tenant index ``i`` (live
+        membership, not the static plan), or None if nowhere active."""
+        for k, gw in enumerate(self.gateways):
+            if gw is not None and gw.serves(i):
+                return k
+        return None
 
     def run(
         self,
@@ -525,11 +590,80 @@ class ShardedGateway:
         *,
         virtual_dt: float | None = None,
         warmup: bool = True,
+        shared_clock: bool = True,
+        controller=None,
     ) -> ShardedReport:
+        """Drive every shard to ``horizon_s``.
+
+        ``shared_clock=True`` (default) co-simulates all K shards on
+        one global event timeline; ``controller`` (duck-typed:
+        ``bind(sharded)`` + ``on_tick(rel_now)``, e.g. a
+        `repro.traffic.migration.MigrationController`) is invoked once
+        per global iteration after the due-release sweep.
+        ``shared_clock=False`` restores the original independent-clock
+        semantics (no controller possible — there is no global now)."""
+        if not shared_clock:
+            if controller is not None:
+                raise ValueError(
+                    "cross-shard controllers require shared_clock=True"
+                )
+            reports = tuple(
+                gw.run(horizon_s, virtual_dt=virtual_dt, warmup=warmup)
+                if gw is not None
+                else None
+                for gw in self.gateways
+            )
+            return ShardedReport(
+                plan=self.plan, reports=reports, headrooms=self.headroom()
+            )
+
+        from repro.pipeline.serve import DEGENERATE_SAFETY_TICK_S
+
+        live = [gw for gw in self.gateways if gw is not None]
+        if not live:
+            return ShardedReport(
+                plan=self.plan,
+                reports=tuple(None for _ in self.gateways),
+                headrooms=self.headroom(),
+            )
+        for gw in live:
+            if not hasattr(gw.clock, "advance"):
+                raise ValueError(
+                    "shared-clock co-simulation needs virtual clocks"
+                )
+        for gw in live:
+            gw.begin_run(horizon_s, virtual_dt=virtual_dt, warmup=warmup)
+        if controller is not None:
+            controller.bind(self)
+        while True:
+            rels = [gw.release_due() for gw in live]
+            if controller is not None:
+                controller.on_tick(max(rels))
+                # a handover may have injected new releases due now
+                rels = [gw.release_due() for gw in live]
+            if all(r >= horizon_s for r in rels):
+                break
+            ran_any = False
+            for gw in live:
+                ran_any = gw.server.step() or ran_any
+            # the globally earliest next event; every shard's clock
+            # advances to it in lockstep. A shard woken at another
+            # shard's event time is a no-op: no due arrivals, and a
+            # cost-model server stepped mid-window does nothing.
+            nxt = min(gw.next_event() for gw in live)
+            now = live[0].clock.now()
+            if nxt > now:
+                for gw in live:
+                    gw.clock.advance(nxt - now)
+            elif not ran_any:
+                tick = max(
+                    max(gw._run.virtual_dt for gw in live),
+                    DEGENERATE_SAFETY_TICK_S,
+                )
+                for gw in live:
+                    gw.clock.advance(tick)
         reports = tuple(
-            gw.run(horizon_s, virtual_dt=virtual_dt, warmup=warmup)
-            if gw is not None
-            else None
+            gw.finish_run() if gw is not None else None
             for gw in self.gateways
         )
         return ShardedReport(

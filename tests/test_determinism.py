@@ -89,3 +89,87 @@ def test_trace_kinds_are_canonical(name):
     assert emitted <= set(EVENT_KINDS), (
         f"non-canonical kinds emitted: {sorted(emitted - set(EVENT_KINDS))}"
     )
+
+
+# ---------------------------------------------------------------------------
+# elastic serving: migration + autoscaling must be deterministic too
+# ---------------------------------------------------------------------------
+def _run_elastic_once(name: str = "sharded_city"):
+    """Build from scratch and run the full elastic stack with tracing:
+    a live migration over the shared-clock co-simulation, then an
+    autoscaled ramp (grow + drain-and-shrink) over the same scenario."""
+    from repro.traffic import (
+        Autoscaler,
+        MigrationController,
+        MigrationPlan,
+        RampPhase,
+        ShardedGateway,
+    )
+
+    built = build(get_scenario(name), paper_platform(16), beam_width=4)
+    pmax = max(t.period for t in built.taskset.tasks)
+    horizon = 15.0 * pmax
+
+    mig_rec = TraceRecorder()
+    gw = ShardedGateway.from_built(
+        built,
+        shards=2,
+        placement="least_loaded",
+        elastic=True,
+        trace=mig_rec,
+    )
+    mc = MigrationController(
+        [MigrationPlan(tenant=built.requests[0].name, at=0.3 * horizon)],
+        trace=mig_rec,
+    )
+    gw.run(horizon, controller=mc)
+
+    ramp_rec = TraceRecorder()
+    scaler = Autoscaler(
+        built, min_shards=1, max_shards=2, trace=ramp_rec
+    )
+    ramp = scaler.run_ramp(
+        [
+            RampPhase(duration=6.0 * pmax, active=(0, 1)),
+            RampPhase(duration=6.0 * pmax, active=(0, 1, 2, 3)),
+            RampPhase(duration=6.0 * pmax, active=(0,)),
+        ]
+    )
+    return (
+        _event_tuples(mig_rec),
+        _event_tuples(ramp_rec),
+        mc.final_assignment(),
+        [(r.tenant, r.committed, r.target) for r in mc.records],
+        ramp.shard_counts(),
+        ramp.final_assignment(),
+    )
+
+
+def test_elastic_ramp_trace_bit_identical_across_runs():
+    """Autoscaling + a live migration, built and simulated twice from
+    scratch: bit-identical trace streams and identical final shard
+    plans. Elasticity must not introduce a nondeterministic tie-break
+    anywhere in drain / proof / commit / grow / shrink."""
+    a = _run_elastic_once()
+    b = _run_elastic_once()
+    for field_a, field_b in zip(a[2:], b[2:]):
+        assert field_a == field_b
+    for events_a, events_b in ((a[0], b[0]), (a[1], b[1])):
+        assert events_a  # the elastic machinery actually traced
+        assert len(events_a) == len(events_b)
+        for i, (ea, eb) in enumerate(zip(events_a, events_b)):
+            assert ea == eb, (
+                f"first trace divergence at event {i}:\n  a={ea}\n  b={eb}"
+            )
+
+
+def test_elastic_trace_kinds_are_canonical_and_migration_visible():
+    mig_events, ramp_events, _, records, counts, _ = _run_elastic_once()
+    emitted = {e[3] for e in mig_events} | {e[3] for e in ramp_events}
+    assert emitted <= set(EVENT_KINDS), (
+        f"non-canonical kinds emitted: {sorted(emitted - set(EVENT_KINDS))}"
+    )
+    # the migration protocol left its mark in the vocabulary
+    assert {e[3] for e in mig_events} >= {"migrate_start", "migrate_commit"}
+    assert any(committed for _, committed, _ in records)
+    assert len(counts) == 3

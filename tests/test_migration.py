@@ -1,0 +1,502 @@
+"""Elastic serving: live tenant migration (`traffic.migration`) and
+headroom-driven autoscaling (`traffic.autoscale`).
+
+Unit tests pin the drain / re-admit / commit / abort state machine and
+the headroom-staleness discipline (`TrafficGateway.release_tenant`
+refreshes admission-derived state so no controller ever scores a donor
+with a departed tenant's load). The ``-m property`` legs hold the
+migration protocol to its contract: no deadline violated during any
+handover, abort restores the exact pre-migration placement, the
+migrated tenant's Eq. 3 contract holds on its target post-commit, and
+the shared-clock K=1 elastic co-simulation is bit-identical to the
+unsharded `TrafficGateway`.
+"""
+from functools import lru_cache
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.obs import TraceRecorder
+from repro.traffic import (
+    AdmissionController,
+    Autoscaler,
+    MigrationController,
+    MigrationPlan,
+    RampPhase,
+    ShardedGateway,
+    built_gateway,
+    replicate,
+)
+from repro.traffic.autoscale import AutoscaleReport
+from repro.traffic.scenarios import build, get_scenario
+
+
+@lru_cache(maxsize=None)
+def _built(name):
+    from repro.core.perfmodel.hardware import paper_platform
+
+    return build(get_scenario(name), paper_platform(16), beam_width=4)
+
+
+def _horizon(built, periods=15.0):
+    return periods * max(t.period for t in built.taskset.tasks)
+
+
+def _elastic(built, shards=2, **kw):
+    return ShardedGateway.from_built(
+        built, shards=shards, placement="least_loaded", elastic=True, **kw
+    )
+
+
+def _shard_names(gw):
+    """Per-shard admitted tenant sets — the placement, order-free."""
+    return [
+        None if g is None else frozenset(g.admission.names())
+        for g in gw.gateways
+    ]
+
+
+def _total_misses(rep):
+    return sum(
+        sum(r.server_report.deadline_misses.values())
+        for r in rep.reports
+        if r is not None
+    )
+
+
+# ---------------------------------------------------------------------------
+# plan / controller plumbing
+# ---------------------------------------------------------------------------
+def test_migration_plan_rejects_negative_start():
+    with pytest.raises(ValueError, match=">= 0"):
+        MigrationPlan(tenant="x", at=-0.1)
+
+
+def test_plans_execute_in_time_then_name_order():
+    mc = MigrationController(
+        [
+            MigrationPlan(tenant="b", at=2.0),
+            MigrationPlan(tenant="z", at=1.0),
+            MigrationPlan(tenant="a", at=1.0),
+        ]
+    )
+    assert [(p.at, p.tenant) for p in mc.plans] == [
+        (1.0, "a"),
+        (1.0, "z"),
+        (2.0, "b"),
+    ]
+
+
+def test_bind_requires_elastic_gateway():
+    built = _built("sharded_city")
+    gw = ShardedGateway.from_built(built, shards=2)
+    mc = MigrationController([MigrationPlan(tenant="x", at=0.0)])
+    with pytest.raises(ValueError, match="elastic"):
+        mc.bind(gw)
+    # and the run path refuses to pair a controller with legacy stepping
+    gw2 = _elastic(built)
+    with pytest.raises(ValueError, match="shared_clock"):
+        gw2.run(_horizon(built), shared_clock=False, controller=mc)
+
+
+def test_final_assignment_requires_bound_run():
+    mc = MigrationController([])
+    with pytest.raises(RuntimeError, match="never bound"):
+        mc.final_assignment()
+
+
+# ---------------------------------------------------------------------------
+# the state machine: commit
+# ---------------------------------------------------------------------------
+def test_commit_rehomes_tenant_with_proof_and_trace():
+    built = _built("sharded_city")
+    horizon = _horizon(built)
+    name0 = built.requests[0].name
+    rec = TraceRecorder()
+    gw = _elastic(built, trace=rec)
+    mc = MigrationController(
+        [MigrationPlan(tenant=name0, at=0.3 * horizon)], trace=rec
+    )
+    rep = gw.run(horizon, controller=mc)
+
+    (r,) = mc.records
+    assert r.committed and not r.aborted
+    assert r.reason == "committed"
+    assert r.started_at is not None and r.committed_at >= r.started_at
+    assert r.target is not None and r.target != r.donor
+    assert r.held > 0  # the drain actually withheld future releases
+    # post-commit membership: the tenant's Eq. 3 contract lives on the
+    # target and nowhere else
+    assert name0 in gw.gateways[r.target].admission.names()
+    assert name0 not in gw.gateways[r.donor].admission.names()
+    assert gw.verify()
+    assert mc.final_assignment()[name0] == r.target
+    assert mc.in_progress() == []
+    # the handover lost no deadline anywhere in the fleet
+    assert _total_misses(rep) == 0
+    # trace protocol: start on the donor, commit on the target, held
+    # counts conserved
+    kinds = {e.kind: e for e in rec.events if e.kind.startswith("migrate")}
+    assert set(kinds) == {"migrate_start", "migrate_commit"}
+    assert kinds["migrate_start"].shard == r.donor
+    assert kinds["migrate_commit"].shard == r.target
+    assert kinds["migrate_commit"].get("donor") == r.donor
+    assert kinds["migrate_start"].get("held") == r.held
+    assert kinds["migrate_commit"].get("held") == r.held
+
+
+def test_commit_restamps_held_releases_delayed_never_dropped():
+    """Held releases land on the target no earlier than the commit and
+    at least a period apart (the `regulate_trace` min-gap chain)."""
+    built = _built("sharded_city")
+    horizon = _horizon(built)
+    name0 = built.requests[0].name
+    period = built.requests[0].period
+    rec = TraceRecorder()
+    gw = _elastic(built, trace=rec)
+    mc = MigrationController(
+        [MigrationPlan(tenant=name0, at=0.3 * horizon)], trace=rec
+    )
+    gw.run(horizon, controller=mc)
+    (r,) = mc.records
+    assert r.committed
+    on_target = sorted(
+        e.t
+        for e in rec.events
+        if e.kind == "release"
+        and e.layer == "gateway"
+        and e.task == name0
+        and e.shard == r.target
+    )
+    assert len(on_target) > 1
+    assert on_target[0] >= r.committed_at - 1e-12
+    for a, b in zip(on_target, on_target[1:]):
+        assert b - a >= period - 1e-9
+
+
+# ---------------------------------------------------------------------------
+# the state machine: abort-and-restore
+# ---------------------------------------------------------------------------
+def test_abort_restores_exact_pre_migration_placement():
+    built = _built("sharded_city")
+    horizon = _horizon(built)
+    name0 = built.requests[0].name
+    # the never-migrated baseline placement
+    base = _elastic(built)
+    base.open()
+    pre = _shard_names(base)
+    donor = base.shard_of_tenant(0)
+    # an explicit target equal to the donor leaves no candidate shard:
+    # the drain completes, the proof finds nothing, the abort restores
+    rec = TraceRecorder()
+    gw = _elastic(built, trace=rec)
+    mc = MigrationController(
+        [MigrationPlan(tenant=name0, at=0.3 * horizon, target=donor)],
+        trace=rec,
+    )
+    rep = gw.run(horizon, controller=mc)
+    (r,) = mc.records
+    assert r.aborted and not r.committed
+    assert r.target is None
+    assert "Eq. 3" in r.reason
+    assert _shard_names(gw) == pre  # exact placement restored
+    assert gw.verify()
+    assert mc.final_assignment()[name0] == donor
+    # the tenant kept being served after the abort, nobody missed
+    assert rep.tenant(name0).released > 0
+    assert _total_misses(rep) == 0
+    aborts = [e for e in rec.events if e.kind == "migrate_abort"]
+    assert len(aborts) == 1 and aborts[0].shard == donor
+    assert aborts[0].get("held") == r.held
+
+
+def test_k1_fleet_has_no_candidate_and_aborts():
+    built = _built("sharded_city")
+    horizon = _horizon(built)
+    gw = _elastic(built, shards=1)
+    mc = MigrationController(
+        [MigrationPlan(tenant=built.requests[0].name, at=0.3 * horizon)]
+    )
+    gw.run(horizon, controller=mc)
+    (r,) = mc.records
+    assert r.aborted and r.donor == 0 and r.target is None
+
+
+def test_unknown_tenant_and_missing_target_abort_before_drain():
+    built = _built("sharded_city")
+    horizon = _horizon(built)
+    gw = _elastic(built)
+    mc = MigrationController(
+        [
+            MigrationPlan(tenant="nobody", at=0.0),
+            MigrationPlan(tenant=built.requests[0].name, at=0.0, target=7),
+        ]
+    )
+    gw.run(horizon, controller=mc)
+    by_tenant = {r.tenant: r for r in mc.records}
+    r = by_tenant["nobody"]
+    assert r.aborted and r.started_at is None and r.held == 0
+    assert "not active" in r.reason
+    r = by_tenant[built.requests[0].name]
+    assert r.aborted and r.started_at is None and r.donor == -1
+    assert "does not exist" in r.reason
+
+
+def test_drain_cut_by_horizon_stays_in_progress():
+    """A migration started too close to the horizon never reaches
+    pending == 0: the tenant stays on its donor, visibly unfinished."""
+    built = _built("sharded_city")
+    horizon = _horizon(built)
+    name0 = built.requests[0].name
+    gw = _elastic(built)
+    mc = MigrationController(
+        [MigrationPlan(tenant=name0, at=0.995 * horizon)]
+    )
+    gw.run(horizon, controller=mc)
+    (r,) = mc.records
+    assert r.started_at is not None
+    assert not r.committed and not r.aborted
+    assert mc.in_progress() == [name0]
+    # still on the donor: membership was never released
+    assert name0 in gw.gateways[r.donor].admission.names()
+
+
+# ---------------------------------------------------------------------------
+# headroom staleness: release must refresh every admission-derived view
+# ---------------------------------------------------------------------------
+def test_release_tenant_refreshes_headroom_and_backlog_limits():
+    """Regression: scoring a donor right after `release_tenant` must see
+    the departed tenant's load gone — fleet controllers would otherwise
+    pick donors/targets from stale utilization."""
+    built = _built("sharded_city")
+    gw = _elastic(built)
+    gw.open()
+    k = gw.shard_of_tenant(0)
+    shard_gw = gw.gateways[k]
+    stale_utils = gw.headroom()[k].stage_utilizations
+
+    shard_gw.release_tenant(0)
+
+    # a from-scratch controller over the remaining members is the truth
+    fresh = AdmissionController(
+        [0.0] * built.design.n_stages,
+        preemptive=shard_gw.admission.preemptive,
+    )
+    remaining = [
+        i
+        for i, r in enumerate(built.requests)
+        if r.name in shard_gw.admission.names()
+    ]
+    for i in remaining:
+        assert fresh.admit(built.requests[i]).admitted
+    hr = gw.headroom()[k]
+    assert built.requests[0].name not in hr.tenants
+    assert hr.stage_utilizations == fresh.utilizations()
+    assert hr.stage_utilizations != stale_utils
+    # the backlog limits the shedding monitor reads were re-derived too
+    bounds = fresh.response_bounds()
+    assert shard_gw._limits == [
+        shard_gw.monitor.limit_for(
+            bounds.get(req.name, float("inf")), req.period
+        )
+        for req in built.requests
+    ]
+
+    # and re-admission restores both views exactly
+    assert shard_gw.admit_tenant(0).admitted
+    assert gw.headroom()[k].stage_utilizations == stale_utils
+    for i in (0,):
+        assert built.requests[i].name in shard_gw.admission.names()
+
+
+# ---------------------------------------------------------------------------
+# autoscaler
+# ---------------------------------------------------------------------------
+def test_ramp_phase_validation():
+    with pytest.raises(ValueError, match="duration"):
+        RampPhase(duration=0.0, active=(0,))
+    with pytest.raises(ValueError, match="duplicate"):
+        RampPhase(duration=1.0, active=(0, 0))
+
+
+def test_autoscaler_validates_shard_bounds_and_indices():
+    built = _built("sharded_city")
+    with pytest.raises(ValueError, match="min_shards"):
+        Autoscaler(built, min_shards=3, max_shards=2)
+    sc = Autoscaler(built)
+    with pytest.raises(ValueError, match="out of range"):
+        sc.run_ramp([RampPhase(duration=1.0, active=(99,))])
+
+
+def test_autoscale_report_empty_defaults():
+    rep = AutoscaleReport()
+    assert rep.admit_rate() == 1.0
+    assert rep.max_shards_used() == 0
+    assert rep.final_assignment() == {}
+
+
+def test_autoscaler_carries_over_placement_between_epochs():
+    built = _built("sharded_city")
+    dur = 6.0 * max(t.period for t in built.taskset.tasks)
+    sc = Autoscaler(built, min_shards=1, max_shards=2)
+    rep = sc.run_ramp(
+        [
+            RampPhase(duration=dur, active=(0, 1)),
+            RampPhase(duration=dur, active=(0, 1, 2, 3)),
+        ]
+    )
+    assert len(rep.epochs) == 2
+    assert rep.admit_rate() == 1.0  # the scenario fits its fleet
+    e0, e1 = rep.epochs
+    assert e1.t_start == pytest.approx(dur)
+    # survivors keep their shard: no gratuitous re-homing
+    for i in (0, 1):
+        assert e1.assignment[i] == e0.assignment[i]
+    assert set(e1.assignment) == {0, 1, 2, 3}
+
+
+def test_autoscaler_grows_under_overcommit_and_shrinks_back():
+    """The replicated rush population overcommits one pipeline: the
+    fleet must grow past K=1 at the peak, then drain the emptiest shard
+    (emitting migrate_start/commit pairs) as the ramp falls away."""
+    population = replicate(_built("multi_tenant_rush"), 2)
+    n = len(population.requests)
+    dur = 6.0 * max(r.period for r in population.requests)
+    few = tuple(range(max(1, n // 4)))
+    full = tuple(range(n))
+    # scout run: learn where the peak fleet placed everyone, so the
+    # down-phase can keep one tenant per peak shard alive — draining a
+    # shard then genuinely re-homes survivors instead of retiring
+    # already-empty replicas
+    scout = Autoscaler(population, min_shards=1, max_shards=4).run_ramp(
+        [RampPhase(duration=dur, active=few), RampPhase(duration=dur, active=full)]
+    )
+    peak = scout.epochs[1].assignment
+    down = tuple(
+        sorted(
+            min(i for i, s in peak.items() if s == k)
+            for k in set(peak.values())
+        )
+    )
+    rec = TraceRecorder()
+    sc = Autoscaler(population, min_shards=1, max_shards=4, trace=rec)
+    rep = sc.run_ramp(
+        [
+            RampPhase(duration=dur, active=few),
+            RampPhase(duration=dur, active=full),
+            RampPhase(duration=dur, active=down),
+        ]
+    )
+    counts = rep.shard_counts()
+    assert counts[1] > counts[0]  # grew at the peak
+    assert counts[2] < counts[1]  # drained back down
+    assert rep.epochs[1].grew > 0 and rep.epochs[2].shrank > 0
+    assert rep.max_shards_used() == max(counts)
+    # the peak fleet admits everything a static K=1 fleet cannot
+    static = Autoscaler(population, min_shards=1, max_shards=1).run_ramp(
+        [RampPhase(duration=dur, active=full)]
+    )
+    assert rep.epochs[1].admitted_count() > static.epochs[0].admitted_count()
+    # every re-homed tenant left a paired start/commit in the trace
+    rehomed = rep.epochs[2].rehomed
+    assert rehomed  # the shrink moved somebody
+    for kind in ("migrate_start", "migrate_commit"):
+        moved = [e.task for e in rec.events if e.kind == kind]
+        for name in rehomed:
+            assert name in moved
+    # final assignment only references live shards
+    final = rep.final_assignment()
+    assert set(final) == set(down)
+    assert all(0 <= s < counts[2] for s in final.values())
+
+
+# ---------------------------------------------------------------------------
+# properties
+# ---------------------------------------------------------------------------
+@pytest.mark.property
+@settings(max_examples=8, deadline=None)
+@given(
+    st.floats(0.1, 0.8),
+    st.sampled_from([None, 0, 1]),
+    st.integers(0, 3),
+)
+def test_property_no_deadline_violated_during_handover(frac, target, tid):
+    """Whatever the drain start, target choice, or tenant: jobs the
+    donor released keep their admission-time guarantee and the target
+    only serves under a committed proof — zero misses fleet-wide."""
+    built = _built("sharded_city")
+    horizon = _horizon(built, periods=12.0)
+    name = built.requests[tid % len(built.requests)].name
+    gw = _elastic(built)
+    mc = MigrationController(
+        [MigrationPlan(tenant=name, at=frac * horizon, target=target)]
+    )
+    rep = gw.run(horizon, controller=mc)
+    assert _total_misses(rep) == 0
+    assert gw.verify()
+
+
+@pytest.mark.property
+@settings(max_examples=6, deadline=None)
+@given(st.floats(0.1, 0.7), st.integers(0, 3))
+def test_property_abort_restores_pre_migration_placement(frac, tid):
+    built = _built("sharded_city")
+    horizon = _horizon(built, periods=12.0)
+    idx = tid % len(built.requests)
+    name = built.requests[idx].name
+    base = _elastic(built)
+    base.open()
+    pre = _shard_names(base)
+    donor = base.shard_of_tenant(idx)
+    gw = _elastic(built)
+    mc = MigrationController(
+        [MigrationPlan(tenant=name, at=frac * horizon, target=donor)]
+    )
+    gw.run(horizon, controller=mc)
+    (r,) = mc.records
+    assert r.aborted
+    assert _shard_names(gw) == pre
+    assert gw.verify()
+
+
+@pytest.mark.property
+@settings(max_examples=6, deadline=None)
+@given(st.floats(0.15, 0.6), st.integers(0, 3))
+def test_property_post_commit_contract_holds_on_target(frac, tid):
+    """A committed migration's membership is consistent (tenant on the
+    target's controller only) and every shard's cached Eq. 3 verdict
+    still agrees with a full re-analysis."""
+    built = _built("sharded_city")
+    horizon = _horizon(built, periods=12.0)
+    idx = tid % len(built.requests)
+    name = built.requests[idx].name
+    gw = _elastic(built)
+    mc = MigrationController(
+        [MigrationPlan(tenant=name, at=frac * horizon)]
+    )
+    gw.run(horizon, controller=mc)
+    (r,) = mc.records
+    assert r.committed  # sharded_city always has a provable target
+    assert name in gw.gateways[r.target].admission.names()
+    assert name not in gw.gateways[r.donor].admission.names()
+    assert gw.verify()
+    assert mc.final_assignment()[name] == r.target
+
+
+@pytest.mark.property
+@settings(max_examples=6, deadline=None)
+@given(
+    st.sampled_from(["sharded_city", "steady_city"]),
+    st.floats(6.0, 14.0),
+)
+def test_property_shared_clock_k1_elastic_bit_identical(name, periods):
+    """One shard under the shared-clock co-simulation, built over the
+    full elastic universe, is the unsharded gateway bit-for-bit."""
+    from tests.test_shard import _report_fields
+
+    built = _built(name)
+    horizon = _horizon(built, periods=periods)
+    plain = built_gateway(built).run(horizon)
+    gw = _elastic(built, shards=1)
+    rep = gw.run(horizon, shared_clock=True)
+    assert _report_fields(plain) == _report_fields(rep.reports[0])

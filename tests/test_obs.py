@@ -128,6 +128,7 @@ def test_event_kinds_vocabulary_is_closed():
         "release", "dispatch", "preempt_store", "preempt_load",
         "segment_end", "complete", "deadline_miss", "shed",
         "rate_limited", "admit", "reject", "place", "mode_switch",
+        "migrate_start", "migrate_commit", "migrate_abort",
     }
 
 

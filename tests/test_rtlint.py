@@ -243,6 +243,62 @@ class TestTraceVocab:
         )
         assert "mode_switch" in vocab
 
+    # -- the elastic-serving migration kinds -------------------------
+    MIGRATE_CFG = {
+        "rules": {
+            "trace-vocab": {
+                "vocab": [
+                    "release",
+                    "migrate_start",
+                    "migrate_commit",
+                    "migrate_abort",
+                ]
+            }
+        }
+    }
+
+    def test_migration_kinds_are_canonical(self):
+        # the three handover kinds pass every emission surface the
+        # rule scans: recorder emit, compact sink row, kind compare
+        src = (
+            "def f(trace, e, t):\n"
+            "    trace.emit('migrate_start', t)\n"
+            "    trace.emit('migrate_commit', t)\n"
+            "    tr = trace.sink()\n"
+            "    tr((t, 'migrate_abort', '', -1, None, {'held': 3}))\n"
+            "    return e.kind == 'migrate_commit'\n"
+        )
+        assert (
+            findings_for(
+                "trace-vocab", src, self.REL, config=self.MIGRATE_CFG
+            )
+            == []
+        )
+
+    def test_flags_typod_migration_kind(self):
+        src = "def f(trace, t):\n    trace.emit('migrate_comit', t)\n"
+        (f,) = findings_for(
+            "trace-vocab", src, self.REL, config=self.MIGRATE_CFG
+        )
+        assert "'migrate_comit'" in f.message
+
+    def test_repo_vocabulary_includes_migration_kinds(self):
+        # EVENT_KINDS parsed from disk must carry the migration
+        # protocol's kinds — and the repo-wide finalize pass (every
+        # declared kind has a live emitter) holds them to the
+        # `MigrationController` / `Autoscaler` emit sites
+        from tools.rtlint import LintContext
+        from tools.rtlint.rules.trace_vocab import _load_vocab
+
+        vocab, _file, _line = _load_vocab(
+            LintContext(root=ROOT, config={})
+        )
+        assert {
+            "migrate_start",
+            "migrate_commit",
+            "migrate_abort",
+        } <= vocab
+
     def test_finalize_reports_emitterless_kinds(self):
         cfg = {"rules": {"trace-vocab": {"vocab": ["release"]}}}
         (f,) = lint_paths([], ROOT, config=cfg, rules=[RULES["trace-vocab"]])
