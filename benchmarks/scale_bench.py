@@ -1,0 +1,476 @@
+"""Million-tenant hot-path benchmark -> BENCH_scale.json.
+
+Four measurements, CI-enforced assertions on the first three:
+
+1. **Batched admission core** — the same tenant cohort scored by a
+   scalar `AdmissionController.check` loop vs one
+   `score_many`/`check_many` array pass against the same cached Eq. 2
+   state. CI asserts the batched core reaches **>= 5x** the scalar
+   decisions/sec (the acceptance bar of this vectorization, mirroring
+   `BENCH_dse.json`'s evaluator-core gate) and that `check_many`
+   reproduces the scalar decision stream **bit-identically** (verdict,
+   bottleneck, stage utils, reason string).
+2. **Array-backed rate limiter** — one heavy-tailed release batch swept
+   by a scalar `allow` loop vs one `allow_many` pass over a limiter
+   with identical starting state. CI asserts verdict-for-verdict
+   equality (duplicate tenants per batch included) plus equal final
+   grant/deny totals.
+3. **Vectorized placement** — `LeastLoaded`/`SlackAware` vs the
+   pre-vectorization per-shard Python loops (kept inline here as the
+   differential baseline). CI asserts identical shard assignments.
+4. **Streaming soak** — a heavy-tailed (MMPP-modulated, Zipf-skewed)
+   synthetic tenant population streamed through a sharded fleet of
+   admission controllers + rate limiters in event batches, publishing
+   sustained releases/sec and per-decision admission latency
+   percentiles at 10^4 (``--quick``, the CI budget) to 10^6 tenants.
+
+Run: ``PYTHONPATH=src python benchmarks/scale_bench.py [--quick]``
+Writes ``experiments/benchmarks/BENCH_scale.json``; exits non-zero if
+a speedup or equality assertion fails so CI enforces the perf claim.
+Everything is seeded (`np.random.default_rng(0)`) — reruns reproduce
+the same tenant population, stream and decisions.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from repro.traffic.admission import AdmissionController, TaskRequest
+from repro.traffic.ratelimit import RateLimiter
+from repro.traffic.shard import LeastLoaded, SlackAware
+from repro.core.rt.schedulability import EPS
+from repro.core.rt.task import LayerDesc, SegmentTable, Task, TaskSet, Workload
+from repro.core.rt.schedulability import stage_slacks
+
+RESULTS_DIR = os.path.join("experiments", "benchmarks")
+N_STAGES = 4
+#: the acceptance bar: batched admission core >= 5x scalar decisions/s
+MIN_ADMISSION_SPEEDUP = 5.0
+
+
+def _pct(samples, q: float) -> float:
+    """Nearest-rank percentile (no interpolation surprises)."""
+    if not len(samples):
+        return 0.0
+    s = sorted(samples)
+    return s[min(len(s) - 1, int(round(q / 100.0 * (len(s) - 1))))]
+
+
+def synth_tenants(n: int, rng) -> tuple[np.ndarray, np.ndarray]:
+    """Heavy-tailed synthetic population: per-tenant stage WCET rows
+    ``[n, N_STAGES]`` and periods ``[n]``. Periods are lognormal (a
+    few fast tenants, a long slow tail), per-stage demand is a small
+    fraction of the period split unevenly across stages, and ~30% of
+    tenants skip a stage (exercising the inactive-stage = exact-0.0
+    path of the batch kernels)."""
+    periods = np.exp(rng.normal(np.log(0.05), 1.0, size=n))
+    shares = rng.dirichlet(np.ones(N_STAGES) * 0.7, size=n)
+    demand = periods * rng.uniform(0.0005, 0.02, size=n)
+    base = shares * demand[:, None]
+    skip = rng.random((n, N_STAGES)) < 0.3
+    # never skip every stage of a tenant
+    skip[np.arange(n), rng.integers(0, N_STAGES, size=n)] = False
+    base = np.where(skip, 0.0, base)
+    return base, periods
+
+
+def _requests(base: np.ndarray, periods: np.ndarray) -> list[TaskRequest]:
+    return [
+        TaskRequest(
+            name=f"t{i:07d}",
+            base=tuple(float(b) for b in base[i]),
+            period=float(periods[i]),
+            deadline=float(periods[i]),
+        )
+        for i in range(len(periods))
+    ]
+
+
+# ---------------------------------------------------------------------------
+# 1. batched admission core
+# ---------------------------------------------------------------------------
+def bench_admission_core(quick: bool) -> dict:
+    rng = np.random.default_rng(0)
+    n = 10_000 if quick else 200_000
+    n_scalar = 2_000 if quick else 10_000
+    base, periods = synth_tenants(n, rng)
+    ctl = AdmissionController([0.001] * N_STAGES, preemptive=True)
+    # pre-admit a background population so checks run against a
+    # realistically loaded Eq. 2 cache (and some checks reject)
+    bg_base, bg_periods = synth_tenants(200, rng)
+    for i, r in enumerate(_requests(bg_base * 40.0, bg_periods)):
+        ctl.admit(r)
+    reqs = _requests(base, periods)
+
+    # scalar baseline: per-decision latency samples + throughput
+    scalar_lat = []
+    t0 = time.perf_counter()
+    scalar_decisions = []
+    for r in reqs[:n_scalar]:
+        t1 = time.perf_counter()
+        scalar_decisions.append(ctl.check(r))
+        scalar_lat.append(time.perf_counter() - t1)
+    scalar_s = time.perf_counter() - t0
+
+    # batched core (score_many: the array pass the fleet runs per
+    # planning round) over the full cohort
+    t0 = time.perf_counter()
+    after, bottleneck, ok = ctl.score_many(base, periods)
+    core_s = time.perf_counter() - t0
+
+    # batched decision front-end (check_many: full AdmissionDecision
+    # construction) over the scalar subset, bit-equality asserted
+    t0 = time.perf_counter()
+    batched_decisions = ctl.check_many(reqs[:n_scalar])
+    many_s = time.perf_counter() - t0
+    mismatches = sum(
+        1
+        for a, b in zip(scalar_decisions, batched_decisions)
+        if not (
+            a.admitted == b.admitted
+            and a.bottleneck == b.bottleneck
+            and a.stage_utils == b.stage_utils
+            and a.reason == b.reason
+        )
+    )
+
+    out = {
+        "tenants": n,
+        "scalar_checks": n_scalar,
+        "scalar_seconds": scalar_s,
+        "scalar_decisions_per_sec": n_scalar / scalar_s,
+        "batched_core_seconds": core_s,
+        "batched_core_decisions_per_sec": n / core_s,
+        "check_many_seconds": many_s,
+        "check_many_decisions_per_sec": n_scalar / many_s,
+        "admitted_fraction": float(ok.mean()),
+        "speedup_core": (scalar_s / n_scalar) / (core_s / n),
+        "speedup_check_many": (scalar_s / n_scalar) / (many_s / n_scalar),
+        "decision_mismatches": mismatches,
+        "scalar_latency_us": {
+            "p50": _pct(scalar_lat, 50) * 1e6,
+            "p95": _pct(scalar_lat, 95) * 1e6,
+            "p99": _pct(scalar_lat, 99) * 1e6,
+        },
+        "batched_core_latency_us_per_decision": core_s / n * 1e6,
+    }
+    print(
+        f"admission core: scalar {out['scalar_decisions_per_sec']:,.0f}/s, "
+        f"batched {out['batched_core_decisions_per_sec']:,.0f}/s "
+        f"({out['speedup_core']:.1f}x core, "
+        f"{out['speedup_check_many']:.1f}x check_many), "
+        f"{mismatches} mismatches"
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 2. array-backed rate limiter
+# ---------------------------------------------------------------------------
+def bench_ratelimit(quick: bool) -> dict:
+    rng = np.random.default_rng(1)
+    n = 10_000 if quick else 1_000_000
+    n_events = 50_000 if quick else 400_000
+    rates = np.exp(rng.normal(np.log(20.0), 1.0, size=n))
+    bursts = np.maximum(1.0, rng.integers(1, 5, size=n).astype(float))
+    # Zipf-skewed tenant popularity: a hot head hammers its buckets
+    # (many duplicate indices per batch — the occurrence-rank path),
+    # a long tail trickles
+    tenants = (rng.zipf(1.3, size=n_events) - 1) % n
+    times = np.sort(rng.uniform(0.0, 5.0, size=n_events))
+
+    rl_scalar = RateLimiter.from_arrays(rates, bursts)
+    t0 = time.perf_counter()
+    scalar_verdicts = [
+        rl_scalar.allow(int(i), float(t)) for t, i in zip(times, tenants)
+    ]
+    scalar_s = time.perf_counter() - t0
+
+    rl_batched = RateLimiter.from_arrays(rates, bursts)
+    batch = 4096
+    batched_verdicts = np.empty(n_events, dtype=bool)
+    t0 = time.perf_counter()
+    for lo in range(0, n_events, batch):
+        hi = min(lo + batch, n_events)
+        batched_verdicts[lo:hi] = rl_batched.allow_many(
+            times[lo:hi], tenants[lo:hi]
+        )
+    batched_s = time.perf_counter() - t0
+
+    equal = bool(
+        np.array_equal(np.asarray(scalar_verdicts), batched_verdicts)
+    ) and rl_scalar.totals() == rl_batched.totals()
+    out = {
+        "tenants": n,
+        "events": n_events,
+        "batch_size": batch,
+        "scalar_seconds": scalar_s,
+        "batched_seconds": batched_s,
+        "scalar_events_per_sec": n_events / scalar_s,
+        "batched_events_per_sec": n_events / batched_s,
+        "speedup": scalar_s / batched_s,
+        "granted": rl_batched.totals()[0],
+        "denied": rl_batched.totals()[1],
+        "verdicts_equal": equal,
+    }
+    print(
+        f"rate limiter:   scalar {out['scalar_events_per_sec']:,.0f}/s, "
+        f"batched {out['batched_events_per_sec']:,.0f}/s "
+        f"({out['speedup']:.1f}x), equal={equal}"
+    )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 3. vectorized placement (scalar loops kept inline as the baseline)
+# ---------------------------------------------------------------------------
+def _scalar_least_loaded(requests, n_shards, overheads, preemptive):
+    loads = [[0.0] * len(overheads) for _ in range(n_shards)]
+    out = []
+    for r in requests:
+        du = r.utilization(tuple(overheads), preemptive)
+        best = min(
+            range(n_shards),
+            key=lambda s: (max(u + d for u, d in zip(loads[s], du)), s),
+        )
+        out.append(best)
+        loads[best] = [u + d for u, d in zip(loads[best], du)]
+    return out
+
+
+def _scalar_slack_aware(requests, n_shards, overheads, preemptive):
+    def view(reqs):
+        table = SegmentTable(
+            base=[list(r.base) for r in reqs], overhead=list(overheads)
+        )
+        w = Workload("placement", (LayerDesc("seg", 1, 1, 1),))
+        ts = TaskSet(
+            tasks=tuple(
+                Task(
+                    workload=w,
+                    period=r.period,
+                    deadline=r.deadline,
+                    name=r.name,
+                )
+                for r in reqs
+            )
+        )
+        return table, ts
+
+    placed = [[] for _ in range(n_shards)]
+    out = []
+    for r in requests:
+        active = [k for k, b in enumerate(r.base) if b > 0.0]
+
+        def score(s):
+            table, ts = view(placed[s] + [r])
+            slacks = stage_slacks(table, ts, preemptive)
+            return (min(slacks[k] for k in active), -s)
+
+        best = max(range(n_shards), key=score)
+        out.append(best)
+        placed[best].append(r)
+    return out
+
+
+def bench_placement(quick: bool) -> dict:
+    rng = np.random.default_rng(2)
+    n_shards = 16
+    rows = []
+    for policy, scalar_ref, n in (
+        (LeastLoaded(), _scalar_least_loaded, 2_000 if quick else 20_000),
+        (SlackAware(), _scalar_slack_aware, 300 if quick else 1_000),
+    ):
+        base, periods = synth_tenants(n, rng)
+        reqs = _requests(base, periods)
+        overheads = [0.0] * N_STAGES
+
+        t0 = time.perf_counter()
+        ref = scalar_ref(reqs, n_shards, overheads, True)
+        scalar_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        vec = policy.place(
+            reqs, n_shards, overheads=overheads, preemptive=True
+        )
+        vec_s = time.perf_counter() - t0
+        rows.append(
+            {
+                "policy": policy.name,
+                "tenants": n,
+                "shards": n_shards,
+                "scalar_seconds": scalar_s,
+                "vectorized_seconds": vec_s,
+                "speedup": scalar_s / vec_s,
+                "assignments_equal": vec == ref,
+            }
+        )
+        print(
+            f"placement {policy.name:12s}: {scalar_s:.3f}s -> {vec_s:.3f}s "
+            f"({rows[-1]['speedup']:.1f}x), equal={vec == ref}"
+        )
+    return {"runs": rows}
+
+
+# ---------------------------------------------------------------------------
+# 4. streaming soak: MMPP-modulated event batches through a fleet
+# ---------------------------------------------------------------------------
+def bench_soak(quick: bool) -> dict:
+    """Shaped like a streaming-arrival env: a global 2-state MMPP
+    (calm/bursty) modulates the event rate; each dwell emits one
+    Zipf-skewed release batch that is routed to its shards, admission-
+    scored (`score_many`) and rate-limited (`allow_many`) per shard."""
+    rng = np.random.default_rng(3)
+    n = 10_000 if quick else 1_000_000
+    n_shards = 8
+    target_events = 200_000 if quick else 2_000_000
+    rate_lo, rate_hi = 20_000.0, 120_000.0  # events/s per MMPP state
+    dwell_s = 0.05
+
+    base, periods = synth_tenants(n, rng)
+    rates = 1.0 / periods
+    shard_of = np.arange(n) % n_shards
+    ctls = [
+        AdmissionController([0.001] * N_STAGES, preemptive=True)
+        for _ in range(n_shards)
+    ]
+    limiters = [
+        RateLimiter.from_arrays(
+            rates[shard_of == k], np.full((shard_of == k).sum(), 4.0)
+        )
+        for k in range(n_shards)
+    ]
+    local_idx = np.empty(n, dtype=np.intp)
+    for k in range(n_shards):
+        members = np.flatnonzero(shard_of == k)
+        local_idx[members] = np.arange(len(members))
+
+    events = 0
+    admitted = limited = 0
+    batches = 0
+    admission_lat = []  # per-decision seconds, one sample per batch
+    t_virtual = 0.0
+    state = 0
+    wall0 = time.perf_counter()
+    while events < target_events:
+        rate = rate_hi if state == 1 else rate_lo
+        n_ev = int(rng.poisson(rate * dwell_s))
+        state = 1 - state if rng.random() < 0.3 else state
+        if n_ev == 0:
+            t_virtual += dwell_s
+            continue
+        tenants = (rng.zipf(1.2, size=n_ev) - 1) % n
+        times = np.sort(rng.uniform(t_virtual, t_virtual + dwell_s, n_ev))
+        t_virtual += dwell_s
+        for k in range(n_shards):
+            sel = np.flatnonzero(shard_of[tenants] == k)
+            if not len(sel):
+                continue
+            cohort = tenants[sel]
+            t1 = time.perf_counter()
+            _after, _bneck, ok = ctls[k].score_many(
+                base[cohort], periods[cohort]
+            )
+            admission_lat.append((time.perf_counter() - t1) / len(sel))
+            admitted += int(ok.sum())
+            allowed = limiters[k].allow_many(
+                times[sel], local_idx[cohort]
+            )
+            limited += int((~allowed).sum())
+        events += n_ev
+        batches += 1
+    wall_s = time.perf_counter() - wall0
+
+    out = {
+        "tenants": n,
+        "shards": n_shards,
+        "events": events,
+        "batches": batches,
+        "virtual_seconds": t_virtual,
+        "wall_seconds": wall_s,
+        "sustained_releases_per_sec": events / wall_s,
+        "admission_ok": admitted,
+        "rate_limited": limited,
+        "admission_latency_us_per_decision": {
+            "p50": _pct(admission_lat, 50) * 1e6,
+            "p95": _pct(admission_lat, 95) * 1e6,
+            "p99": _pct(admission_lat, 99) * 1e6,
+        },
+    }
+    print(
+        f"soak: {n:,} tenants / {n_shards} shards, "
+        f"{events:,} events in {wall_s:.2f}s wall "
+        f"({out['sustained_releases_per_sec']:,.0f} releases/s), "
+        f"admission p99 "
+        f"{out['admission_latency_us_per_decision']['p99']:.3f}us/decision"
+    )
+    return out
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv
+    admission = bench_admission_core(quick)
+    ratelimit = bench_ratelimit(quick)
+    placement = bench_placement(quick)
+    soak = bench_soak(quick)
+    payload = {
+        "bench": "scale",
+        "quick": quick,
+        "min_admission_speedup": MIN_ADMISSION_SPEEDUP,
+        "admission_core": admission,
+        "ratelimit": ratelimit,
+        "placement": placement,
+        "soak": soak,
+    }
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_scale.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nwrote {path}")
+
+    ok = True
+    if admission["speedup_core"] < MIN_ADMISSION_SPEEDUP:
+        print(
+            f"FAIL: batched admission core only "
+            f"{admission['speedup_core']:.1f}x the scalar loop "
+            f"(need >= {MIN_ADMISSION_SPEEDUP}x)",
+            file=sys.stderr,
+        )
+        ok = False
+    if admission["decision_mismatches"]:
+        print(
+            f"FAIL: check_many diverged from scalar check on "
+            f"{admission['decision_mismatches']} decisions",
+            file=sys.stderr,
+        )
+        ok = False
+    if not ratelimit["verdicts_equal"]:
+        print(
+            "FAIL: allow_many diverged from the scalar allow loop",
+            file=sys.stderr,
+        )
+        ok = False
+    if ratelimit["speedup"] <= 1.0:
+        print(
+            f"FAIL: allow_many slower than the scalar loop "
+            f"({ratelimit['speedup']:.2f}x)",
+            file=sys.stderr,
+        )
+        ok = False
+    for row in placement["runs"]:
+        if not row["assignments_equal"]:
+            print(
+                f"FAIL: vectorized {row['policy']} changed the "
+                f"placement",
+                file=sys.stderr,
+            )
+            ok = False
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,6 @@ layer; the defaults reproduce the paper's SRT-guided search.
 """
 from __future__ import annotations
 
-import itertools
 import time
 from dataclasses import dataclass, field
 
@@ -246,17 +245,32 @@ def beam_search(
     )
     parents: list[_Node] = [root]
 
+    L_arr = np.asarray(L, dtype=np.int64)
+
     for _m in range(2, max_m + 1):
-        # -- enumerate every child of every parent (same nested order
-        # as the scalar seed loop: parent, then chip budget, then the
-        # per-task slice product) --------------------------------------
-        cands: list[tuple[_Node, int, int, tuple[int, ...], tuple[int, ...], tuple[int, ...], int]] = []
-        for parent in parents:
+        # -- enumerate every child of every parent as arrays (same
+        # nested order as the scalar seed loop: parent, then chip
+        # budget, then the per-task slice product — `np.meshgrid`
+        # with ``indexing="ij"`` reshapes to exactly
+        # `itertools.product`'s last-range-fastest order, and the
+        # budget cross is budget-major, slices within). Building the
+        # candidate set as array blocks instead of one Python tuple
+        # per child is what keeps enumeration off the profile now
+        # that evaluation itself is batched. ---------------------------
+        blk_nvec: list[np.ndarray] = []  # [C_p, n] slice frontiers
+        blk_chips: list[np.ndarray] = []  # [C_p] new-acc budgets
+        blk_left_sum: list[np.ndarray] = []  # [C_p] remainder sizes
+        blk_parent: list[np.ndarray] = []  # [C_p] parent index
+        blk_spans: list[np.ndarray] = []  # [C_p, n, 2] eval spans
+        for pi, parent in enumerate(parents):
             stats.parents_expanded += 1
             l, r = parent.assigned, parent.chips_used
             remaining = tuple(L[i] - l[i] for i in range(n))
             if sum(remaining) == 0:
                 continue
+            budget = R - r
+            if budget < 1:
+                continue  # no chips left: the seed's empty budget range
             # the consecutive-slice takes per task do not depend on the
             # chip budget — enumerate them once per parent, then cross
             # with every budget in the seed's (chips, nvec) order
@@ -268,67 +282,95 @@ def beam_search(
                     + ([L[i]] if (L[i] - l[i]) % split_stride else [])
                     for i in range(n)
                 ]
-            slices = []
-            for nvec in itertools.product(*ranges):
-                take = tuple(nvec[i] - l[i] for i in range(n))
-                if sum(take) == 0:
-                    continue
-                left = tuple(L[i] - nvec[i] for i in range(n))
-                slices.append((nvec, take, left, sum(left)))
-            for chips_new in range(1, R - r + 1):
-                chips_left = R - r - chips_new
-                for nvec, take, left, left_sum in slices:
-                    if left_sum > 0 and chips_left < 1:
-                        continue  # remainder would have no resources
-                    cands.append(
-                        (parent, chips_new, chips_left, nvec, take, left, left_sum)
-                    )
+            grids = np.meshgrid(
+                *[np.asarray(rg, dtype=np.int64) for rg in ranges],
+                indexing="ij",
+            )
+            nvec_grid = np.stack(
+                [g.reshape(-1) for g in grids], axis=1
+            )  # [S, n], product order
+            l_row = np.asarray(l, dtype=np.int64)
+            nvec_grid = nvec_grid[(nvec_grid - l_row).sum(axis=1) > 0]
+            if not len(nvec_grid):
+                continue
+            left_sum_grid = (L_arr - nvec_grid).sum(axis=1)
+            # budgets 1..budget-1 keep >= 1 chip for the remainder, so
+            # every slice passes the seed's resource filter; at the
+            # full budget (chips_left == 0) only complete slices
+            # (left_sum == 0) survive it
+            S = len(nvec_grid)
+            parts_nvec, parts_chips, parts_ls = [], [], []
+            if budget > 1:
+                parts_nvec.append(np.tile(nvec_grid, (budget - 1, 1)))
+                parts_chips.append(
+                    np.repeat(np.arange(1, budget, dtype=np.int64), S)
+                )
+                parts_ls.append(np.tile(left_sum_grid, budget - 1))
+            complete = np.flatnonzero(left_sum_grid == 0)
+            if len(complete):
+                parts_nvec.append(nvec_grid[complete])
+                parts_chips.append(
+                    np.full(len(complete), budget, dtype=np.int64)
+                )
+                parts_ls.append(np.zeros(len(complete), dtype=np.int64))
+            if not parts_nvec:
+                continue
+            nvec_p = np.concatenate(parts_nvec, axis=0)
+            spans_p = np.empty((len(nvec_p), n, 2), dtype=np.int64)
+            spans_p[:, :, 0] = l_row
+            spans_p[:, :, 1] = nvec_p
+            blk_nvec.append(nvec_p)
+            blk_chips.append(np.concatenate(parts_chips))
+            blk_left_sum.append(np.concatenate(parts_ls))
+            blk_parent.append(
+                np.full(len(nvec_p), pi, dtype=np.int64)
+            )
+            blk_spans.append(spans_p)
 
         children: dict[tuple, _Node] = {}
-        if cands:
+        if blk_nvec:
+            nvec_all = np.concatenate(blk_nvec, axis=0)
+            chips_all = np.concatenate(blk_chips)
+            left_sum_all = np.concatenate(blk_left_sum)
+            parent_all = np.concatenate(blk_parent)
+            spans_new = np.concatenate(blk_spans, axis=0)
+            # chips_used is constant per parent block, so the leftover
+            # budget is recoverable without a per-candidate walk
+            used_by_parent = np.asarray(
+                [p.chips_used for p in parents], dtype=np.int64
+            )
+            chips_left_all = R - used_by_parent[parent_all] - chips_all
+
             # -- batch 1: price every child's new accelerator ----------
-            spans_new = np.empty((len(cands), n, 2), dtype=np.int64)
-            chips_arr = np.empty(len(cands), dtype=np.int64)
-            for j, (parent, chips_new, _cl, nvec, _t, _l, _ls) in enumerate(
-                cands
-            ):
-                spans_new[j, :, 0] = parent.assigned
-                spans_new[j, :, 1] = nvec
-                chips_arr[j] = chips_new
-            utils_new, blocks_new = eval_batch(spans_new, chips_arr)
+            utils_new, blocks_new = eval_batch(spans_new, chips_all)
             surv = ~constraint.prunes_batch(utils_new)  # line 11: prune
 
             # -- batch 2: price the remainders of surviving children ---
-            rem_of = np.full(len(cands), -1, dtype=np.int64)
-            rem_idx = [
-                j
-                for j in np.flatnonzero(surv)
-                if cands[j][6] > 0  # remainder still has work
-            ]
-            if rem_idx:
-                spans_rem = np.empty((len(rem_idx), n, 2), dtype=np.int64)
-                chips_rem = np.empty(len(rem_idx), dtype=np.int64)
-                for t, j in enumerate(rem_idx):
-                    _p, _cn, chips_left, nvec, _t2, _l2, _ls2 = cands[j]
-                    spans_rem[t, :, 0] = nvec
-                    spans_rem[t, :, 1] = L
-                    chips_rem[t] = chips_left
-                    rem_of[j] = t
+            rem_of = np.full(len(chips_all), -1, dtype=np.int64)
+            rem_sel = np.flatnonzero(surv & (left_sum_all > 0))
+            if len(rem_sel):
+                spans_rem = np.empty(
+                    (len(rem_sel), n, 2), dtype=np.int64
+                )
+                spans_rem[:, :, 0] = nvec_all[rem_sel]
+                spans_rem[:, :, 1] = L_arr
+                chips_rem = chips_left_all[rem_sel]
+                rem_of[rem_sel] = np.arange(len(rem_sel))
                 utils_rem, blocks_rem = eval_batch(spans_rem, chips_rem)
 
-            # -- walk candidates in enumeration order (identical
-            # feasibility / dedup / frontier bookkeeping to the seed) --
-            for j, (
-                parent,
-                chips_new,
-                chips_left,
-                nvec,
-                take,
-                left,
-                left_sum,
-            ) in enumerate(cands):
-                if not surv[j]:
-                    continue
+            # -- walk the *surviving* candidates in enumeration order
+            # (identical feasibility / dedup / frontier bookkeeping to
+            # the seed — the pruned majority is never touched) ---------
+            for j in np.flatnonzero(surv):
+                parent = parents[int(parent_all[j])]
+                chips_new = int(chips_all[j])
+                chips_left = int(chips_left_all[j])
+                nvec = tuple(int(x) for x in nvec_all[j])
+                take = tuple(
+                    v - a for v, a in zip(nvec, parent.assigned)
+                )
+                left = tuple(int(x) for x in L_arr - nvec_all[j])
+                left_sum = int(left_sum_all[j])
                 new_acc = make_acc(chips_new, int(blocks_new[j]))
                 accs = parent.accs + (new_acc,)
                 splits = parent.splits + (take,)

@@ -100,6 +100,59 @@ def batched_srt_schedulable(
     )
 
 
+def batched_tenant_utilizations(
+    base, overhead, periods, preemptive: bool
+) -> np.ndarray:
+    """Per-*tenant* Eq. 2 contribution vectors -> ``[T, K]``.
+
+    The serving-side dual of `batched_stage_utilizations`: instead of
+    summing one shared taskset per candidate design, this prices every
+    tenant of one design independently — ``base`` is ``[T, n_stages]``
+    (one `TaskRequest.base` row per tenant), ``periods`` is ``[T]``,
+    and row ``t`` is exactly ``TaskRequest.utilization`` of tenant
+    ``t``: ``e^k / p`` with the Eq. 4 overhead applied iff preemptive
+    and the stage is active. Bit-identical to the scalar method (same
+    IEEE ops, no reductions), which is what lets the admission,
+    rate-limit and placement hot paths score thousands of tenants in
+    one array pass without perturbing a single decision.
+    """
+    b = np.asarray(base, dtype=np.float64)
+    if b.ndim != 2:
+        raise ValueError(f"base must be [T, n_stages], got {b.shape}")
+    p = np.asarray(periods, dtype=np.float64)
+    if p.shape != (b.shape[0],):
+        raise ValueError("periods must align 1:1 with base rows")
+    e = batched_wcets(b[None, :, :], overhead, preemptive)[0]
+    return e / p[:, None]
+
+
+def batched_admission_check(
+    tenant_utils, current_util, util_cap: float = 1.0
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized `AdmissionController.check` core over ``[T, K]``
+    per-tenant utilization vectors against one cached Eq. 2 state.
+
+    Returns ``(after, bottleneck, ok)``: the post-admit stage
+    utilizations ``[T, K]``, the argmax stage per tenant (first max on
+    ties, matching the scalar ``max(range, key=...)``), and the Eq. 3
+    verdict ``after[bottleneck] <= util_cap + EPS`` — the same EPS
+    band `srt_schedulable` applies. Each row is an *independent*
+    non-committing check against ``current_util``, exactly like a
+    Python loop over the scalar ``check``.
+    """
+    du = np.asarray(tenant_utils, dtype=np.float64)
+    if du.ndim != 2:
+        raise ValueError(f"tenant_utils must be [T, K], got {du.shape}")
+    cur = np.asarray(current_util, dtype=np.float64)
+    if cur.shape != (du.shape[1],):
+        raise ValueError("current_util must be [n_stages]")
+    after = du + cur[None, :]
+    bottleneck = after.argmax(axis=1)
+    peak = after[np.arange(after.shape[0]), bottleneck]
+    ok = peak <= util_cap + EPS
+    return after, bottleneck, ok
+
+
 def batched_stage_slacks(
     base, overhead, taskset: TaskSet, preemptive: bool
 ) -> np.ndarray:

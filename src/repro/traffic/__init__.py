@@ -7,14 +7,18 @@ an *online* layer in front of the serving runtime:
   bursty MMPP, trace replay) behind one `ArrivalProcess` protocol;
 - `admission` — `AdmissionController`: O(stages) admit/reject verdicts
   that agree bit-exactly with a full `srt_schedulable` re-analysis,
-  plus headroom/sensitivity reports;
+  plus headroom/sensitivity reports, and the batched front-end
+  (`check_many` / `score_many`) pricing whole tenant cohorts in one
+  array pass (docs/scale.md);
 - `shedding`  — overload policies (reject-newest, shed-by-value,
   degrade-to-best-effort) + the `BacklogMonitor` that engages them when
   observed backlog contradicts the analysis, and the
   `des_release_shedding` adapter pushing the same decisions into the
   DES;
-- `ratelimit` — per-tenant token buckets (`RateLimiter`) trimming live
-  traffic back to the provisioned contract in front of admission;
+- `ratelimit` — per-tenant token buckets (`RateLimiter`, array-backed:
+  `allow_many` sweeps a whole due batch vectorized, `from_arrays`
+  provisions million-tenant fleets) trimming live traffic back to the
+  provisioned contract in front of admission;
 - `modes`     — mixed-criticality overload modes (`ModeController`):
   HI/LO tenant classes, backlog-triggered HI-mode switches that re-run
   the Eq. 3 admission over the HI survivor set *before* committing,

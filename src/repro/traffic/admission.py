@@ -37,6 +37,12 @@ import math
 from dataclasses import dataclass
 from typing import Sequence
 
+import numpy as np
+
+from repro.core.rt.batch import (
+    batched_admission_check,
+    batched_tenant_utilizations,
+)
 from repro.core.rt.response_time import end_to_end_bounds
 from repro.core.rt.schedulability import EPS, srt_schedulable
 from repro.core.rt.task import LayerDesc, SegmentTable, Task, TaskSet, Workload
@@ -325,6 +331,83 @@ class AdmissionController:
             stage_utils=after,
             bottleneck=bottleneck,
         )
+
+    # -- the batched admit check (one array pass, T tenants) ----------
+    def score_many(
+        self, base, periods
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """The batched admission core: Eq. 3 verdicts for ``T``
+        guaranteed candidates in one array pass.
+
+        ``base`` is ``[T, n_stages]`` (one `TaskRequest.base` row per
+        candidate), ``periods`` ``[T]``. Returns ``(after, bottleneck,
+        ok)`` exactly as `repro.core.rt.batch.batched_admission_check`:
+        every row is an independent, non-committing check against the
+        *current* cached utilization — bit-identical to a Python loop
+        over `check` (the property suite asserts exact ``==``). This is
+        the array layer `check_many` (and the placement/autoscale
+        scoring) build on; it never sees best-effort requests, which
+        consume no Eq. 2 budget.
+        """
+        b = np.asarray(base, dtype=np.float64)
+        if b.ndim != 2 or b.shape[1] != self.n_stages:
+            raise ValueError(
+                f"base must be [T, {self.n_stages}], got {b.shape}"
+            )
+        du = batched_tenant_utilizations(
+            b, self.overheads, periods, self.preemptive
+        )
+        return batched_admission_check(du, self._util, self.util_cap)
+
+    def check_many(
+        self, reqs: Sequence[TaskRequest]
+    ) -> list[AdmissionDecision]:
+        """Batched `check`: score every pending request in one array
+        pass, bit-identical per-decision to ``[self.check(r) for r in
+        reqs]`` (non-committing — no request sees another's admission).
+
+        Best-effort rows short-circuit exactly like the scalar path
+        (always admitted, no Eq. 2 contribution); guaranteed rows run
+        through `score_many`. Decision objects (reason strings
+        included) reproduce the scalar ones field-for-field.
+        """
+        for r in reqs:
+            if len(r.base) != self.n_stages:
+                raise ValueError(
+                    f"request spans {len(r.base)} stages, "
+                    f"controller has {self.n_stages}"
+                )
+        guaranteed = [i for i, r in enumerate(reqs) if not r.best_effort]
+        out: list[AdmissionDecision | None] = [None] * len(reqs)
+        if guaranteed:
+            after, bottleneck, ok = self.score_many(
+                [reqs[i].base for i in guaranteed],
+                [reqs[i].period for i in guaranteed],
+            )
+            after_rows = after.tolist()
+            for j, i in enumerate(guaranteed):
+                k = int(bottleneck[j])
+                admitted = bool(ok[j])
+                peak = after_rows[j][k]
+                reason = (
+                    f"max util {peak:.4f} <= cap {self.util_cap}"
+                    if admitted
+                    else (
+                        f"stage {k} would reach "
+                        f"{peak:.4f} > cap {self.util_cap}"
+                    )
+                )
+                out[i] = AdmissionDecision(
+                    request=reqs[i],
+                    admitted=admitted,
+                    reason=reason,
+                    stage_utils=tuple(after_rows[j]),
+                    bottleneck=k,
+                )
+        for i, r in enumerate(reqs):
+            if out[i] is None:
+                out[i] = self.check(r)  # best-effort short-circuit
+        return out  # type: ignore[return-value]
 
     def admit(self, req: TaskRequest) -> AdmissionDecision:
         """Check and, on success, commit the request."""

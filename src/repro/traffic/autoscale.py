@@ -39,6 +39,10 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Sequence
 
+import numpy as np
+
+from repro.core.rt.batch import batched_tenant_utilizations
+from repro.core.rt.schedulability import EPS
 from repro.traffic.admission import AdmissionController
 from repro.traffic.shard import ShardedGateway, ShardedReport, ShardPlan
 
@@ -158,22 +162,50 @@ class Autoscaler:
             ctls[assign[i]].admit(self.built.requests[i])
         return ctls
 
+    def _score_shards(
+        self, ctls: Sequence[AdmissionController], req
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """One array pass over all K proof controllers: per-shard
+        post-admit bottleneck utilization (``peak``) and Eq. 3 verdict
+        (``ok``), value-identical to calling ``ctls[k].check(req)``
+        per shard — the same ``du + util`` IEEE additions against each
+        controller's cached Eq. 2 state, the same ``util_cap + EPS``
+        band. This is what keeps the planning round O(K·stages) in
+        numpy instead of O(K) Python `check` calls per tenant."""
+        if len(req.base) != self._n_stages:
+            raise ValueError(
+                f"request spans {len(req.base)} stages, "
+                f"fleet has {self._n_stages}"
+            )
+        du = batched_tenant_utilizations(
+            [list(req.base)],
+            [0.0] * self._n_stages,
+            [req.period],
+            self._preemptive,
+        )[0]
+        cur = np.array(
+            [ctl.utilizations() for ctl in ctls], dtype=np.float64
+        )
+        caps = np.array([ctl.util_cap for ctl in ctls], dtype=np.float64)
+        after = du[None, :] + cur
+        peak = after.max(axis=1)
+        ok = peak <= caps + EPS
+        return peak, ok
+
     def _best_shard(
         self, ctls: Sequence[AdmissionController], req, exclude=()
     ) -> int | None:
         """Slack-aware: admitting shard with the smallest post-admit
-        bottleneck utilization; None when no shard proves Eq. 3."""
-        best, best_util = None, float("inf")
-        for k, ctl in enumerate(ctls):
-            if k in exclude:
-                continue
-            dec = ctl.check(req)
-            if not dec.admitted:
-                continue
-            util = dec.stage_utils[dec.bottleneck]
-            if util < best_util:
-                best, best_util = k, util
-        return best
+        bottleneck utilization; None when no shard proves Eq. 3.
+        First-argmin tie-break — the first shard reaching the smallest
+        peak wins, exactly like the scalar strict-``<`` scan."""
+        peak, ok = self._score_shards(ctls, req)
+        score = np.where(ok, peak, np.inf)
+        for k in exclude:
+            score[k] = np.inf
+        if not np.isfinite(score).any():
+            return None
+        return int(score.argmin())
 
     # -- one planning round -------------------------------------------
     def _plan_epoch(
@@ -205,13 +237,8 @@ class Autoscaler:
                 # tenant still gets the least-bad shard and the epoch's
                 # own admission rejects it there (counted, not hidden)
                 ctls = self._controllers(assign, n_shards)
-                best = min(
-                    range(n_shards),
-                    key=lambda k: (
-                        max(ctls[k].check(req).stage_utils),
-                        k,
-                    ),
-                )
+                peak, _ = self._score_shards(ctls, req)
+                best = int(peak.argmin())
             assign[i] = best
 
         # drain-and-remove the emptiest shard while everything it holds

@@ -370,16 +370,44 @@ class TrafficGateway:
         Due arrivals are released *before* the caller's horizon check so
         jobs landing between the last tick and the horizon still flow
         through the shedding path — every scheduled arrival ends up
-        released, degraded or shed, never silently dropped."""
+        released, degraded or shed, never silently dropped.
+
+        When a rate limiter is armed (and mixed-criticality modes are
+        not — `ModeController.release_cost` can change mid-sweep, so
+        those sweeps stay scalar), the whole due batch's token-bucket
+        verdicts are computed in one `RateLimiter.allow_many` array
+        pass up front. `allow_many` is bit-identical to looping
+        `allow` in schedule order, and nothing else in the sweep feeds
+        back into bucket state, so the batched sweep reproduces the
+        scalar one decision-for-decision."""
         st = self._require_run()
         rel = self.clock.now() - st.t0
-        while st.pos < len(st.sched) and (
-            st.sched[st.pos][0] <= rel or rel >= st.horizon_s
+        end = st.pos
+        n = len(st.sched)
+        while end < n and (
+            st.sched[end][0] <= rel or rel >= st.horizon_s
         ):
-            sched_t, i = st.sched[st.pos]
-            st.pos += 1
+            end += 1
+        if end == st.pos:
+            return rel
+        due = st.sched[st.pos:end]
+        st.pos = end
+        rl_ok = None
+        if (
+            self.ratelimit is not None
+            and self.modes is None
+            and len(due) > 1
+        ):
+            rl_ok = self.ratelimit.allow_many(
+                [st.t0 + t for t, _ in due], [i for _, i in due]
+            )
+        for j, (sched_t, i) in enumerate(due):
             self._release(
-                i, st.t0 + sched_t, max(0.0, rel - sched_t), st.stats
+                i,
+                st.t0 + sched_t,
+                max(0.0, rel - sched_t),
+                st.stats,
+                rl_allowed=None if rl_ok is None else bool(rl_ok[j]),
             )
         return rel
 
@@ -457,6 +485,7 @@ class TrafficGateway:
         release_time: float,
         jitter: float,
         stats: list[TenantStats],
+        rl_allowed: bool | None = None,
     ) -> None:
         # the token bucket polices the traffic contract before anything
         # else sees the release: a dry bucket refuses it outright
@@ -464,23 +493,32 @@ class TrafficGateway:
         # virtual and wall runs decide identically). In HI mode the
         # ModeController tightens LO tenants' buckets by charging
         # `release_cost` tokens per release instead of one.
-        if self.ratelimit is not None and not self.ratelimit.allow(
-            i,
-            release_time,
-            cost=(
-                self.modes.release_cost(i)
-                if self.modes is not None
-                else 1.0
-            ),
-        ):
-            stats[i].rate_limited += 1
-            if self._tr is not None:
-                self._tr.emit(
-                    "rate_limited", self.clock.now(), "gateway",
-                    self.requests[i].name, -1, self._tr_shard,
-                    release=release_time,
+        # ``rl_allowed`` carries a verdict `release_due` already
+        # computed in its batched `allow_many` pass (bucket state is
+        # already charged); None means decide here, scalar.
+        if self.ratelimit is not None:
+            allowed = (
+                rl_allowed
+                if rl_allowed is not None
+                else self.ratelimit.allow(
+                    i,
+                    release_time,
+                    cost=(
+                        self.modes.release_cost(i)
+                        if self.modes is not None
+                        else 1.0
+                    ),
                 )
-            return
+            )
+            if not allowed:
+                stats[i].rate_limited += 1
+                if self._tr is not None:
+                    self._tr.emit(
+                        "rate_limited", self.clock.now(), "gateway",
+                        self.requests[i].name, -1, self._tr_shard,
+                        release=release_time,
+                    )
+                return
         # refresh overload state for every admitted tenant (pending
         # counts change between releases as jobs complete)
         if self.modes is not None:

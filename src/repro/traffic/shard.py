@@ -56,7 +56,10 @@ import zlib
 from dataclasses import dataclass
 from typing import Protocol, Sequence
 
-from repro.core.rt.schedulability import stage_slacks
+import numpy as np
+
+from repro.core.rt.batch import batched_tenant_utilizations
+from repro.core.rt.schedulability import EPS, stage_slacks
 from repro.core.rt.task import LayerDesc, SegmentTable, Task, TaskSet, Workload
 from repro.traffic.admission import AdmissionController, TaskRequest
 from repro.traffic.gateway import GatewayReport, TenantStats, TrafficGateway
@@ -86,6 +89,19 @@ def _util_vector(req, overheads, preemptive):
     return req.utilization(tuple(overheads), preemptive)
 
 
+def _tenant_util_matrix(requests, overheads, preemptive) -> np.ndarray:
+    """``[T, K]`` Eq. 2 contribution rows, one per tenant — the shared
+    precomputation of the vectorized placement policies. Row ``t`` is
+    bit-identical to ``requests[t].utilization(overheads, preemptive)``
+    (`batched_tenant_utilizations` contract)."""
+    return batched_tenant_utilizations(
+        [list(r.base) for r in requests],
+        list(overheads),
+        [r.period for r in requests],
+        preemptive,
+    )
+
+
 @dataclass(frozen=True)
 class HashByTenant:
     """Stateless ``crc32(tenant name) % K`` placement."""
@@ -100,24 +116,30 @@ class HashByTenant:
 
 @dataclass(frozen=True)
 class LeastLoaded:
-    """Greedy min-max-utilization placement on the Eq. 2 vectors."""
+    """Greedy min-max-utilization placement on the Eq. 2 vectors.
+
+    The greedy walk is tenant-sequential by definition (each decision
+    feeds the next), but each tenant's scoring sweep over all K shards
+    is one array pass: post-placement peaks for every shard at once,
+    first-argmin shard wins. Bit-identical to the per-shard Python
+    loop: the per-shard load vectors accumulate the same IEEE additions
+    in the same order, ``max``/``argmin`` are value- and tie-exact
+    (argmin returns the first minimum, matching ``min(range(K),
+    key=(peak, s))``)."""
 
     name: str = "least_loaded"
 
     def place(self, requests, n_shards, *, overheads, preemptive):
-        loads = [[0.0] * len(overheads) for _ in range(n_shards)]
+        if not requests:
+            return []
+        du = _tenant_util_matrix(requests, overheads, preemptive)
+        loads = np.zeros((n_shards, len(overheads)))
         out = []
-        for r in requests:
-            du = _util_vector(r, overheads, preemptive)
-            best = min(
-                range(n_shards),
-                key=lambda s: (
-                    max(u + d for u, d in zip(loads[s], du)),
-                    s,
-                ),
-            )
+        for t in range(len(requests)):
+            after = loads + du[t][None, :]
+            best = int(after.max(axis=1).argmin())
             out.append(best)
-            loads[best] = [u + d for u, d in zip(loads[best], du)]
+            loads[best] = after[best]
         return out
 
 
@@ -142,26 +164,37 @@ def _placement_analysis_view(reqs, overheads):
 class SlackAware:
     """Greedy placement maximizing the post-placement `stage_slacks`
     minimum over the tenant's *active* stages (stages it never touches
-    do not vote)."""
+    do not vote).
+
+    Scores all K shards per tenant in one array pass instead of
+    materializing a fresh (`SegmentTable`, `TaskSet`) per
+    (tenant, shard) pair and re-summing Eq. 2 from scratch — the
+    O(tenants × shards × placed) walk this replaces. Bit-identical to
+    the scalar greedy: per-shard utilization accumulates the same
+    additions in placement order (matching `stage_utilization`'s
+    task-order ``sum`` over ``placed[s] + [r]``), the slack clamp is
+    the scalar EPS band, and first-argmax over min-slack matches
+    ``max(range(K), key=(min_slack, -s))`` — smallest shard index on
+    ties."""
 
     name: str = "slack_aware"
 
     def place(self, requests, n_shards, *, overheads, preemptive):
-        placed: list[list[TaskRequest]] = [[] for _ in range(n_shards)]
+        if not requests:
+            return []
+        du = _tenant_util_matrix(requests, overheads, preemptive)
+        util = np.zeros((n_shards, len(overheads)))
         out = []
-        for r in requests:
+        for t, r in enumerate(requests):
             active = [k for k, b in enumerate(r.base) if b > 0.0]
-
-            def score(s: int) -> tuple[float, int]:
-                table, ts = _placement_analysis_view(
-                    placed[s] + [r], overheads
-                )
-                slacks = stage_slacks(table, ts, preemptive)
-                return (min(slacks[k] for k in active), -s)
-
-            best = max(range(n_shards), key=score)
+            after = util + du[t][None, :]
+            slacks = 1.0 - after
+            slacks = np.where(
+                (slacks < 0.0) & (slacks >= -EPS), 0.0, slacks
+            )
+            best = int(slacks[:, active].min(axis=1).argmax())
             out.append(best)
-            placed[best].append(r)
+            util[best] = after[best]
         return out
 
 
@@ -269,7 +302,12 @@ def _shard_headroom(shard: int, gw: TrafficGateway) -> ShardHeadroom:
 @dataclass(frozen=True)
 class ShardedReport:
     """Per-shard `GatewayReport`s plus the plan that produced them.
-    Empty shards carry ``None``."""
+    Empty shards carry ``None``.
+
+    Aggregate totals are computed once on first access and memoized
+    (the report is a finished-run snapshot — per-tenant stats no longer
+    change), so a benchmark polling ``total_released`` per batch reads
+    three cached ints instead of re-walking K×T tenant stat rows."""
 
     plan: ShardPlan
     reports: tuple[GatewayReport | None, ...]
@@ -304,18 +342,31 @@ class ShardedReport:
     def admitted_count(self) -> int:
         return sum(1 for t in self.tenants if t.admitted)
 
+    def _totals(self) -> tuple[int, int, int]:
+        """(shed, rate_limited, released) in one walk, memoized.
+        Frozen dataclasses still own their ``__dict__``, so the cache
+        rides along without thawing the report."""
+        cached = self.__dict__.get("_totals_cache")
+        if cached is None:
+            shed = limited = released = 0
+            for r in self.reports:
+                if r is None:
+                    continue
+                shed += r.total_shed()
+                limited += r.total_rate_limited()
+                released += r.total_released()
+            cached = (shed, limited, released)
+            object.__setattr__(self, "_totals_cache", cached)
+        return cached
+
     def total_shed(self) -> int:
-        return sum(r.total_shed() for r in self.reports if r is not None)
+        return self._totals()[0]
 
     def total_rate_limited(self) -> int:
-        return sum(
-            r.total_rate_limited() for r in self.reports if r is not None
-        )
+        return self._totals()[1]
 
     def total_released(self) -> int:
-        return sum(
-            r.total_released() for r in self.reports if r is not None
-        )
+        return self._totals()[2]
 
 
 def plan_shards(

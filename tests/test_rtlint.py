@@ -128,6 +128,38 @@ class TestDeterminism:
         )
         assert findings_for("determinism", src, self.REL) == []
 
+    # -- the vectorized traffic hot path ------------------------------
+    TRAFFIC_REL = "src/repro/traffic/x.py"
+
+    def test_flags_set_iteration_when_building_event_batch(self):
+        # assembling an allow_many batch from a set of pending tenants
+        # makes the event order (and therefore every downstream verdict
+        # comparison) interpreter-dependent
+        src = (
+            "def sweep(pending, times, limiter):\n"
+            "    idx = [i for i in pending]\n"
+            "    return limiter.allow_many(times, idx)\n"
+            "pending = {3, 1, 2}\n"
+            "for i in pending:\n"
+            "    pass\n"
+        )
+        assert findings_for("determinism", src, self.TRAFFIC_REL)
+
+    def test_sorted_batch_assembly_is_clean(self):
+        # the batch-assembly shape the vectorized sweep uses: sorted
+        # membership, seeded rng for any synthetic population
+        src = (
+            "import random\n"
+            "def sweep(active, stats, limiter, times, seed):\n"
+            "    rng = random.Random(seed)\n"
+            "    idx = sorted(active)\n"
+            "    verdicts = limiter.allow_many(times, idx)\n"
+            "    for i, s in sorted(stats.items()):\n"
+            "        s.observe(rng.random())\n"
+            "    return verdicts\n"
+        )
+        assert findings_for("determinism", src, self.TRAFFIC_REL) == []
+
 
 class TestTimeEps:
     REL = "src/repro/scheduler/x.py"
@@ -361,6 +393,47 @@ class TestObsContract:
             "            tr((e, 'release'))\n"
         )
         assert findings_for("obs-contract", src, self.REL) == []
+
+    # -- the vectorized release sweep (traffic hot path) --------------
+    TRAFFIC_REL = "src/repro/traffic/x.py"
+
+    def test_flags_per_event_sink_inside_batched_sweep(self):
+        # the anti-pattern the batched release path must avoid: one
+        # trace-handle resolution per due event inside allow_many's
+        # verdict walk re-introduces the per-event overhead the array
+        # pass just removed
+        src = (
+            "def release_due(due, limiter, trace):\n"
+            "    verdicts = limiter.allow_many(\n"
+            "        [t for t, _ in due], [i for _, i in due]\n"
+            "    )\n"
+            "    for (t, i), ok in zip(due, verdicts):\n"
+            "        if not ok and trace.enabled:\n"
+            "            trace.sink()((t, 'release'))\n"
+        )
+        found = findings_for("obs-contract", src, self.TRAFFIC_REL)
+        assert len(found) == 2
+        assert any(".enabled" in f.message for f in found)
+        assert any(".sink()" in f.message for f in found)
+
+    def test_batched_sweep_with_resolved_handle_is_clean(self):
+        # the shape `TrafficGateway.release_due` actually has: one
+        # batched verdict pass, the handle resolved once up front
+        src = (
+            "def release_due(due, limiter, trace):\n"
+            "    tr = (\n"
+            "        trace.sink()\n"
+            "        if trace is not None and trace.enabled\n"
+            "        else None\n"
+            "    )\n"
+            "    verdicts = limiter.allow_many(\n"
+            "        [t for t, _ in due], [i for _, i in due]\n"
+            "    )\n"
+            "    for (t, i), ok in zip(due, verdicts):\n"
+            "        if not ok and tr is not None:\n"
+            "            tr((t, 'release'))\n"
+        )
+        assert findings_for("obs-contract", src, self.TRAFFIC_REL) == []
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,510 @@
+"""Million-tenant hot path: batched-vs-scalar bit-equality.
+
+The vectorized serving hot path (`AdmissionController.check_many` /
+`score_many`, `RateLimiter.allow_many`, vectorized `LeastLoaded` /
+`SlackAware`, the autoscaler's array shard scoring and the gateway's
+batched release sweep) claims **bit-identical decisions** to the
+scalar code it replaced. This suite holds every layer to that claim
+with exact ``==`` over randomized populations — including the Eq. 3
+EPS boundary, where a single ulp of divergence flips an admission
+verdict — plus deterministic legs for the duplicate-heavy and
+deep-run paths of `allow_many`.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rt.schedulability import EPS, stage_slacks
+from repro.core.rt.task import LayerDesc, SegmentTable, Task, TaskSet, Workload
+from repro.pipeline.serve import PharosServer, ServeTask
+from repro.traffic import (
+    AdmissionController,
+    LeastLoaded,
+    PoissonArrivals,
+    RateLimiter,
+    SlackAware,
+    TaskRequest,
+    TrafficGateway,
+    VirtualClock,
+)
+
+N_STAGES = 3
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+@st.composite
+def tenant_cohort(draw, max_tenants=12):
+    """A controller with some admitted background plus a cohort of
+    pending requests (guaranteed and best-effort mixed)."""
+    n = draw(st.integers(1, max_tenants))
+    reqs = []
+    for i in range(n):
+        base = tuple(
+            draw(st.floats(0.0, 0.02)) if draw(st.booleans()) else 0.0
+            for _ in range(N_STAGES)
+        )
+        if all(b == 0.0 for b in base):
+            base = (0.001,) + base[1:]
+        reqs.append(
+            TaskRequest(
+                name=f"t{i}",
+                base=base,
+                period=draw(st.floats(0.01, 0.5)),
+                best_effort=draw(st.booleans()),
+            )
+        )
+    n_bg = draw(st.integers(0, 4))
+    bg = [
+        TaskRequest(
+            name=f"bg{j}",
+            base=tuple(
+                draw(st.floats(0.001, 0.3)) for _ in range(N_STAGES)
+            ),
+            period=draw(st.floats(0.5, 2.0)),
+        )
+        for j in range(n_bg)
+    ]
+    return bg, reqs
+
+
+def _decisions_equal(a, b) -> bool:
+    return (
+        a.admitted == b.admitted
+        and a.bottleneck == b.bottleneck
+        and a.stage_utils == b.stage_utils
+        and a.reason == b.reason
+        and a.request is b.request
+    )
+
+
+# ---------------------------------------------------------------------------
+# check_many / score_many == looped check()
+# ---------------------------------------------------------------------------
+@pytest.mark.property
+@settings(max_examples=60, deadline=None)
+@given(tenant_cohort())
+def test_check_many_equals_scalar_loop(cohort):
+    bg, reqs = cohort
+    ctl = AdmissionController([0.001] * N_STAGES, preemptive=True)
+    for r in bg:
+        ctl.admit(r)
+    scalar = [ctl.check(r) for r in reqs]
+    batched = ctl.check_many(reqs)
+    assert len(scalar) == len(batched)
+    for a, b in zip(scalar, batched):
+        assert _decisions_equal(a, b)
+
+
+@pytest.mark.property
+@settings(max_examples=60, deadline=None)
+@given(tenant_cohort())
+def test_score_many_matches_scalar_check_floats(cohort):
+    bg, reqs = cohort
+    ctl = AdmissionController([0.001] * N_STAGES)
+    for r in bg:
+        ctl.admit(r)
+    guaranteed = [r for r in reqs if not r.best_effort]
+    if not guaranteed:
+        return
+    after, bottleneck, ok = ctl.score_many(
+        [list(r.base) for r in guaranteed],
+        [r.period for r in guaranteed],
+    )
+    for j, r in enumerate(guaranteed):
+        dec = ctl.check(r)
+        assert tuple(after[j].tolist()) == dec.stage_utils
+        assert int(bottleneck[j]) == dec.bottleneck
+        assert bool(ok[j]) == dec.admitted
+
+
+def test_check_many_at_eps_boundary():
+    """Admissions landing exactly on, just inside and just outside the
+    Eq. 3 ``util_cap + EPS`` band must flip identically to scalar
+    `check` — the one place a single ulp of drift would show."""
+    ctl = AdmissionController([0.0] * N_STAGES)
+    # fill stage 0 to exactly 0.5 utilization
+    ctl.admit(TaskRequest("bg", (0.5, 0.1, 0.0), period=1.0))
+    probes = [
+        # lands exactly at the cap: admitted
+        TaskRequest("at_cap", (0.5, 0.0, 0.1), period=1.0),
+        # inside the EPS band above the cap: admitted
+        TaskRequest(
+            "in_band", (0.5 + 0.5 * EPS, 0.0, 0.1), period=1.0
+        ),
+        # beyond the band: rejected
+        TaskRequest("beyond", (0.5 + 3e-12, 0.0, 0.1), period=1.0),
+        TaskRequest("way_over", (0.8, 0.0, 0.1), period=1.0),
+    ]
+    scalar = [ctl.check(r) for r in probes]
+    batched = ctl.check_many(probes)
+    assert [d.admitted for d in scalar] == [True, True, False, False]
+    for a, b in zip(scalar, batched):
+        assert _decisions_equal(a, b)
+
+
+def test_check_many_rejects_wrong_width():
+    ctl = AdmissionController([0.0] * N_STAGES)
+    with pytest.raises(ValueError, match="stages"):
+        ctl.check_many([TaskRequest("bad", (0.1,), period=1.0)])
+
+
+# ---------------------------------------------------------------------------
+# allow_many == looped allow()
+# ---------------------------------------------------------------------------
+@st.composite
+def release_batch(draw):
+    n_buckets = draw(st.integers(1, 8))
+    rates = [draw(st.floats(0.5, 50.0)) for _ in range(n_buckets)]
+    bursts = [float(draw(st.integers(1, 4))) for _ in range(n_buckets)]
+    n_ev = draw(st.integers(0, 60))
+    times = sorted(
+        draw(st.floats(0.0, 3.0)) for _ in range(n_ev)
+    )
+    idx = [draw(st.integers(0, n_buckets - 1)) for _ in range(n_ev)]
+    costs = (
+        [float(draw(st.integers(1, 3))) for _ in range(n_ev)]
+        if draw(st.booleans())
+        else None
+    )
+    return rates, bursts, times, idx, costs
+
+
+@pytest.mark.property
+@settings(max_examples=80, deadline=None)
+@given(release_batch())
+def test_allow_many_equals_scalar_loop(batch):
+    rates, bursts, times, idx, costs = batch
+    rl_a = RateLimiter.from_arrays(rates, bursts)
+    rl_b = RateLimiter.from_arrays(rates, bursts)
+    scalar = [
+        rl_a.allow(i, t, 1.0 if costs is None else costs[j])
+        for j, (t, i) in enumerate(zip(times, idx))
+    ]
+    batched = rl_b.allow_many(times, idx, costs)
+    assert scalar == list(batched)
+    assert rl_a.totals() == rl_b.totals()
+    for i in range(len(rates)):
+        assert rl_a.bucket(i).tokens == rl_b.bucket(i).tokens
+        assert rl_a.bucket(i).last == rl_b.bucket(i).last
+
+
+def test_allow_many_deep_duplicate_run_hits_both_paths():
+    """One Zipf-hot bucket with a run far past the wave break-even plus
+    a wide cold tail: the batch exercises the vector waves AND the
+    hoisted per-run scalar sweep, and both agree with the loop."""
+    rng = np.random.default_rng(7)
+    n = 64
+    rates = rng.uniform(1.0, 30.0, n)
+    bursts = np.maximum(1.0, rng.integers(1, 4, n).astype(float))
+    # 200 events on bucket 0, one each on the rest
+    idx = np.concatenate([np.zeros(200, dtype=int), np.arange(n)])
+    times = np.sort(rng.uniform(0.0, 2.0, len(idx)))
+    rl_a = RateLimiter.from_arrays(rates, bursts)
+    rl_b = RateLimiter.from_arrays(rates, bursts)
+    scalar = [rl_a.allow(int(i), float(t)) for t, i in zip(times, idx)]
+    batched = rl_b.allow_many(times, idx)
+    assert scalar == list(batched)
+    assert rl_a.totals() == rl_b.totals()
+    assert rl_a.bucket(0).tokens == rl_b.bucket(0).tokens
+
+
+def test_allow_many_validates_inputs():
+    rl = RateLimiter.from_arrays([1.0], [2.0])
+    assert list(rl.allow_many([], [])) == []
+    with pytest.raises(ValueError, match="equal-length"):
+        rl.allow_many([0.0, 1.0], [0])
+    with pytest.raises(ValueError, match="cost"):
+        rl.allow_many([0.0], [0], [0.5])
+
+
+def test_from_arrays_matches_bucket_construction():
+    """`from_arrays` provisions the same state as `RateLimiter` over
+    real `TokenBucket`s — the million-tenant constructor is not a
+    second semantics."""
+    from repro.traffic import TokenBucket
+
+    rates, bursts = [2.0, 5.0, 0.7], [1.0, 3.0, 2.0]
+    a = RateLimiter([TokenBucket(r, b) for r, b in zip(rates, bursts)])
+    b = RateLimiter.from_arrays(rates, bursts)
+    events = [(0.1, 0), (0.2, 1), (0.2, 1), (0.9, 2), (1.4, 0)]
+    for t, i in events:
+        assert a.allow(i, t) == b.allow(i, t)
+    assert a.totals() == b.totals()
+
+
+# ---------------------------------------------------------------------------
+# vectorized placement == scalar greedy loops
+# ---------------------------------------------------------------------------
+def _scalar_least_loaded(requests, n_shards, overheads, preemptive):
+    loads = [[0.0] * len(overheads) for _ in range(n_shards)]
+    out = []
+    for r in requests:
+        du = r.utilization(tuple(overheads), preemptive)
+        best = min(
+            range(n_shards),
+            key=lambda s: (max(u + d for u, d in zip(loads[s], du)), s),
+        )
+        out.append(best)
+        loads[best] = [u + d for u, d in zip(loads[best], du)]
+    return out
+
+
+def _scalar_slack_aware(requests, n_shards, overheads, preemptive):
+    def view(reqs):
+        table = SegmentTable(
+            base=[list(r.base) for r in reqs], overhead=list(overheads)
+        )
+        w = Workload("placement", (LayerDesc("seg", 1, 1, 1),))
+        ts = TaskSet(
+            tasks=tuple(
+                Task(
+                    workload=w,
+                    period=r.period,
+                    deadline=r.deadline,
+                    name=r.name,
+                )
+                for r in reqs
+            )
+        )
+        return table, ts
+
+    placed = [[] for _ in range(n_shards)]
+    out = []
+    for r in requests:
+        active = [k for k, b in enumerate(r.base) if b > 0.0]
+
+        def score(s):
+            table, ts = view(placed[s] + [r])
+            slacks = stage_slacks(table, ts, preemptive)
+            return (min(slacks[k] for k in active), -s)
+
+        best = max(range(n_shards), key=score)
+        out.append(best)
+        placed[best].append(r)
+    return out
+
+
+@st.composite
+def placement_problem(draw):
+    n = draw(st.integers(1, 14))
+    reqs = []
+    for i in range(n):
+        base = tuple(
+            draw(st.floats(0.0, 0.1)) if draw(st.booleans()) else 0.0
+            for _ in range(N_STAGES)
+        )
+        if all(b == 0.0 for b in base):
+            base = (0.01,) + base[1:]
+        reqs.append(
+            TaskRequest(
+                name=f"p{i}", base=base, period=draw(st.floats(0.05, 1.0))
+            )
+        )
+    n_shards = draw(st.integers(1, 5))
+    preemptive = draw(st.booleans())
+    return reqs, n_shards, preemptive
+
+
+@pytest.mark.property
+@settings(max_examples=50, deadline=None)
+@given(placement_problem())
+def test_least_loaded_vectorized_equals_scalar(problem):
+    reqs, n_shards, preemptive = problem
+    overheads = [0.001] * N_STAGES
+    assert LeastLoaded().place(
+        reqs, n_shards, overheads=overheads, preemptive=preemptive
+    ) == _scalar_least_loaded(reqs, n_shards, overheads, preemptive)
+
+
+@pytest.mark.property
+@settings(max_examples=50, deadline=None)
+@given(placement_problem())
+def test_slack_aware_vectorized_equals_scalar(problem):
+    reqs, n_shards, preemptive = problem
+    overheads = [0.001] * N_STAGES
+    assert SlackAware().place(
+        reqs, n_shards, overheads=overheads, preemptive=preemptive
+    ) == _scalar_slack_aware(reqs, n_shards, overheads, preemptive)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler array scoring == scalar check() scan
+# ---------------------------------------------------------------------------
+def test_best_shard_matches_scalar_scan():
+    from repro.traffic.autoscale import Autoscaler
+
+    class _Built:  # minimal duck-typed scenario for the scorer
+        class design:
+            n_stages = N_STAGES
+
+        class scenario:
+            policy = "edf"
+
+        requests = ()
+
+    asc = Autoscaler(_Built, min_shards=1, max_shards=4)
+    rng = np.random.default_rng(11)
+    ctls = []
+    for k in range(4):
+        ctl = AdmissionController([0.0] * N_STAGES, preemptive=True)
+        for j in range(k + 1):
+            ctl.admit(
+                TaskRequest(
+                    name=f"s{k}b{j}",
+                    base=tuple(rng.uniform(0.05, 0.2, N_STAGES)),
+                    period=1.0,
+                )
+            )
+        ctls.append(ctl)
+    probes = [
+        TaskRequest(
+            name=f"probe{i}",
+            base=tuple(rng.uniform(0.0, 0.6, N_STAGES)),
+            period=1.0,
+        )
+        for i in range(20)
+    ]
+
+    def scalar_best(ctls, req, exclude=()):
+        best, best_util = None, float("inf")
+        for k, ctl in enumerate(ctls):
+            if k in exclude:
+                continue
+            dec = ctl.check(req)
+            if not dec.admitted:
+                continue
+            util = dec.stage_utils[dec.bottleneck]
+            if util < best_util:
+                best, best_util = k, util
+        return best
+
+    for req in probes:
+        for exclude in ((), (0,), (1, 3)):
+            assert asc._best_shard(ctls, req, exclude) == scalar_best(
+                ctls, req, exclude
+            )
+        peak, _ok = asc._score_shards(ctls, req)
+        assert int(peak.argmin()) == min(
+            range(len(ctls)),
+            key=lambda k: (max(ctls[k].check(req).stage_utils), k),
+        )
+
+
+# ---------------------------------------------------------------------------
+# gateway: batched release sweep == scalar _release loop
+# ---------------------------------------------------------------------------
+def _weights(dims, key=0):
+    k = jax.random.PRNGKey(key)
+    out = []
+    for (K, N) in dims:
+        k, s = jax.random.split(k)
+        out.append(jax.random.normal(s, (K, N), jnp.float32) / jnp.sqrt(K))
+    return tuple(out)
+
+
+class _ScalarSweepLimiter(RateLimiter):
+    """Forces the gateway's batched sweep through the scalar loop —
+    the differential baseline for the release-path integration."""
+
+    def allow_many(self, times, indices, costs=None):
+        return np.asarray(
+            [
+                self.allow(int(i), float(t))
+                for t, i in zip(times, indices)
+            ],
+            dtype=bool,
+        )
+
+
+def test_gateway_batched_ratelimit_sweep_is_bit_identical():
+    DT = 1e-3
+
+    def run(limiter_cls):
+        tasks = [
+            ServeTask(
+                "alpha",
+                _weights([(128, 128), (128, 128)], 0),
+                stage_of_layer=(0, 1),
+                period=0.01,
+            ),
+            ServeTask(
+                "beta",
+                _weights([(128, 128), (128, 128)], 1),
+                stage_of_layer=(0, 1),
+                period=0.02,
+            ),
+        ]
+        reqs = [
+            TaskRequest("alpha", (DT, DT), period=0.01),
+            TaskRequest("beta", (DT, DT), period=0.02),
+        ]
+        clk = VirtualClock()
+        srv = PharosServer(
+            tasks, 2, policy="edf", clock=clk.now, sleep=clk.sleep
+        )
+        # tight buckets so the limiter actually refuses releases
+        limiter = limiter_cls.for_requests(reqs, rate_scale=0.5)
+        gw = TrafficGateway(
+            srv,
+            AdmissionController([0.0, 0.0]),
+            reqs,
+            [
+                PoissonArrivals(rate=250.0, seed=5),
+                PoissonArrivals(rate=120.0, seed=6),
+            ],
+            ratelimit=limiter,
+            clock=clk,
+        )
+        return gw.run(0.4, virtual_dt=DT)
+
+    rep_batched = run(RateLimiter)
+    rep_scalar = run(_ScalarSweepLimiter)
+    for a, b in zip(rep_batched.tenants, rep_scalar.tenants):
+        assert (a.released, a.degraded, a.shed, a.rate_limited) == (
+            b.released,
+            b.degraded,
+            b.shed,
+            b.rate_limited,
+        )
+        assert a.release_jitter == b.release_jitter
+    assert rep_batched.total_rate_limited() > 0
+
+
+# ---------------------------------------------------------------------------
+# sharded-report totals cache
+# ---------------------------------------------------------------------------
+def test_sharded_report_totals_cached_and_correct():
+    from repro.traffic import ShardedReport, ShardPlan
+    from repro.traffic.gateway import GatewayReport, TenantStats
+
+    def rep(shed, limited, released):
+        return GatewayReport(
+            tenants=[
+                TenantStats(
+                    name="x",
+                    admitted=True,
+                    shed=shed,
+                    rate_limited=limited,
+                    released=released,
+                )
+            ],
+            decisions=[],
+            server_report=None,
+        )
+
+    r = ShardedReport(
+        plan=ShardPlan(n_shards=3, assignment=(0, 1)),
+        reports=(rep(1, 2, 3), None, rep(4, 5, 6)),
+    )
+    assert r.total_shed() == 5
+    assert r.total_rate_limited() == 7
+    assert r.total_released() == 9
+    assert r.__dict__["_totals_cache"] == (5, 7, 9)
+    # repeated reads come from the cache (stable even if the walk
+    # would now see different numbers)
+    r.reports[0].tenants[0].shed = 100
+    assert r.total_shed() == 5
